@@ -1,0 +1,76 @@
+"""Paper Fig. 16: adaptation latency after a workload surge.
+
+FMplex rebinding attaches the task's decoder to a RESIDENT backbone on another
+server (task-state timescale); BE must cold-start a new backbone replica
+(backbone-load timescale) while the backlog inflates latency.
+"""
+from benchmarks.common import emit
+from repro.controller import (ClusterState, ElasticAdapter, MaxShare, Server,
+                              TaskSpec)
+from repro.controller.profiles import get_profile
+from repro.core.request import SLO
+from repro.serving.loadgen import burst_trace, merge, poisson_trace
+from repro.serving.metrics import latency_stats
+from repro.serving.simulator import SimGPU, SimInstance, Simulator
+
+
+def _scenario(mode: str):
+    """Task 'hot' surges 3 -> 40 RPS at t=20. A second moment-large backbone is
+    already resident on server s1 serving task 'other'."""
+    prof = get_profile("moment-large")
+    g0, g1 = SimGPU("s0"), SimGPU("s1")
+    i0 = SimInstance("fm0", prof, scheduler="bfq")
+    i1 = SimInstance("fm1", prof, scheduler="bfq")
+    g0.instances.append(i0)
+    g1.instances.append(i1)
+    sim = Simulator([g0, g1])
+    i0.bind("hot", slo=SLO(1.0))
+    i1.bind("other", slo=SLO(1.0))
+    sim.route("hot", g0, i0)
+    sim.route("other", g1, i1)
+
+    surge_t = 20.0
+    if mode == "fmplex":
+        # Controller rebind: replicate 'hot' onto the resident fm1 (moves only
+        # task-local state; ready after task_load_s)
+        def rebind(s):
+            i1.bind("hot", slo=SLO(1.0))
+            s.route("hot", g1, i1, frac=1.0)    # split 50/50 with fm0
+        sim.add_hook(surge_t + prof.task_load_s, rebind)
+        ready = prof.task_load_s
+    else:
+        # BE: provision a NEW backbone replica on s1 (cold load), then shift
+        def provision(s):
+            i2 = SimInstance("fm2", prof, scheduler="s-be")
+            i2.loading_until = 0.0              # load completed by hook time
+            g1.instances.append(i2)
+            i2.bind("hot", slo=SLO(1.0))
+            s.route("hot", g1, i2, frac=1.0)
+        sim.add_hook(surge_t + prof.load_time_s + prof.task_load_s, provision)
+        ready = prof.load_time_s + prof.task_load_s
+
+    arr = merge([burst_trace("hot", 3, 40, burst_start=surge_t, burst_len=30,
+                             horizon=60, seed=1),
+                 poisson_trace("other", 10, 60, seed=2)])
+    fin = sim.run(arr, 90.0)
+    return fin, ready
+
+
+def run_all():
+    rows = []
+    for mode in ("fmplex", "be"):
+        fin, ready = _scenario(mode)
+        hot = [r for r in fin if r.task_id == "hot" and r.finish_time]
+        during = latency_stats([r for r in hot if 20 <= r.arrival < 35])
+        after = latency_stats([r for r in hot if 40 <= r.arrival < 50])
+        rows.append((f"fig16.{mode}.ready_ms", round(ready * 1e6),
+                     round(ready * 1e3, 1)))
+        rows.append((f"fig16.{mode}.surge_mean_ms",
+                     round(during["mean_ms"] * 1e3), round(during["mean_ms"], 1)))
+        rows.append((f"fig16.{mode}.post_mean_ms",
+                     round(after["mean_ms"] * 1e3), round(after["mean_ms"], 1)))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run_all()

@@ -1,0 +1,152 @@
+"""Paper Fig. 14/15: 16-server cluster with Azure-like load bands.
+
+FMplex = Controller Max-Share placement (shared backbones, BFQ) vs BE
+(replica-per-task, best-effort). Metrics: end-to-end latency on an 85-task
+workload and max tasks hosted per load band.
+"""
+import numpy as np
+
+from benchmarks.common import emit
+from repro.controller import ClusterState, MaxShare, Server, TaskSpec
+from repro.controller.profiles import get_profile
+from repro.serving.loadgen import LOAD_BANDS, merge, poisson_trace
+from repro.serving.metrics import latency_stats
+from repro.serving.simulator import SimGPU, SimInstance, Simulator
+
+N_SERVERS = 16
+# density mix (Fig 15): TS/vision tasks + heavyweight LLM/VLM backbones,
+# where memory pressure exposes the sharing advantage
+BACKBONES = ("moment-large", "moment-large", "moment-large", "dinov2-base",
+             "swin-large", "papagei", "qwen2.5-3b", "mistral-7b")
+# latency mix (Fig 14): the paper's 85-task workload is dominated by small
+# TS/vision backbones (Table 2) so that BOTH systems can host it
+LATENCY_MIX = ("moment-large", "papagei", "papagei", "dinov2-base",
+               "swin-large", "moment-large", "dinov2-base", "qwen2-vl-2b")
+
+
+def _task_specs(n_tasks, band, seed=0, mix=BACKBONES):
+    rng = np.random.RandomState(seed)
+    lo, hi = LOAD_BANDS[band]
+    specs = []
+    for i in range(n_tasks):
+        backbone = mix[i % len(mix)]
+        rpm = float(np.exp(rng.uniform(np.log(lo), np.log(hi))))
+        rps = rpm / 60.0
+        if backbone in ("qwen2.5-3b", "mistral-7b", "qwen2-vl-2b"):
+            rps = min(rps, 0.5)         # token-based tasks are low-rate
+        prof = get_profile(backbone)
+        specs.append(TaskSpec(f"task{i}", backbone, demand_rps=rps,
+                              slo_s=10 * prof.l(1)))  # SLO bounds batch growth
+    return specs
+
+
+def _traffic(placed, horizon, seed=0):
+    """Poisson traffic at each task's PLACED rate with hot/cold modulation
+    (x1.5 / x0.7) so bursts exercise BFQ without invalidating placement."""
+    rng = np.random.RandomState(seed)
+    traces = []
+    for t in placed:
+        reqs, tt, hot = [], 0.0, rng.rand() < 0.3
+        while tt < horizon:
+            period = float(rng.exponential(15.0))
+            rate = t.demand_rps * (1.5 if hot else 0.7)
+            reqs += poisson_trace(t.task_id, max(rate, 1e-3),
+                                  min(period, horizon - tt),
+                                  seed=rng.randint(1 << 30), start=tt)
+            tt += period
+            hot = not hot
+        traces.append(reqs)
+    return merge(traces)
+
+
+def build_fmplex_cluster(specs):
+    profiles = {b: get_profile(b) for b in set(BACKBONES) | set(LATENCY_MIX)}
+    cluster = ClusterState([Server(f"s{i}") for i in range(N_SERVERS)], profiles)
+    ms = MaxShare(cluster)
+    placed = [t for t in specs if ms.place(t)]
+    # materialize into the simulator
+    gpus = {s: SimGPU(s, sharing="partition") for s in cluster.servers}
+    insts = {}
+    for dep in cluster.deployments.values():
+        inst = SimInstance(dep.dep_id, dep.profile, scheduler="bfq")
+        insts[dep.dep_id] = inst
+        gpus[dep.server_id].instances.append(inst)
+    sim = Simulator(list(gpus.values()))
+    from repro.core.request import SLO
+    for t in placed:
+        for dep_id in cluster.task_bindings[t.task_id]:
+            dep = cluster.deployments[dep_id]
+            inst = insts[dep_id]
+            inst.bind(t.task_id, weight=t.weight, slo=SLO(t.slo_s))
+            sim.route(t.task_id, gpus[dep.server_id], inst,
+                      frac=dep.routing[t.task_id])
+    return sim, placed
+
+
+def _be_per_req(prof, rps):
+    """Per-request GPU seconds for a lone replica: it can only batch its OWN
+    queue, so expected batch depth follows its arrival rate."""
+    b = max(1, min(prof.b_max, int(rps * prof.l(prof.b_max))))
+    return prof.l(b) / b
+
+
+def build_be_cluster(specs):
+    """Replica-per-task, first-fit by memory + compute, best-effort sharing."""
+    gpus = [SimGPU(f"s{i}", sharing="ps") for i in range(N_SERVERS)]
+    util = {g.gpu_id: 0.0 for g in gpus}
+    sim = Simulator(gpus)
+    placed = []
+    for t in specs:
+        prof = get_profile(t.backbone)
+        need_mem = (prof.memory_bytes + prof.instance_overhead_bytes
+                    + prof.task_memory_bytes)
+        need_util = t.demand_rps * _be_per_req(prof, t.demand_rps)
+        target = next((g for g in gpus if g.fits(need_mem)
+                       and util[g.gpu_id] + need_util <= 0.8), None)
+        if target is None:
+            continue
+        inst = SimInstance(f"{t.backbone}/{t.task_id}", prof, scheduler="s-be")
+        target.instances.append(inst)
+        util[target.gpu_id] += need_util
+        inst.bind(t.task_id, weight=t.weight)
+        sim.route(t.task_id, target, inst)
+        placed.append(t)
+    return sim, placed
+
+
+def density(band, builder):
+    specs = _task_specs(2000, band, seed=1)
+    _, placed = builder(specs)
+    return len(placed)
+
+
+def run_all():
+    rows = []
+    # ---- Fig. 15: task density per band ----
+    for band in ("low", "moderate", "high"):
+        n_fm = density(band, build_fmplex_cluster)
+        n_be = density(band, build_be_cluster)
+        rows.append((f"fig15.fmplex.{band}.tasks", n_fm * 1000, n_fm))
+        rows.append((f"fig15.be.{band}.tasks", n_be * 1000, n_be))
+        rows.append((f"fig15.ratio.{band}", round(1e3 * n_fm / max(n_be, 1)),
+                     round(n_fm / max(n_be, 1), 2)))
+    # ---- Fig. 14: latency on an 85-task workload ----
+    specs = _task_specs(85, "moderate", seed=2, mix=LATENCY_MIX)
+    horizon = 60.0
+    for mode, builder in (("fmplex", build_fmplex_cluster),
+                          ("be", build_be_cluster)):
+        sim, placed = builder(specs)
+        arr = _traffic(placed, horizon, seed=3)
+        fin = sim.run(arr, horizon + 60)
+        done = [r for r in fin if r.finish_time]
+        s = latency_stats(done)
+        rows.append((f"fig14.{mode}.mean_ms", round(s["mean_ms"] * 1e3),
+                     round(s["mean_ms"], 1)))
+        rows.append((f"fig14.{mode}.p99_ms", round(s["p99_ms"] * 1e3),
+                     round(s["p99_ms"], 1)))
+        rows.append((f"fig14.{mode}.placed", len(placed) * 1000, len(placed)))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run_all()

@@ -1,0 +1,22 @@
+"""Paper §7.2.3 / Fig. 11: throughput cost of per-task LoRA customization.
+FMplex batches the shared backbone pass and loops adapter sub-batches."""
+from benchmarks.common import emit, run_mode
+
+
+def run_all():
+    rows = []
+    for n in (2, 4, 6, 8, 10):
+        for mode, adapters, tag in (("fmplex", True, "fmplex_lora"),
+                                    ("fmplex", False, "fmplex_nolora"),
+                                    ("be", False, "be")):
+            fin, ok, _ = run_mode(mode, n, rps_per_task=10, horizon=20.0,
+                                  adapters=adapters)
+            thr = (sum(1 for r in fin if r.finish_time and r.finish_time <= 20)
+                   / 20.0) if ok else 0.0
+            rows.append((f"fig11.{tag}.n{n}_rps", round(thr * 1e3),
+                         round(thr, 1)))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run_all()

@@ -1,0 +1,30 @@
+"""Paper Fig. 12: task-level fairness + aggregate throughput under configured
+service weights 1:1 / 2:1 / 3:1 at 60 RPS per client."""
+from benchmarks.common import emit, run_mode
+from repro.serving.metrics import jain_fairness
+
+MODES = ("fmplex", "s-stfq", "s-be", "be", "sp")
+
+
+def run_all():
+    rows = []
+    for wa, wb in ((1, 1), (2, 1), (3, 1)):
+        for mode in MODES:
+            fin, ok, _ = run_mode(mode, 2, rps_per_task=60, horizon=20.0,
+                                  weights=[wa, wb], drain=60.0)
+            if not ok:
+                continue
+            done = [r for r in fin if r.finish_time and r.finish_time <= 20]
+            shares = {t: sum(1 for r in done if r.task_id == t)
+                      for t in ("t0", "t1")}
+            f = jain_fairness(shares, {"t0": wa, "t1": wb})
+            thr = sum(shares.values()) / 20.0
+            rows.append((f"fig12.{mode}.w{wa}:{wb}.fairness",
+                         round(f * 1e6), round(f, 3)))
+            rows.append((f"fig12.{mode}.w{wa}:{wb}.throughput_rps",
+                         round(thr * 1e3), round(thr, 1)))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run_all()

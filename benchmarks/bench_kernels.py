@@ -1,0 +1,72 @@
+"""Kernel benchmarks: XLA-path wall time on CPU (what this container can
+measure) + analytic TPU-v5e roofline floor per kernel (what the BlockSpec
+tiling targets). Pallas correctness is covered by tests/test_kernels.py."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ref
+
+PEAK = 197e12
+HBM = 819e9
+
+
+def timeit(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n
+
+
+def run_all():
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+
+    # flash attention prefill tile
+    B, H, KV, S, hd = 1, 8, 2, 1024, 128
+    q = jax.random.normal(ks[0], (B, H, S, hd), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), jnp.bfloat16)
+    f = jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c, causal=True))
+    us = timeit(f, q, k, v) * 1e6
+    flops = 4 * B * H * S * S * hd
+    tpu_us = flops / PEAK * 1e6
+    rows.append(("kernel.flash_attention.1k", round(us, 1),
+                 f"tpu_roofline_us={tpu_us:.1f}"))
+
+    # decode attention (bandwidth bound)
+    B, H, KV, S, hd = 8, 32, 8, 4096, 128
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.bfloat16)
+    kc = jax.random.normal(ks[1], (B, KV, S, hd), jnp.bfloat16)
+    vc = jax.random.normal(ks[2], (B, KV, S, hd), jnp.bfloat16)
+    lens = jnp.full((B,), S, jnp.int32)
+    f = jax.jit(lambda a, b, c, l: ref.decode_attention_ref(a, b, c, l))
+    us = timeit(f, q, kc, vc, lens) * 1e6
+    bytes_moved = 2 * B * KV * S * hd * 2
+    tpu_us = bytes_moved / HBM * 1e6
+    rows.append(("kernel.decode_attention.4k", round(us, 1),
+                 f"tpu_roofline_us={tpu_us:.1f}"))
+
+    # segmented lora
+    T, d, r, NA, bt = 512, 2048, 16, 16, 64
+    x = jax.random.normal(ks[0], (T, d), jnp.bfloat16)
+    a = jax.random.normal(ks[1], (NA, d, r), jnp.bfloat16) * 0.05
+    b = jax.random.normal(ks[2], (NA, r, d), jnp.bfloat16) * 0.05
+    blocks = jnp.asarray(np.random.RandomState(0).randint(0, NA, T // bt),
+                         jnp.int32)
+    f = jax.jit(lambda *aa: ref.segmented_lora_ref(*aa, block_size=bt))
+    us = timeit(f, x, blocks, a, b) * 1e6
+    flops = 2 * T * d * r * 2
+    tpu_us = max(flops / PEAK, (T * d * 2 * 2 + NA * 2 * d * r * 2) / HBM) * 1e6
+    rows.append(("kernel.segmented_lora.512x2048", round(us, 1),
+                 f"tpu_roofline_us={tpu_us:.1f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run_all()

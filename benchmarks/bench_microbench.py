@@ -1,0 +1,58 @@
+"""Paper Table 3: backbone vs task-component memory / load time / latency —
+REAL measurements on the CPU-scale execution plane (reduced configs; the
+asymmetry, not the absolute values, is the reproduced claim)."""
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config, reduced
+from repro.core.physical import PhysicalFM
+
+
+def run_all():
+    rows = []
+    for arch in ("moment-large", "qwen2-7b", "whisper-base"):
+        cfg = reduced(get_config(arch))
+        fm = PhysicalFM(cfg, input_len=16, lora_rank=4)
+        prof = fm.calibrate(sizes=(1, 2, 4))
+        bb_mem = prof.memory_bytes
+        # task component: one LoRA adapter + a linear head
+        t0 = time.perf_counter()
+        tree = fm.adapters.new("t_adapter", seed=1)
+        import jax
+        task_mem = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+        task_mem += cfg.d_model * 4 * 4   # linear head
+        task_load = time.perf_counter() - t0
+        x = np.random.RandomState(0).randn(1, 16, cfg.d_model).astype(np.float32)
+        # backbone latency (warm)
+        fm.run_batch(x, np.array([0], np.int32))
+        t0 = time.perf_counter()
+        feats = fm.run_batch(x, np.array([0], np.int32))
+        bb_lat = time.perf_counter() - t0
+        w = np.random.RandomState(1).randn(cfg.d_model, 4).astype(np.float32)
+        t0 = time.perf_counter()
+        _ = feats @ w
+        task_lat = time.perf_counter() - t0
+        rows += [
+            (f"table3.{arch}.bb_memory_MB", round(bb_mem / 1e6 * 1e3),
+             round(bb_mem / 1e6, 2)),
+            (f"table3.{arch}.task_memory_MB", round(task_mem / 1e6 * 1e3),
+             round(task_mem / 1e6, 4)),
+            (f"table3.{arch}.bb_load_ms", round(fm.load_time_s * 1e6),
+             round(fm.load_time_s * 1e3, 1)),
+            (f"table3.{arch}.task_load_ms", round(task_load * 1e6),
+             round(task_load * 1e3, 2)),
+            (f"table3.{arch}.bb_latency_ms", round(bb_lat * 1e6),
+             round(bb_lat * 1e3, 2)),
+            (f"table3.{arch}.task_latency_ms", round(task_lat * 1e6),
+             round(task_lat * 1e3, 4)),
+            (f"table3.{arch}.bb_over_task_memory_x",
+             round(bb_mem / max(task_mem, 1) * 1e3),
+             round(bb_mem / max(task_mem, 1), 1)),
+        ]
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run_all()

@@ -1,0 +1,37 @@
+"""Paper Fig. 17: FMplex scheduling overhead per request — wall time of the
+REAL BFQ code path (arrival tagging + batch formation + completion
+bookkeeping), which must stay well under the backbone forward pass."""
+import time
+
+from benchmarks.common import emit
+from repro.controller.profiles import PAPER_PROFILES
+from repro.core.bfq import BFQ
+from repro.core.request import Request
+from repro.core.vfm import VFM
+
+
+def run_all():
+    rows = []
+    for name, prof in PAPER_PROFILES.items():
+        sched = BFQ(prof)
+        vfms = {f"t{i}": VFM(f"t{i}", weight=1.0 + i % 3) for i in range(8)}
+        n = 3000
+        t0 = time.perf_counter()
+        made = 0
+        for i in range(n):
+            tid = f"t{i % 8}"
+            sched.on_arrival(vfms[tid], Request(tid, i * 1e-4), i * 1e-4)
+            if i % prof.b_max == prof.b_max - 1:
+                b = sched.next_batch(vfms, i * 1e-4)
+                if b:
+                    sched.on_complete(b, vfms, i * 1e-4 + prof.l(b.size))
+                    made += 1
+        dt = time.perf_counter() - t0
+        per_req_us = dt / n * 1e6
+        rows.append((f"fig17.{name}.sched_overhead", round(per_req_us, 1),
+                     f"{per_req_us/ (prof.l(1)*1e6) * 100:.3f}%_of_l1"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run_all()

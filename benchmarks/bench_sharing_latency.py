@@ -1,0 +1,51 @@
+"""Paper Fig. 7 (+ Fig. 8 modality generalization): two tasks sharing one
+backbone — mean/p99 latency across deployment modes and request rates."""
+from benchmarks.common import emit, run_mode
+from repro.serving.metrics import latency_stats
+
+MODES = ("st", "be", "sp", "fmplex")
+RATES = (1, 5, 10, 20)
+
+
+def run(profile="moment-large", label="fig7"):
+    rows = []
+    for rps in RATES:
+        for mode in MODES:
+            fin, ok, _ = run_mode(mode, 2, rps, horizon=20.0,
+                                  profile_name=profile)
+            if not ok:
+                rows.append((f"{label}.{mode}.rps{rps}.mean", "OOM", 0))
+                continue
+            s = latency_stats(fin)
+            rows.append((f"{label}.{mode}.rps{rps}.mean_ms",
+                         round(s["mean_ms"] * 1e3), round(s["mean_ms"], 2)))
+            rows.append((f"{label}.{mode}.rps{rps}.p99_ms",
+                         round(s["p99_ms"] * 1e3), round(s["p99_ms"], 2)))
+    return emit(rows)
+
+
+def run_all():
+    rows = run("moment-large", "fig7.moment-large")
+    rows += run("dinov2-base", "fig8a.dinov2-base")
+    rows += run("swin-large", "fig8b.swin-large")
+    # headline claims (paper: up to 80% vs SP, 33.3% vs BE at high load)
+    import collections
+    by = collections.defaultdict(dict)
+    for name, us, derived in rows:
+        parts = name.split(".")          # label.prof, mode, rpsN, metric
+        by[(parts[0] + "." + parts[1], parts[3], parts[4])][parts[2]] = derived
+    best_sp, best_be = 0.0, 0.0
+    for (prof, rps, metric), d in sorted(by.items()):
+        if metric != "mean_ms" or "sp" not in d or "fmplex" not in d:
+            continue
+        red_sp = 100 * (1 - d["fmplex"] / d["sp"])
+        red_be = 100 * (1 - d["fmplex"] / d["be"]) if "be" in d else 0
+        best_sp, best_be = max(best_sp, red_sp), max(best_be, red_be)
+        print(f"{prof}.{rps}.reduction_vs_sp_pct,{red_sp:.1f},vs_be={red_be:.1f}")
+    print(f"fig7_8.headline.max_reduction_vs_sp_pct,{best_sp:.1f},"
+          f"paper=80; vs_be={best_be:.1f} paper=33.3")
+    return rows
+
+
+if __name__ == "__main__":
+    run_all()

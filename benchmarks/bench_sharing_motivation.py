@@ -1,0 +1,31 @@
+"""Paper Fig. 1: memory demand and aggregate throughput vs #tasks,
+shared backbone vs independent deployment."""
+from benchmarks.common import emit, run_mode
+from repro.controller.profiles import get_profile
+
+
+def run_all():
+    prof = get_profile("moment-large")
+    rows = []
+    for n in (1, 5, 10):
+        shared = (prof.memory_bytes + prof.instance_overhead_bytes
+                  + n * prof.task_memory_bytes) / 1e9
+        replicated = n * (prof.memory_bytes + prof.instance_overhead_bytes
+                          + prof.task_memory_bytes) / 1e9
+        rows.append((f"fig1.memory.shared.n{n}_GB", round(shared * 1e3),
+                     round(shared, 2)))
+        rows.append((f"fig1.memory.replicated.n{n}_GB", round(replicated * 1e3),
+                     round(replicated, 2)))
+        for mode in ("fmplex", "be"):
+            fin, ok, _ = run_mode(mode, n, rps_per_task=12, horizon=20.0)
+            thr = (sum(1 for r in fin if r.finish_time) / 20.0) if ok else 0.0
+            rows.append((f"fig1.throughput.{mode}.n{n}_rps",
+                         round(thr * 1e3), round(thr, 1)))
+    n = 10
+    ratio = rows[4][2] / rows[1][2] if rows[1][2] else 0
+    print(f"fig1.memory.n10_shared_over_single,{ratio:.2f},paper=1.17x")
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run_all()

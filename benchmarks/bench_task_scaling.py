@@ -1,0 +1,28 @@
+"""Paper Fig. 9/10: mean latency vs number of co-located tasks N."""
+from benchmarks.common import emit, run_mode
+from repro.serving.metrics import latency_stats
+
+
+def run_all():
+    rows = []
+    for profile, rates, label in (("moment-large", (5, 7), "fig9"),
+                                  ("dinov2-base", (5,), "fig10a"),
+                                  ("swin-large", (5,), "fig10b")):
+        for rps in rates:
+            for n in (2, 4, 6, 8, 10):
+                for mode in ("fmplex", "be", "sp"):
+                    fin, ok, _ = run_mode(mode, n, rps, horizon=15.0,
+                                          profile_name=profile)
+                    if not ok:
+                        rows.append((f"{label}.{mode}.rps{rps}.n{n}.mean_ms",
+                                     "OOM", 0))
+                        continue
+                    s = latency_stats(fin)
+                    rows.append((f"{label}.{mode}.rps{rps}.n{n}.mean_ms",
+                                 round(s["mean_ms"] * 1e3),
+                                 round(s["mean_ms"], 1)))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run_all()

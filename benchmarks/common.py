@@ -1,0 +1,33 @@
+"""Shared helpers for the per-figure benchmarks."""
+from __future__ import annotations
+
+from repro.controller.profiles import get_profile
+from repro.serving.loadgen import merge, poisson_trace
+from repro.serving.metrics import jain_fairness, latency_stats
+from repro.serving.simulator import build_single_gpu
+
+
+def run_mode(mode: str, n_tasks: int, rps_per_task: float, horizon: float,
+             profile_name: str = "moment-large", weights=None, seed: int = 0,
+             adapters: bool = False, drain: float = 40.0):
+    """One single-GPU scenario -> (finished requests, ok, tasks)."""
+    prof = get_profile(profile_name)
+    tasks = []
+    for i in range(n_tasks):
+        t = {"task_id": f"t{i}", "weight": (weights[i] if weights else 1.0)}
+        if adapters:
+            t["adapter_id"] = f"lora{i}"
+        tasks.append(t)
+    sim, ok = build_single_gpu(mode, tasks, prof)
+    if not ok:
+        return None, False, tasks
+    arr = merge([poisson_trace(f"t{i}", rps_per_task, horizon, seed=seed + i)
+                 for i in range(n_tasks)])
+    fin = sim.run(arr, horizon + drain)
+    return fin, True, tasks
+
+
+def emit(rows: list[tuple]):
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+    return rows

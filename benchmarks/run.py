@@ -1,0 +1,56 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Figure -> module mapping lives in
+DESIGN.md §6; §Paper-claims in EXPERIMENTS.md reads this output.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig12,fig13]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = [
+    ("fig1", "benchmarks.bench_sharing_motivation"),
+    ("fig7_8", "benchmarks.bench_sharing_latency"),
+    ("fig9_10", "benchmarks.bench_task_scaling"),
+    ("fig11", "benchmarks.bench_customization"),
+    ("fig12", "benchmarks.bench_fairness"),
+    ("fig13", "benchmarks.bench_noisy_neighbor"),
+    ("fig14_15", "benchmarks.bench_cluster"),
+    ("fig16", "benchmarks.bench_adaptation"),
+    ("fig17", "benchmarks.bench_overhead"),
+    ("table3", "benchmarks.bench_microbench"),
+    ("kernels", "benchmarks.bench_kernels"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite keys (e.g. fig12,kernels)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+    failures = []
+    for key, module in SUITES:
+        if only and key not in only:
+            continue
+        print(f"# ==== {key} ({module}) ====", flush=True)
+        t0 = time.time()
+        try:
+            importlib.import_module(module).run_all()
+            print(f"# {key} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # keep the suite running; report at the end
+            failures.append((key, repr(e)))
+            print(f"# {key} FAILED: {e!r}", flush=True)
+    if failures:
+        print(f"# {len(failures)} suite(s) failed: {failures}")
+        sys.exit(1)
+    print("# all benchmark suites completed")
+
+
+if __name__ == "__main__":
+    main()

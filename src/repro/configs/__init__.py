@@ -1,0 +1,26 @@
+"""Config registry: importing this package registers every architecture."""
+from repro.configs.base import ModelConfig, get_config, list_configs, reduced, register
+from repro.configs import (  # noqa: F401  (registration side effects)
+    xlstm_125m,
+    whisper_base,
+    h2o_danube_1_8b,
+    minitron_8b,
+    qwen2_7b,
+    stablelm_1_6b,
+    qwen2_vl_72b,
+    olmoe_1b_7b,
+    grok_1_314b,
+    jamba_v0_1_52b,
+    moment_large,
+)
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable, grid
+
+ASSIGNED = [
+    "xlstm-125m", "whisper-base", "h2o-danube-1.8b", "minitron-8b", "qwen2-7b",
+    "stablelm-1.6b", "qwen2-vl-72b", "olmoe-1b-7b", "grok-1-314b", "jamba-v0.1-52b",
+]
+
+__all__ = [
+    "ModelConfig", "get_config", "list_configs", "reduced", "register",
+    "SHAPES", "ShapeSpec", "applicable", "grid", "ASSIGNED",
+]

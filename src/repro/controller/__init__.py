@@ -1,0 +1,4 @@
+from repro.controller.adaptation import AdaptResult, ElasticAdapter
+from repro.controller.maxshare import MaxShare, Plan
+from repro.controller.profiles import PAPER_PROFILES, get_profile
+from repro.controller.state import ClusterState, Deployment, Server, TaskSpec

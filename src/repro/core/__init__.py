@@ -1,0 +1,5 @@
+from repro.core.bfq import BFQ, FIFOBatch, SCHEDULERS, STFQ
+from repro.core.profile import FMProfile, profile_backbone
+from repro.core.request import SLO, Batch, Request
+from repro.core.server import FMplexServer
+from repro.core.vfm import VFM, TaskExtensions

@@ -1,0 +1,190 @@
+"""Batch-aware Fair Queueing (BFQ) — paper §4.2 — plus scheduler baselines.
+
+BFQ extends start-time fair queueing (STFQ) from per-request ordering to batch
+formation:
+
+  arrival:    S_i^j = max(F_i^{j-1}, v),  F_i^j = S_i^j + l / w_i        (1, 2)
+  v         = max_i F_i^last over each task's most recently dispatched request
+  formation:  take requests in start-tag order; stop at B_max (profiled
+              throughput knee) or when admitting one more would push ANY
+              selected request past its SLO deadline.
+  adapters:   requests sharing the backbone co-batch; adapter-incompatible
+              requests execute as sequential compatible sub-batches (Fig. 5c).
+  correction: after a batch of size b executes, retro-correct tags of the
+              dispatched requests and every queued request of participating
+              tasks with the batch-dependent service time
+              F_i^j = S_i^j + l_i(b) / w_i                                (3)
+
+All schedulers are event-driven and time-source-agnostic: the same code runs
+under the discrete-event simulator and the real-execution server.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Optional
+
+from repro.core.profile import FMProfile
+from repro.core.request import Batch, Request
+from repro.core.vfm import VFM
+
+
+def group_sub_batches(requests: list[Request], vfms: dict[str, VFM]):
+    """Adapter-compatibility grouping: one backbone co-batch, sequential
+    adapter sub-batches; base-model requests (no adapter) need no sub-batch."""
+    by_adapter: dict[Optional[str], list[Request]] = collections.defaultdict(list)
+    for r in requests:
+        aid = vfms[r.task_id].extensions.adapter_id
+        by_adapter[aid].append(r)
+    return [(aid, rs) for aid, rs in by_adapter.items()]
+
+
+class SchedulerBase:
+    name = "base"
+
+    def __init__(self, profile: FMProfile):
+        self.profile = profile
+
+    def on_arrival(self, vfm: VFM, req: Request, now: float):
+        vfm.enqueue(req)
+
+    def next_batch(self, vfms: dict[str, VFM], now: float) -> Optional[Batch]:
+        raise NotImplementedError
+
+    def exec_time(self, batch: Batch) -> float:
+        sizes = [len(rs) for aid, rs in batch.sub_batches if aid is not None]
+        return self.profile.exec_time(batch.size, sizes)
+
+    def on_complete(self, batch: Batch, vfms: dict[str, VFM], now: float):
+        pass
+
+    @staticmethod
+    def _pop(vfms, selected):
+        for r in selected:
+            vfms[r.task_id].queue.remove(r)
+
+
+class BFQ(SchedulerBase):
+    """Batch-aware fair queueing (work-conserving, weighted)."""
+    name = "bfq"
+
+    def __init__(self, profile: FMProfile):
+        super().__init__(profile)
+        self.v = 0.0                          # global virtual tag
+        self._tail: dict[str, float] = {}     # F of task's last ENQUEUED request
+        self._last_dispatched: dict[str, float] = {}  # F of last DISPATCHED
+
+    def on_arrival(self, vfm: VFM, req: Request, now: float):
+        """Eqs. 1-2. Token-based FMs (paper §4.2): the expected service time
+        scales with the request's token count, so heavier requests advance the
+        task's finish tags proportionally — same accounting principle across
+        request-level and token-level runtimes, no separate token policy."""
+        prev_f = self._tail.get(vfm.task_id, 0.0)
+        req.v_at_arrival = self.v
+        req.start_tag = max(prev_f, self.v)
+        l1 = self.profile.l(1) * max(req.tokens, 1e-9)
+        req.finish_tag = req.start_tag + l1 / vfm.weight
+        self._tail[vfm.task_id] = req.finish_tag
+        vfm.enqueue(req)
+
+    def next_batch(self, vfms: dict[str, VFM], now: float) -> Optional[Batch]:
+        queued = [r for v in vfms.values() for r in v.queue]
+        if not queued:
+            return None
+        queued.sort(key=lambda r: (r.start_tag, r.rid))
+        selected: list[Request] = []
+        for r in queued:
+            if len(selected) >= self.profile.b_max:
+                break
+            cand = selected + [r]
+            sizes = collections.Counter(
+                vfms[c.task_id].extensions.adapter_id for c in cand)
+            a_sizes = [n for aid, n in sizes.items() if aid is not None]
+            done = now + self.profile.exec_time(len(cand), a_sizes)
+            # stop extending if it would push a STILL-SATISFIABLE request past
+            # its deadline (already-expired requests are served best-effort —
+            # they cannot be "pushed past" anything)
+            if selected and any(
+                    done > c.deadline() >= now + self.profile.l(1)
+                    for c in cand):
+                break
+            selected.append(r)
+        self._pop(vfms, selected)
+        batch = Batch(selected, group_sub_batches(selected, vfms))
+        # dispatch bookkeeping: v = max_i F_i^last over dispatched requests
+        for r in selected:
+            self._last_dispatched[r.task_id] = max(
+                self._last_dispatched.get(r.task_id, 0.0), r.finish_tag)
+            r.dispatch_time = now
+        self.v = max([self.v] + list(self._last_dispatched.values()))
+        return batch
+
+    def on_complete(self, batch: Batch, vfms: dict[str, VFM], now: float):
+        """Eq. 3 retro-correction with the realized batch size."""
+        b = batch.size
+        lb = self.profile.effective_per_request(b)
+        per_task = collections.Counter(r.task_id for r in batch.requests)
+        for tid in per_task:
+            vfm = vfms[tid]
+            # correct the dispatched requests' finish tags
+            f_last = self._last_dispatched.get(tid, 0.0)
+            for r in batch.requests:
+                if r.task_id != tid:
+                    continue
+                r.finish_tag = r.start_tag + lb * max(r.tokens, 1e-9) / vfm.weight
+                f_last = max(f_last, r.finish_tag)
+            self._last_dispatched[tid] = f_last
+            # re-chain the queued requests of this task (Eq. 3)
+            prev = f_last
+            for r in vfm.queue:
+                r.start_tag = max(prev, r.v_at_arrival)
+                r.finish_tag = r.start_tag + lb * max(r.tokens, 1e-9) / vfm.weight
+                prev = r.finish_tag
+            self._tail[tid] = prev if vfm.queue else f_last
+        self.v = max([self.v] + list(self._last_dispatched.values()))
+
+
+class STFQ(SchedulerBase):
+    """Classical start-time fair queueing (S-STFQ baseline): fair tags, but
+    per-request service — batching disabled."""
+    name = "stfq"
+
+    def __init__(self, profile: FMProfile):
+        super().__init__(profile)
+        self.v = 0.0
+        self._tail: dict[str, float] = {}
+
+    def on_arrival(self, vfm: VFM, req: Request, now: float):
+        prev_f = self._tail.get(vfm.task_id, 0.0)
+        req.start_tag = max(prev_f, self.v)
+        req.finish_tag = req.start_tag + self.profile.l(1) / vfm.weight
+        self._tail[vfm.task_id] = req.finish_tag
+        vfm.enqueue(req)
+
+    def next_batch(self, vfms, now):
+        queued = [r for v in vfms.values() for r in v.queue]
+        if not queued:
+            return None
+        r = min(queued, key=lambda r: (r.start_tag, r.rid))
+        self._pop(vfms, [r])
+        r.dispatch_time = now
+        self.v = max(self.v, r.start_tag)
+        return Batch([r], group_sub_batches([r], vfms))
+
+
+class FIFOBatch(SchedulerBase):
+    """S-BE baseline: arrival-order batching up to B_max, no fairness."""
+    name = "s-be"
+
+    def next_batch(self, vfms, now):
+        queued = [r for v in vfms.values() for r in v.queue]
+        if not queued:
+            return None
+        queued.sort(key=lambda r: (r.arrival, r.rid))
+        selected = queued[: self.profile.b_max]
+        self._pop(vfms, selected)
+        for r in selected:
+            r.dispatch_time = now
+        return Batch(selected, group_sub_batches(selected, vfms))
+
+
+SCHEDULERS = {"bfq": BFQ, "stfq": STFQ, "s-be": FIFOBatch}

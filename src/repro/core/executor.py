@@ -1,0 +1,46 @@
+"""Batch executor: runs a BFQ-formed batch against a physical FM (real plane).
+
+Request path (paper Fig. 4 steps 4–7): the scheduler's co-batch executes ONE
+shared backbone pass; per-task LoRA deltas are applied grouped by adapter
+(compatible sub-batches — rows are adapter-sorted so the segmented-LoRA
+kernel sees single-adapter blocks); finally each request's task decoder head
+produces the output.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.physical import PhysicalFM
+from repro.core.request import Batch
+from repro.core.vfm import VFM
+
+
+class Executor:
+    def __init__(self, fm: PhysicalFM):
+        self.fm = fm
+
+    def execute(self, batch: Batch, vfms: dict[str, VFM]) -> dict[int, object]:
+        """Returns {request id: task output}. Measures wall time on the batch."""
+        t0 = time.perf_counter()
+        # adapter-sorted layout: concatenate sub-batches (one adapter each)
+        order, embeds, aidx = [], [], []
+        for adapter_id, reqs in batch.sub_batches:
+            ai = self.fm.adapters.index(adapter_id)
+            for r in reqs:
+                order.append(r)
+                x = r.payload
+                if x is None:
+                    x = np.zeros((self.fm.input_len, self.fm.cfg.d_model),
+                                 np.float32)
+                embeds.append(x)
+                aidx.append(ai)
+        feats = self.fm.run_batch(np.stack(embeds), np.asarray(aidx, np.int32))
+        out = {}
+        for i, r in enumerate(order):
+            head = self.fm.heads.get(r.task_id)
+            y = head(feats[i]) if head is not None else feats[i]
+            out[r.rid] = y
+        self.last_exec_s = time.perf_counter() - t0
+        return out

@@ -1,0 +1,154 @@
+"""Physical FM: a loaded backbone + adapter/head stores + bucketed jit cache.
+
+The real-execution plane (CPU-scale configs). A PhysicalFM owns:
+  * backbone params (pure pytree) for one ``ModelConfig``;
+  * an adapter store — LoRA A/B stacks keyed by adapter id, padded to a
+    common rank so they batch into the segmented-LoRA kernel;
+  * a decoder-head store — per-task heads applied after the shared pass;
+  * a bucket cache of jitted executables (one per batch bucket) so TPU-style
+    static shapes never recompile in steady state.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.profile import FMProfile, profile_backbone
+from repro.models import lm
+
+BUCKETS = (1, 2, 4, 8, 16, 32)
+
+
+def bucket_for(n: int) -> int:
+    for b in BUCKETS:
+        if n <= b:
+            return b
+    return BUCKETS[-1]
+
+
+class AdapterStore:
+    """Backbone LoRA adapters of one physical FM, stacked for co-batching.
+
+    Each entry is a full per-layer LoRA pytree (``models.lora`` layout, NA=1);
+    ``stacked()`` concatenates them into one NA=n stack consumed by
+    ``lm.forward(lora=..., adapter_idx=...)``.
+    """
+
+    def __init__(self, cfg, rank: int = 16):
+        from repro.models import lora as lora_mod
+        self.cfg = cfg
+        self.rank = rank
+        self._mod = lora_mod
+        self.ids: list[str] = []
+        self._trees: list = []
+        self._stacked = None
+
+    def add(self, adapter_id: str, tree):
+        self.ids.append(adapter_id)
+        self._trees.append(tree)
+        self._stacked = None
+
+    def new(self, adapter_id: str, seed: int = 0):
+        tree = self._mod.init_single_adapter(
+            jax.random.PRNGKey(seed), self.cfg, self.rank)
+        self.add(adapter_id, tree)
+        return tree
+
+    def remove(self, adapter_id: str):
+        i = self.ids.index(adapter_id)
+        del self.ids[i], self._trees[i]
+        self._stacked = None
+
+    def index(self, adapter_id: Optional[str]) -> int:
+        """Sentinel == len(ids) means 'no adapter' (base model)."""
+        return self.ids.index(adapter_id) if adapter_id in self.ids else len(self.ids)
+
+    def stacked(self):
+        if self._stacked is None:
+            trees = self._trees or [self._mod.init_single_adapter(
+                jax.random.PRNGKey(0), self.cfg, self.rank)]
+            self._stacked = self._mod.stack_adapters(trees) if len(trees) > 1 \
+                else trees[0]
+        return self._stacked
+
+
+class PhysicalFM:
+    """One deployed backbone instance."""
+
+    def __init__(self, cfg: ModelConfig, *, seed: int = 0, lora_rank: int = 16,
+                 input_len: int = 32):
+        self.cfg = cfg
+        self.input_len = input_len
+        t0 = time.perf_counter()
+        self.params = lm.init_model(jax.random.PRNGKey(seed), cfg)
+        self.adapters = AdapterStore(cfg, lora_rank)
+        self.heads: dict[str, Callable] = {}        # task_id -> head fn
+        self._jit_cache: dict[int, Callable] = {}
+        self.load_time_s = time.perf_counter() - t0
+        self.profile: Optional[FMProfile] = None
+
+    # ---- stores ----
+    def attach_head(self, task_id: str, head_fn: Callable):
+        self.heads[task_id] = head_fn
+
+    def detach_task(self, task_id: str):
+        self.heads.pop(task_id, None)
+
+    # ---- execution ----
+    def _features_fn(self, bucket: int):
+        """Shared backbone forward with per-request backbone LoRA deltas."""
+        if bucket not in self._jit_cache:
+            cfg = self.cfg
+
+            @jax.jit
+            def run(params, embeds, lora_stack, adapter_idx):
+                if cfg.is_encoder_decoder:
+                    # audio-style backbone: stub frames go to the encoder; the
+                    # decoder runs over a BOS-only token stream
+                    toks = jnp.zeros(embeds.shape[:2], jnp.int32)
+                    feats, _, _ = lm.forward(params, cfg, tokens=toks,
+                                             enc_embeds=embeds, lora=lora_stack,
+                                             adapter_idx=adapter_idx)
+                else:
+                    feats, _, _ = lm.forward(params, cfg, embeds=embeds,
+                                             lora=lora_stack,
+                                             adapter_idx=adapter_idx)
+                return feats.mean(axis=1)                      # (B, d) pooled
+
+            self._jit_cache[bucket] = run
+        return self._jit_cache[bucket]
+
+    def run_batch(self, embeds: np.ndarray, adapter_idx: np.ndarray):
+        """embeds: (n, S, d); adapter_idx: (n,). Returns (n, d) features.
+        Pads to the next bucket so steady-state serving never recompiles."""
+        n = embeds.shape[0]
+        b = bucket_for(n)
+        pad = b - n
+        if pad:
+            embeds = np.concatenate([embeds, np.zeros((pad,) + embeds.shape[1:],
+                                                      embeds.dtype)])
+            adapter_idx = np.concatenate(
+                [adapter_idx, np.full((pad,), 10**6, np.int32)])
+        out = self._features_fn(b)(self.params, jnp.asarray(embeds),
+                                   self.adapters.stacked(),
+                                   jnp.asarray(adapter_idx, jnp.int32))
+        return np.asarray(out)[:n]
+
+    def calibrate(self, sizes=(1, 2, 4, 8, 16)) -> FMProfile:
+        d = self.cfg.d_model
+        rng = np.random.RandomState(0)
+
+        def run(b):
+            e = rng.randn(b, self.input_len, d).astype(np.float32)
+            self.run_batch(e, np.zeros((b,), np.int32))
+
+        self.profile = profile_backbone(run, sizes=sizes, name=self.cfg.name)
+        self.profile.load_time_s = self.load_time_s
+        self.profile.memory_bytes = sum(
+            x.size * x.dtype.itemsize for x in jax.tree.leaves(self.params))
+        return self.profile

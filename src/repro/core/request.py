@@ -1,0 +1,62 @@
+"""Request/SLO/batch data model shared by the scheduler, executor & simulator."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Optional
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class SLO:
+    deadline_s: Optional[float] = None     # max acceptable latency (None = none)
+
+
+@dataclasses.dataclass
+class Request:
+    task_id: str
+    arrival: float
+    payload: Any = None                    # model input (real plane) or size hint
+    tokens: float = 1.0                    # token-based FMs: work units (§4.2)
+    slo: SLO = dataclasses.field(default_factory=SLO)
+    rid: int = dataclasses.field(default_factory=lambda: next(_ids))
+    # BFQ tags (assigned at enqueue)
+    start_tag: float = 0.0
+    finish_tag: float = 0.0
+    v_at_arrival: float = 0.0
+    # lifecycle timestamps
+    dispatch_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    result: Any = None
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival
+
+    def deadline(self) -> float:
+        if self.slo.deadline_s is None:
+            return float("inf")
+        return self.arrival + self.slo.deadline_s
+
+
+@dataclasses.dataclass
+class Batch:
+    requests: list[Request]
+    # requests grouped into adapter-compatible sub-batches (paper Fig. 5c):
+    # list of (adapter_id | None, [requests])
+    sub_batches: list[tuple[Optional[str], list[Request]]]
+
+    @property
+    def size(self) -> int:
+        return len(self.requests)
+
+    @property
+    def tasks(self) -> set[str]:
+        return {r.task_id for r in self.requests}
+
+    @property
+    def num_adapters(self) -> int:
+        return sum(1 for a, _ in self.sub_batches if a is not None)

@@ -1,0 +1,125 @@
+"""Per-server FMplex instance (paper §5/§6).
+
+Maintains the local vFM registry, task queues, scheduler state, and bindings
+from vFMs to physical FM instances. The same object serves both planes:
+
+  * real plane  — ``serve_forever``/``step`` execute batches on a PhysicalFM
+    via the Executor (tiny configs on CPU);
+  * sim plane   — the discrete-event simulator drives ``on_arrival`` /
+    ``next_batch`` / ``on_complete`` with virtual time.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from repro.core.bfq import SCHEDULERS, SchedulerBase
+from repro.core.executor import Executor
+from repro.core.physical import PhysicalFM
+from repro.core.profile import FMProfile
+from repro.core.request import Batch, Request
+from repro.core.vfm import VFM, TaskExtensions
+
+
+class FMplexServer:
+    def __init__(self, server_id: str = "s0"):
+        self.server_id = server_id
+        self.fms: dict[str, PhysicalFM] = {}          # physical FM instances
+        self.profiles: dict[str, FMProfile] = {}
+        self.schedulers: dict[str, SchedulerBase] = {}
+        self.vfms: dict[str, VFM] = {}                # task_id -> vFM
+        self.bindings: dict[str, str] = {}            # task_id -> fm instance id
+
+    # ---- deployment control (driven by FMplex-Controller) ----
+    def deploy_fm(self, fm_id: str, fm: Optional[PhysicalFM] = None,
+                  profile: Optional[FMProfile] = None, scheduler: str = "bfq"):
+        if fm is not None:
+            self.fms[fm_id] = fm
+            profile = profile or fm.profile or fm.calibrate()
+        assert profile is not None
+        self.profiles[fm_id] = profile
+        self.schedulers[fm_id] = SCHEDULERS[scheduler](profile)
+
+    def undeploy_fm(self, fm_id: str):
+        self.fms.pop(fm_id, None)
+        self.profiles.pop(fm_id)
+        self.schedulers.pop(fm_id)
+
+    def bind_task(self, task_id: str, fm_id: str, *, weight: float = 1.0,
+                  slo=None, extensions: Optional[TaskExtensions] = None) -> VFM:
+        vfm = VFM(task_id, weight=weight, slo=slo, extensions=extensions,
+                  backbone=fm_id)
+        vfm.bound_fm = fm_id
+        self.vfms[task_id] = vfm
+        self.bindings[task_id] = fm_id
+        fm = self.fms.get(fm_id)
+        if fm is not None and extensions is not None:
+            if extensions.decoder is not None:
+                fm.attach_head(task_id, extensions.decoder)
+            if extensions.adapter_id is not None and \
+                    extensions.adapter_weights is not None and \
+                    extensions.adapter_id not in fm.adapters.ids:
+                fm.adapters.add(extensions.adapter_id, extensions.adapter_weights)
+        return vfm
+
+    def unbind_task(self, task_id: str) -> Optional[dict]:
+        """Detach a task, returning its movable snapshot (elastic adaptation)."""
+        vfm = self.vfms.pop(task_id, None)
+        if vfm is None:
+            return None
+        fm_id = self.bindings.pop(task_id)
+        fm = self.fms.get(fm_id)
+        if fm is not None:
+            fm.detach_task(task_id)
+        return vfm.snapshot()
+
+    def rebind_snapshot(self, snap: dict, fm_id: str) -> VFM:
+        vfm = VFM.restore(snap, backbone=fm_id)
+        vfm.bound_fm = fm_id
+        self.vfms[vfm.task_id] = vfm
+        self.bindings[vfm.task_id] = fm_id
+        fm = self.fms.get(fm_id)
+        ext = vfm.extensions
+        if fm is not None and ext is not None:
+            if ext.decoder is not None:
+                fm.attach_head(vfm.task_id, ext.decoder)
+            if ext.adapter_id is not None and ext.adapter_weights is not None \
+                    and ext.adapter_id not in fm.adapters.ids:
+                fm.adapters.add(ext.adapter_id, ext.adapter_weights)
+        return vfm
+
+    # ---- scheduler-facing (both planes) ----
+    def vfms_on(self, fm_id: str) -> dict[str, VFM]:
+        return {t: v for t, v in self.vfms.items() if self.bindings[t] == fm_id}
+
+    def on_arrival(self, req: Request, now: float):
+        vfm = self.vfms[req.task_id]
+        self.schedulers[self.bindings[req.task_id]].on_arrival(vfm, req, now)
+
+    def next_batch(self, fm_id: str, now: float) -> Optional[Batch]:
+        return self.schedulers[fm_id].next_batch(self.vfms_on(fm_id), now)
+
+    def on_complete(self, fm_id: str, batch: Batch, now: float):
+        sched = self.schedulers[fm_id]
+        for r in batch.requests:
+            r.finish_time = now
+            v = self.vfms.get(r.task_id)
+            if v is not None:
+                v.acct.completed += 1
+                v.acct.service_time += \
+                    sched.profile.effective_per_request(batch.size)
+        sched.on_complete(batch, self.vfms_on(fm_id), now)
+
+    # ---- real-plane serving loop ----
+    def step(self, fm_id: str) -> Optional[Batch]:
+        """Dispatch + execute one batch synchronously; returns it (or None)."""
+        now = time.perf_counter()
+        batch = self.next_batch(fm_id, now)
+        if batch is None:
+            return None
+        ex = Executor(self.fms[fm_id])
+        results = ex.execute(batch, self.vfms)
+        self.on_complete(fm_id, batch, time.perf_counter())
+        for r in batch.requests:
+            r.result = results[r.rid]
+        return batch

@@ -1,0 +1,102 @@
+"""GQA flash-decode Pallas TPU kernel (serve_step hot loop).
+
+One new token attends to a long KV cache: the workload is HBM-bandwidth-bound
+(stream S × hd keys/values through VMEM once). Grid: (B, KV, num_s_blocks),
+s innermost/sequential; all G query heads of a kv group ride along in one
+(G, hd) VMEM tile so each K/V block is read exactly once per group — the TPU
+analogue of GPU flash-decode's warp-per-group layout.
+
+Valid-length masking uses the per-request ``lengths`` vector, delivered via
+scalar prefetch (SMEM) so block index maps stay static.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, window: Optional[int], bs: int):
+    b = pl.program_id(0)
+    js = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(js == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    pos = js * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    mask = pos < length
+    if window is not None:
+        mask &= pos >= (length - window)
+
+    @pl.when(jnp.any(mask))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)               # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bs, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        s = jnp.where(mask[None, :], s, NEG_INF)          # (G, bs)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(js == ns - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_s", "interpret"))
+def decode_attention(q, k, v, lengths, *, window: Optional[int] = None,
+                     block_s: int = 512, interpret: bool = False):
+    """q: (B, H, hd); k, v: (B, KV, S, hd); lengths: (B,) -> (B, H, hd)."""
+    B, H, hd = q.shape
+    _, KV, S, _ = k.shape
+    G = H // KV
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+    scale = 1.0 / (hd ** 0.5)
+    qg = q.reshape(B, KV, G, hd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, S // bs),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, j, lens: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, j, lens: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, j, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_kernel, scale=scale, window=window, bs=bs)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, qg, k, v)
+    return out.reshape(B, H, hd)

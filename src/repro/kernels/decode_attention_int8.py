@@ -1,0 +1,120 @@
+"""int8-KV flash-decode Pallas kernel (§Perf iteration on the serving cell).
+
+Decode is HBM-bandwidth-bound: the step time is dominated by streaming the KV
+cache. Storing K/V as int8 with a per-(batch, kv-head) symmetric scale halves
+cache traffic; dequantization happens in-register inside the kernel (free on
+the VPU), so the HBM side only ever sees int8. Same grid/online-softmax
+structure as ``decode_attention``.
+
+Quantization error is bounded by scale/2 per element (|k| <= 127.5*scale);
+tests sweep shapes and assert closeness to the f32 oracle on quantized inputs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def quantize_kv(k, v):
+    """k, v: (B, KV, S, hd) float -> (k_q, v_q int8, k_scale, v_scale (B, KV))."""
+    def q(x):
+        scale = jnp.maximum(jnp.max(jnp.abs(x), axis=(2, 3)), 1e-8) / 127.0
+        xq = jnp.clip(jnp.round(x / scale[:, :, None, None]), -127, 127)
+        return xq.astype(jnp.int8), scale.astype(jnp.float32)
+    kq, ks = q(k.astype(jnp.float32))
+    vq, vs = q(v.astype(jnp.float32))
+    return kq, vq, ks, vs
+
+
+def _kernel(len_ref, scale_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, window: Optional[int],
+            bs: int):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    js = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(js == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    k_s = scale_ref[b, h, 0]
+    v_s = scale_ref[b, h, 1]
+    pos = js * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    mask = pos < length
+    if window is not None:
+        mask &= pos >= (length - window)
+
+    @pl.when(jnp.any(mask))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (G, hd)
+        # in-register dequantization — HBM only ever streams int8
+        k = k_ref[0, 0].astype(jnp.float32) * k_s           # (bs, hd)
+        v = v_ref[0, 0].astype(jnp.float32) * v_s
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        s = jnp.where(mask[None, :], s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(js == ns - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_s", "interpret"))
+def decode_attention_int8(q, k_q, v_q, k_scale, v_scale, lengths, *,
+                          window: Optional[int] = None, block_s: int = 512,
+                          interpret: bool = False):
+    """q: (B, H, hd) float; k_q/v_q: (B, KV, S, hd) int8;
+    k_scale/v_scale: (B, KV); lengths: (B,) -> (B, H, hd)."""
+    B, H, hd = q.shape
+    _, KV, S, _ = k_q.shape
+    G = H // KV
+    bs = min(block_s, S)
+    assert S % bs == 0
+    scale = 1.0 / (hd ** 0.5)
+    qg = q.reshape(B, KV, G, hd)
+    scales = jnp.stack([k_scale, v_scale], axis=-1)          # (B, KV, 2)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                               # lengths, scales
+        grid=(B, KV, S // bs),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, j, *_: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, j, *_: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, j, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window, bs=bs),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, scales, qg, k_q, v_q)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,63 @@
+"""Backend-dispatching jit wrappers for the Pallas kernels.
+
+``backend="auto"`` uses the Pallas TPU kernels on TPU and falls back to the
+pure-jnp oracles elsewhere (this container is CPU-only; kernels are validated
+with ``interpret=True``). Layout adapters translate between the model-internal
+(B, S, H, hd) convention and the head-major kernel layout.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.segmented_lora import segmented_lora as _sgmv_pallas
+
+# module-level default, overridable per call
+BACKEND = "auto"
+
+
+def _resolve(backend: Optional[str]) -> str:
+    b = backend or BACKEND
+    if b == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return b
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    backend: Optional[str] = None, interpret: bool = False):
+    """q: (B, S, H, hd); k, v: (B, S, KV, hd) -> (B, S, H, hd)."""
+    b = _resolve(backend)
+    if b == "pallas":
+        o = _flash_pallas(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), causal=causal, window=window,
+                          interpret=interpret)
+        return o.transpose(0, 2, 1, 3)
+    from repro.models.attention import flash_attention as jnp_flash
+    return jnp_flash(q, k, v, causal=causal, window=window)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, window: Optional[int] = None,
+                     backend: Optional[str] = None, interpret: bool = False):
+    """q: (B, H, hd); caches: (B, S, KV, hd); lengths: (B,) -> (B, H, hd)."""
+    b = _resolve(backend)
+    if b == "pallas":
+        return _decode_pallas(q, k_cache.transpose(0, 2, 1, 3),
+                              v_cache.transpose(0, 2, 1, 3), lengths,
+                              window=window, interpret=interpret)
+    from repro.models.attention import decode_attention as jnp_decode
+    return jnp_decode(q, k_cache, v_cache, lengths, window=window)
+
+
+def segmented_lora(x, block_adapter, a_w, b_w, *, block_t: int = 128,
+                   backend: Optional[str] = None, interpret: bool = False):
+    """x: (T, d) adapter-sorted; -> LoRA delta (T, d)."""
+    b = _resolve(backend)
+    if b == "pallas":
+        return _sgmv_pallas(x, block_adapter, a_w, b_w, block_t=block_t,
+                            interpret=interpret)
+    return ref.segmented_lora_ref(x, block_adapter, a_w, b_w, block_t)

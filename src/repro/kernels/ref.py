@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Layouts here match the KERNEL layouts (head-major), not the model-internal
+layouts — ``ops.py`` adapts.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None):
+    """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd). Returns (B, H, Sq, hd)."""
+    B, H, Sq, hd = q.shape
+    _, KV, Sk, _ = k.shape
+    G = H // KV
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qf = q.reshape(B, KV, G, Sq, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, k.astype(jnp.float32)) * scale
+    q_pos = (Sk - Sq) + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths, *, window: Optional[int] = None):
+    """q: (B, H, hd); k, v: (B, KV, S, hd); lengths: (B,). -> (B, H, hd)."""
+    B, H, hd = q.shape
+    _, KV, S, _ = k.shape
+    G = H // KV
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qf = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bksd->bkgs", qf, k.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)[None]
+    mask = pos < lengths[:, None]
+    if window is not None:
+        mask &= pos >= (lengths[:, None] - window)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def segmented_lora_ref(x, block_adapter, a_w, b_w, block_size: int):
+    """Multi-adapter LoRA delta on an adapter-sorted batch.
+
+    x: (T, d) rows sorted/padded so each ``block_size`` block belongs to ONE
+    adapter; block_adapter: (T // block_size,) adapter id per block (may repeat;
+    id == num_adapters means "no adapter" -> zero delta);
+    a_w: (NA, d, r); b_w: (NA, r, d). Returns the LoRA delta (T, d).
+    """
+    T, d = x.shape
+    na = a_w.shape[0]
+    nb = T // block_size
+    xb = x.reshape(nb, block_size, d)
+
+    def one(blk, aid):
+        valid = aid < na
+        aid_c = jnp.minimum(aid, na - 1)
+        h = blk.astype(jnp.float32) @ a_w[aid_c].astype(jnp.float32)
+        y = h @ b_w[aid_c].astype(jnp.float32)
+        return jnp.where(valid, y, 0.0)
+
+    out = jax.vmap(one)(xb, block_adapter)
+    return out.reshape(T, d).astype(x.dtype)

@@ -1,0 +1,103 @@
+"""Segmented multi-adapter LoRA (SGMV) Pallas TPU kernel — FMplex's hot spot.
+
+The vFM executor co-batches requests from many tasks over one shared backbone
+pass, then applies per-task LoRA deltas: y[t] += x[t] @ A[a(t)] @ B[a(t)].
+GPU systems (Punica/S-LoRA) do this with warp-level gathers; the TPU-native
+formulation sorts the batch by adapter id and pads each adapter segment to a
+block multiple, so every (block_t × d) tile touches exactly ONE adapter. The
+adapter id per block arrives via scalar prefetch and drives the A/B BlockSpec
+index_maps — the MXU sees dense (block_t, d) @ (d, r) @ (r, d) tiles with the
+right adapter weights DMA'd into VMEM per block.
+
+Sentinel id == num_adapters means "no adapter" (base-model request): the block
+is skipped and contributes a zero delta (paper Fig. 5c semantics).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(seg_ref, x_ref, a_ref, b_ref, o_ref, *, na: int):
+    it = pl.program_id(0)
+    aid = seg_ref[it]
+
+    @pl.when(aid < na)
+    def _apply():
+        x = x_ref[...].astype(jnp.float32)                # (bt, d)
+        a = a_ref[0].astype(jnp.float32)                  # (d, r)
+        b = b_ref[0].astype(jnp.float32)                  # (r, d)
+        h = jax.lax.dot(x, a, preferred_element_type=jnp.float32)
+        o_ref[...] = jax.lax.dot(h, b,
+                                 preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+    @pl.when(aid >= na)
+    def _skip():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def segmented_lora(x, block_adapter, a_w, b_w, *, block_t: int = 128,
+                   interpret: bool = False):
+    """LoRA delta for an adapter-sorted, block-padded batch.
+
+    x: (T, d) with T % block_t == 0, rows grouped so each block has one
+    adapter; block_adapter: (T // block_t,) int32 adapter id per block
+    (== num_adapters -> no adapter); a_w: (NA, d, r); b_w: (NA, r, d).
+    Returns (T, d) delta.
+    """
+    T, d = x.shape
+    na, _, r = a_w.shape
+    assert T % block_t == 0, (T, block_t)
+    nt = T // block_t
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda i, seg: (i, 0)),
+            pl.BlockSpec((1, d, r), lambda i, seg: (jnp.minimum(seg[i], na - 1), 0, 0)),
+            pl.BlockSpec((1, r, d), lambda i, seg: (jnp.minimum(seg[i], na - 1), 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_t, d), lambda i, seg: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, na=na),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, d), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(block_adapter, x, a_w, b_w)
+
+
+def sort_by_adapter(adapter_ids, num_adapters: int, block_t: int = 128,
+                    max_tokens: int | None = None):
+    """Host-side helper: build (permutation, block_adapter, padded_T) so each
+    ``block_t`` block maps to one adapter. Returns numpy arrays (executor use).
+    """
+    import numpy as np
+
+    adapter_ids = np.asarray(adapter_ids)
+    order = np.argsort(adapter_ids, kind="stable")
+    segs = []
+    blocks = []
+    for aid in np.unique(adapter_ids):
+        idx = order[adapter_ids[order] == aid]
+        pad = (-len(idx)) % block_t
+        segs.append((idx, pad, int(aid)))
+        blocks += [int(aid)] * ((len(idx) + pad) // block_t)
+    perm = []
+    for idx, pad, _ in segs:
+        perm += list(idx) + [-1] * pad
+    total = len(perm)
+    if max_tokens is not None:
+        assert total <= max_tokens, (total, max_tokens)
+        blocks += [num_adapters] * ((max_tokens - total) // block_t)
+        perm += [-1] * (max_tokens - total)
+        total = max_tokens
+    return (np.array(perm, np.int32), np.array(blocks, np.int32), total)

@@ -1,0 +1,225 @@
+"""Build (step_fn, arg structs, shardings) for every (arch × shape × mesh) cell.
+
+This is the single source of truth used by the multi-pod dry-run, the roofline
+analysis, and the perf-iteration harness. No device memory is ever allocated —
+all inputs are ``jax.ShapeDtypeStruct``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeSpec, get_config
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.models.common import ShardCtx, logical_axes, shape_structs
+from repro.optim.adamw import AdamW, AdamWState
+from repro.sharding import rules as R
+
+SDS = jax.ShapeDtypeStruct
+
+# archs whose weights need 2D (data+model) sharding even at serve time to fit HBM
+BIG_SERVE = {"grok-1-314b", "qwen2-vl-72b"}
+
+# gradient-accumulation microbatches for the train_4k cell (activation
+# footprint scales 1/n while the global batch is preserved — §Perf)
+MICROBATCH = {"grok-1-314b": 4, "qwen2-vl-72b": 4, "jamba-v0.1-52b": 4,
+              "xlstm-125m": 2, "whisper-base": 2}
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    fn: object                  # python callable (to be jitted)
+    args: tuple                 # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: object
+    donate: tuple
+    static: dict
+
+
+def _rules_for(cfg: ModelConfig, shape: ShapeSpec, overrides: Optional[dict] = None):
+    long_ctx = shape.name == "long_500k"
+    if shape.kind == "train":
+        param_rules = R.LONG_CTX_FSDP if long_ctx else R.FSDP_RULES
+    elif cfg.name in BIG_SERVE:
+        param_rules = R.LONG_CTX_FSDP if long_ctx else R.FSDP_RULES
+    else:
+        param_rules = R.LONG_CTX_PARAM if long_ctx else R.TP_RULES
+    act_rules = R.LONG_CTX_ACT if long_ctx else R.ACT_RULES
+    if shape.kind == "train":
+        # §Perf iteration: sequence-parallel residual stream — required for the
+        # per-device activation footprint to fit HBM at 4k x 256 batch
+        act_rules = dict(act_rules, seq="model")
+    if overrides:
+        param_rules = dict(param_rules, **overrides.get("param", {}))
+        act_rules = dict(act_rules, **overrides.get("act", {}))
+    return param_rules, act_rules
+
+
+def _batch_structs(cfg: ModelConfig, B: int, S: int, kind: str):
+    d = cfg.d_model
+    s, axes = {}, {}
+    if kind in ("train", "prefill"):
+        if cfg.is_encoder_decoder:
+            s["enc_embeds"] = SDS((B, S, d), jnp.bfloat16)
+            axes["enc_embeds"] = ("batch", None, None)
+            s["tokens"] = SDS((B, S), jnp.int32)
+            axes["tokens"] = ("batch", None)
+        elif cfg.frontend_stub:
+            s["embeds"] = SDS((B, S, d), jnp.bfloat16)
+            axes["embeds"] = ("batch", None, None)
+            if cfg.vocab_size > 0 and kind == "train":
+                s["labels"] = SDS((B, S), jnp.int32)
+                axes["labels"] = ("batch", None)
+            if cfg.mrope_sections:
+                s["pos3"] = SDS((B, S, 3), jnp.int32)
+                axes["pos3"] = ("batch", None, None)
+        else:
+            s["tokens"] = SDS((B, S), jnp.int32)
+            axes["tokens"] = ("batch", None)
+    else:  # decode
+        s["tokens"] = SDS((B,), jnp.int32)
+        axes["tokens"] = ("batch",)
+    return s, axes
+
+
+def build_cell(arch: str, shape: ShapeSpec, mesh, overrides: Optional[dict] = None) -> Cell:
+    from repro.sharding.padding import pad_for_tp
+    cfg = pad_for_tp(get_config(arch), mesh.shape.get("model", 1))
+    if overrides and "moe_dispatch" in overrides:
+        cfg = dataclasses.replace(cfg, moe_dispatch=overrides["moe_dispatch"])
+    elif cfg.uses_moe:
+        # §Perf: shard_map expert parallelism by default (auto-falls back to
+        # gshard when num_experts doesn't divide the model axis, e.g. grok)
+        cfg = dataclasses.replace(cfg, moe_dispatch="ep")
+    param_rules, act_rules = _rules_for(cfg, shape, overrides)
+    shard = ShardCtx(act_rules, mesh)
+    B, S = shape.global_batch, shape.seq_len
+
+    mspec = lm.model_spec(cfg)
+    p_axes = logical_axes(mspec)
+
+    def psh(rules, struct_tree, axes_tree):
+        return R.tree_shardings(rules, axes_tree, mesh, struct_tree)
+
+    if shape.kind == "train":
+        p_structs = shape_structs(mspec, dtype=jnp.float32)
+        p_sh = psh(param_rules, p_structs, p_axes)
+        opt = AdamW(lr=1e-4)
+        opt_structs = AdamWState(SDS((), jnp.int32),
+                                 jax.tree.map(lambda s: SDS(s.shape, jnp.float32), p_structs),
+                                 jax.tree.map(lambda s: SDS(s.shape, jnp.float32), p_structs))
+        opt_sh = AdamWState(NamedSharding(mesh, P()), p_sh, p_sh)
+        state_structs = {"params": p_structs, "opt": opt_structs}
+        state_sh = {"params": p_sh, "opt": opt_sh}
+        b_structs, b_axes = _batch_structs(cfg, B, S, "train")
+        b_sh = {k: NamedSharding(mesh, R.spec_for(act_rules, b_axes[k], mesh,
+                                                  b_structs[k].shape))
+                for k in b_structs}
+
+        n_micro = (overrides or {}).get("microbatch",
+                                        MICROBATCH.get(arch, 1))
+
+        def train_step(state, batch):
+            if n_micro == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    lm.loss_fn, has_aux=True)(state["params"], cfg, batch, shard)
+            else:
+                # gradient accumulation: scan over microbatches; the grads
+                # accumulator is params-shaped (FSDP-sharded), activations
+                # shrink by 1/n_micro
+                micro = jax.tree.map(
+                    lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                        + x.shape[1:]), batch)
+
+                def acc_step(carry, mb):
+                    g_acc, l_acc = carry
+                    (loss, _), g = jax.value_and_grad(
+                        lm.loss_fn, has_aux=True)(state["params"], cfg, mb, shard)
+                    g_acc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32) / n_micro,
+                        g_acc, g)
+                    return (g_acc, l_acc + loss / n_micro), None
+
+                g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  state["params"])
+                (grads, loss), _ = jax.lax.scan(
+                    acc_step, (g0, jnp.zeros((), jnp.float32)), micro)
+                metrics = {"loss": loss}
+            new_p, new_opt, om = opt.update(grads, state["opt"], state["params"])
+            return {"params": new_p, "opt": new_opt}, {**metrics, **om}
+
+        return Cell(arch, shape, train_step, (state_structs, b_structs),
+                    (state_sh, b_sh),
+                    ({"params": p_sh, "opt": opt_sh}, NamedSharding(mesh, P())),
+                    (0,), {})
+
+    # serving cells: params in bf16
+    p_structs = shape_structs(mspec, dtype=jnp.bfloat16)
+    p_sh = psh(param_rules, p_structs, p_axes)
+    c_spec = lm.cache_spec(cfg, B, S)
+    c_structs = shape_structs(c_spec)
+    c_sh = psh(param_rules, c_structs, logical_axes(c_spec))
+
+    if shape.kind == "prefill":
+        b_structs, b_axes = _batch_structs(cfg, B, S, "prefill")
+        b_sh = {k: NamedSharding(mesh, R.spec_for(act_rules, b_axes[k], mesh,
+                                                  b_structs[k].shape))
+                for k in b_structs}
+        logits_sh = NamedSharding(mesh, R.spec_for(
+            act_rules, ("batch", "vocab"), mesh,
+            (B, max(cfg.vocab_size, cfg.d_model))))
+
+        def prefill_step(params, batch, cache):
+            return lm.prefill(params, cfg, cache=cache, shard=shard, **batch)
+
+        return Cell(arch, shape, prefill_step, (p_structs, b_structs, c_structs),
+                    (p_sh, b_sh, c_sh), (logits_sh, c_sh), (2,), {})
+
+    # decode
+    b_structs, b_axes = _batch_structs(cfg, B, S, "decode")
+    b_sh = {k: NamedSharding(mesh, R.spec_for(act_rules, b_axes[k], mesh,
+                                              b_structs[k].shape))
+            for k in b_structs}
+    logits_sh = NamedSharding(mesh, R.spec_for(act_rules, ("batch", "vocab"), mesh,
+                                               (B, cfg.vocab_size)))
+
+    lora_cfg = (overrides or {}).get("lora")
+    if lora_cfg:
+        # FMplex-integrated serving: the co-batch carries per-request adapter
+        # ids; the shared backbone applies multi-adapter LoRA deltas (vFM
+        # customization at production scale)
+        from repro.models import lora as lora_mod
+        l_spec = lora_mod.lora_spec(cfg, lora_cfg.get("num_adapters", 32),
+                                    lora_cfg.get("rank", 16))
+        l_structs = shape_structs(l_spec, dtype=jnp.bfloat16)
+        l_sh = psh(param_rules, l_structs, logical_axes(l_spec))
+        aidx_struct = SDS((B,), jnp.int32)
+        aidx_sh = NamedSharding(mesh, R.spec_for(act_rules, ("batch",), mesh, (B,)))
+
+        def serve_step_lora(params, cache, batch, lora, adapter_idx):
+            return lm.decode_step(params, cfg, cache=cache, shard=shard,
+                                  lora=lora, adapter_idx=adapter_idx, **batch)
+
+        return Cell(arch, shape, serve_step_lora,
+                    (p_structs, c_structs, b_structs, l_structs, aidx_struct),
+                    (p_sh, c_sh, b_sh, l_sh, aidx_sh), (logits_sh, c_sh),
+                    (1,), {})
+
+    def serve_step(params, cache, batch):
+        return lm.decode_step(params, cfg, cache=cache, shard=shard, **batch)
+
+    return Cell(arch, shape, serve_step, (p_structs, c_structs, b_structs),
+                (p_sh, c_sh, b_sh), (logits_sh, c_sh), (1,), {})
+
+
+def lower_cell(cell: Cell):
+    fn = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                 out_shardings=cell.out_shardings, donate_argnums=cell.donate)
+    return fn.lower(*cell.args)

@@ -1,0 +1,167 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any jax import — jax locks the device
+count on first init. Usage:
+
+  python -m repro.launch.dryrun --cell qwen2-7b:train_4k:pod1      # one cell
+  python -m repro.launch.dryrun --all [--resume]                   # full sweep
+                                                                   # (subprocess
+                                                                   # per cell)
+
+Each cell records memory_analysis / cost_analysis / collective stats to
+``results/dryrun.jsonl``; §Roofline and §Perf read from there.
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results"
+
+
+def run_one_cell(arch: str, shape_name: str, mesh_kind: str,
+                 overrides: dict | None = None) -> dict:
+    import jax
+    from repro.configs import SHAPES, applicable, get_config
+    from repro.launch import flops as flops_mod
+    from repro.launch import hlo
+    from repro.launch.cells import build_cell, lower_cell
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "ts": time.time()}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "pod2"))
+    chips = mesh.devices.size
+    t0 = time.time()
+    with mesh:
+        cell = build_cell(arch, shape, mesh, overrides=overrides)
+        lowered = lower_cell(cell)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = {}
+        try:
+            ma = compiled.memory_analysis()
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                if hasattr(ma, k):
+                    mem[k] = int(getattr(ma, k))
+        except Exception as e:  # CPU backend may not implement it
+            mem["error"] = str(e)
+
+        cost = {}
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            for k in ("flops", "bytes accessed"):
+                if ca and k in ca:
+                    cost[k] = float(ca[k])
+        except Exception as e:
+            cost["error"] = str(e)
+
+        text = compiled.as_text()
+        a = hlo.analyze(text)
+
+    # static memory model: weights/cache traffic per step (args re-read) is
+    # already inside dot_traffic; memory_analysis gives residency for fit-check.
+    # collective term uses the TPU-dtype-normalized bytes (see hlo.analyze).
+    terms = hlo.roofline_terms(a["dot_flops"], a["hbm_traffic_bytes"],
+                               a["collective_bytes_norm"], chips)
+    mf = flops_mod.model_flops(cfg, shape)
+    rec.update(
+        status="ok", chips=chips, lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1), memory=mem,
+        cost_analysis_raw=cost,   # XLA numbers (while bodies counted once)
+        hlo_flops_per_dev=a["dot_flops"],
+        hbm_traffic_per_dev=a["hbm_traffic_bytes"],
+        collective_bytes_norm=a["collective_bytes_norm"],
+        collectives={**a["collective_by_kind"], "total": a["collective_bytes"]},
+        collective_counts=a["collective_counts"],
+        model_flops_global=mf,
+        model_flops_per_dev=mf / chips,
+        useful_ratio=(mf / chips) / a["dot_flops"] if a["dot_flops"] else None,
+        roofline=terms, hlo_bytes=len(text))
+    return rec
+
+
+def cell_list(mesh_kinds=("pod1", "pod2")):
+    from repro.configs import ASSIGNED, SHAPES
+    cells = []
+    for arch in ASSIGNED:
+        for shape in SHAPES:
+            for mk in mesh_kinds:
+                cells.append((arch, shape, mk))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", help="arch:shape:pod1|pod2")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS / "dryrun.jsonl"))
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--overrides", default=None,
+                    help="JSON rule overrides (perf iterations)")
+    args = ap.parse_args()
+    RESULTS.mkdir(exist_ok=True)
+
+    if args.cell:
+        arch, shape, mk = args.cell.split(":")
+        overrides = json.loads(args.overrides) if args.overrides else None
+        try:
+            rec = run_one_cell(arch, shape, mk, overrides)
+        except Exception:
+            rec = {"arch": arch, "shape": shape, "mesh": mk, "status": "error",
+                   "error": traceback.format_exc()[-2000:]}
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        print(json.dumps({k: rec[k] for k in rec if k not in ("memory", "cost")},
+                         indent=None)[:600])
+        sys.exit(0 if rec["status"] in ("ok", "skipped") else 1)
+
+    if args.all:
+        done = set()
+        out = Path(args.out)
+        if args.resume and out.exists():
+            for line in out.read_text().splitlines():
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("ok", "skipped"):
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+        todo = [c for c in cell_list() if c not in done]
+        print(f"{len(todo)} cells to run ({len(done)} already done)")
+        for i, (arch, shape, mk) in enumerate(todo):
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--cell", f"{arch}:{shape}:{mk}", "--out", args.out]
+            print(f"[{i+1}/{len(todo)}] {arch}:{shape}:{mk}", flush=True)
+            try:
+                subprocess.run(cmd, timeout=args.timeout, check=False)
+            except subprocess.TimeoutExpired:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps({"arch": arch, "shape": shape, "mesh": mk,
+                                        "status": "timeout"}) + "\n")
+        print("dry-run sweep complete")
+
+
+if __name__ == "__main__":
+    main()

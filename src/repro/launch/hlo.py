@@ -1,0 +1,333 @@
+"""HLO post-processing: roofline terms derived from the compiled dry-run.
+
+Why not just ``compiled.cost_analysis()``? XLA's cost analysis counts a
+``while`` body ONCE, not × trip-count — our models scan over layer periods and
+attention chunks, so raw cost_analysis undercounts FLOPs by 10–30×
+(verified empirically; see EXPERIMENTS.md §Dry-run). This module parses the
+SPMD-partitioned HLO (``compiled.as_text()`` — all shapes are per-device
+shards), builds the computation call graph (fusions, calls, while bodies),
+extracts while trip counts from their condition computations, and accumulates:
+
+  * dot FLOPs        — 2 · prod(result dims) · prod(contracting dims), exact
+  * collective bytes — operand bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute
+  * HBM traffic      — documented model: Σ dot (lhs+rhs+result bytes) +
+                       2 × collective operand bytes (+ reported argument/output
+                       sizes are recorded separately by the dry-run).
+
+All quantities are per-device; loop bodies are multiplied by trip count.
+Validated against cost_analysis on loop-free programs (tests/test_hlo.py).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OP_RE = re.compile(r"\s*([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _parse_instr(line: str):
+    """-> (name, result_type, op, args_str, tail) or None.
+
+    Handles tuple result types (nested parens) and the /*index=N*/ comments
+    HLO inserts inside long tuples — a plain regex chokes on both.
+    """
+    line = _COMMENT_RE.sub("", line)
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):           # tuple type
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        rtype, rest = rest[:i + 1], rest[i + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        rtype, rest = rest[:sp], rest[sp:]
+    m2 = _OP_RE.match(rest)
+    if not m2:
+        return None
+    op = m2.group(1)
+    # args up to matching close paren
+    depth, args = 1, []
+    i = m2.end()
+    while i < len(rest) and depth:
+        ch = rest[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        args.append(ch)
+        i += 1
+    return name, rtype, op, "".join(args), rest[i:]
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_dims(shape_str: str):
+    """All (dtype, dims) tensor shapes in a type string (handles tuples)."""
+    out = []
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+        out.append((dt, dims))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class _Comp:
+    __slots__ = ("flops", "coll", "coll_by_kind", "coll_counts", "dot_bytes",
+                 "children", "trip_const")
+
+    def __init__(self):
+        self.flops = 0.0
+        self.coll = 0.0
+        self.coll_by_kind = {k: 0.0 for k in COLLECTIVES}
+        self.coll_counts = {k: 0 for k in COLLECTIVES}
+        self.dot_bytes = 0.0
+        self.children = []          # (callee_name, multiplier_kind)
+        self.trip_const = 0         # max int constant seen (trip-count candidate)
+
+
+def _dot_flops(args: str, tail: str, result_type: str, shapes: dict) -> tuple[float, float]:
+    """FLOPs + operand/result bytes for a dot instruction."""
+    res = _shape_dims(result_type)
+    if not res:
+        return 0.0, 0.0
+    _, rdims = res[0]
+    n_out = 1
+    for d in rdims:
+        n_out *= d
+    # contracting dims from lhs shape + lhs_contracting_dims
+    opnds = re.findall(r"%([\w.\-]+)", args)
+    lhs_type = shapes.get(opnds[0], "") if opnds else ""
+    lhs = _shape_dims(lhs_type)
+    contr = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", tail)
+    k = 1
+    if lhs and contr and contr.group(1):
+        _, ldims = lhs[0]
+        for ci in contr.group(1).split(","):
+            ci = int(ci)
+            if ci < len(ldims):
+                k *= ldims[ci]
+    flops = 2.0 * n_out * k
+    obytes = sum(_shape_bytes(shapes.get(o, "")) for o in opnds[:2])
+    obytes += _shape_bytes(result_type)
+    return flops, obytes
+
+
+def analyze(hlo_text: str) -> dict:
+    """Trip-count-aware per-device FLOPs / collective bytes / dot HBM traffic."""
+    # ---- pass 1: split into computations; collect instruction result types
+    comps: dict[str, _Comp] = {}
+    shapes: dict[str, str] = {}
+    cur = None
+    entry = None
+    lines = hlo_text.splitlines()
+    comp_of_line = []
+    for line in lines:
+        mc = _COMP_RE.match(line)
+        if mc:
+            cur = mc.group(2)
+            comps[cur] = _Comp()
+            if mc.group(1):
+                entry = cur
+        comp_of_line.append(cur)
+        pi = _parse_instr(line)
+        if pi:
+            shapes[pi[0]] = pi[1]
+
+    # ---- pass 2: per-computation costs + call graph
+    for line, cname in zip(lines, comp_of_line):
+        if cname is None:
+            continue
+        comp = comps[cname]
+        pi = _parse_instr(line)
+        if not pi:
+            continue
+        name, rtype, op, args, tail = pi
+        if op == "dot":
+            f, b = _dot_flops(args, tail, rtype, shapes)
+            comp.flops += f
+            comp.dot_bytes += b
+        elif op == "constant" and re.match(r"^s(32|64)\b", rtype):
+            m = re.match(r"(\d+)$", args)
+            if m:
+                comp.trip_const = max(comp.trip_const, int(m.group(1)))
+        else:
+            kind = next((k for k in COLLECTIVES if op.startswith(k)), None)
+            if kind:
+                opnds = re.findall(r"%([\w.\-]+)", args)
+                ob = sum(_shape_bytes(shapes.get(o, "")) for o in opnds) or \
+                    _shape_bytes(rtype)
+                comp.coll += ob
+                comp.coll_by_kind[kind] += ob
+                comp.coll_counts[kind] += 1
+        # call edges
+        if op == "fusion" or op == "call":
+            m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", tail)
+            if m:
+                comp.children.append((m.group(1), 1))
+        elif op == "while":
+            mb = re.search(r"body=%?([\w.\-]+)", tail)
+            mt = _TRIP_RE.search(tail)
+            mcn = re.search(r"condition=%?([\w.\-]+)", tail)
+            if mb:
+                if mt:
+                    trips = int(mt.group(1))
+                else:  # fall back: max int constant in the condition comp
+                    trips = comps.get(mcn.group(1), _Comp()).trip_const if mcn else 1
+                comp.children.append((mb.group(1), max(trips, 1)))
+        elif op == "conditional":
+            for m in re.finditer(r"(?:true_computation|false_computation|"
+                                 r"branch_computations)=\{?%?([\w.\-,% ]+)", tail):
+                for nm in re.findall(r"[\w.\-]+", m.group(1)):
+                    comp.children.append((nm, 1))
+
+    # ---- pass 3: DFS from ENTRY with multipliers (memoized totals)
+    if entry is None:
+        # fall back: the computation containing most flops
+        entry = max(comps, key=lambda c: comps[c].flops, default=None)
+
+    memo: dict[str, tuple] = {}
+
+    def total(cname, depth=0):
+        if cname in memo:
+            return memo[cname]
+        if cname not in comps or depth > 64:
+            return (0.0, 0.0, {k: 0.0 for k in COLLECTIVES},
+                    {k: 0 for k in COLLECTIVES}, 0.0)
+        c = comps[cname]
+        f, cl, db = c.flops, c.coll, c.dot_bytes
+        by_kind = dict(c.coll_by_kind)
+        counts = dict(c.coll_counts)
+        for child, mult in c.children:
+            cf, ccl, cbk, cct, cdb = total(child, depth + 1)
+            f += mult * cf
+            cl += mult * ccl
+            db += mult * cdb
+            for k in COLLECTIVES:
+                by_kind[k] += mult * cbk[k]
+                counts[k] += mult * cct[k]
+        memo[cname] = (f, cl, by_kind, counts, db)
+        return memo[cname]
+
+    f, cl, by_kind, counts, db = total(entry)
+
+    # ---- TPU dtype normalization --------------------------------------
+    # XLA:CPU cannot emit bf16 collectives: every bf16-level psum is promoted
+    # to f32 right before the all-reduce (verified with a minimal
+    # shard_map(psum(optimization_barrier(bf16))) repro — the convert is
+    # inserted unconditionally). At the StableHLO level all large reductions
+    # in these models are bf16, and on the TPU target they execute in bf16.
+    # We therefore also report bytes with f32 collective operands >= 1 MiB
+    # counted at half width; the roofline collective term uses this value and
+    # EXPERIMENTS.md §Dry-run documents the rule.
+    f32_big = 0.0
+    for line, cname in zip(lines, comp_of_line):
+        if cname is None:
+            continue
+        pi = _parse_instr(line)
+        if not pi:
+            continue
+        name, rtype, op, args, tail = pi
+        kind = next((k for k in COLLECTIVES if op.startswith(k)), None)
+        if kind is None:
+            continue
+        for o in re.findall(r"%([\w.\-]+)", args):
+            t = shapes.get(o, "")
+            b = _shape_bytes(t)
+            if b >= (1 << 20) and re.search(r"\bf32\[", t):
+                # weight of this op in the entry total = product of trips on
+                # its path; approximate with the per-computation multiplier
+                # derived from the memoized totals (exact for our call trees)
+                f32_big += b * _trips_of(cname, comps, memo, entry)
+    cl_norm = cl - f32_big / 2.0
+    return {
+        "dot_flops": f,
+        "collective_bytes": cl,
+        "collective_bytes_norm": cl_norm,
+        "collective_by_kind": by_kind,
+        "collective_counts": counts,
+        "dot_traffic_bytes": db,
+        "hbm_traffic_bytes": db + 2 * cl_norm,
+    }
+
+
+def _trips_of(cname: str, comps, memo, entry) -> float:
+    """Total trip multiplier of a computation along the call tree (number of
+    times its body executes per entry invocation)."""
+    mult: dict[str, float] = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        cur = order[i]
+        i += 1
+        for child, m in comps.get(cur, _Comp()).children:
+            mult[child] = mult.get(child, 0.0) + mult[cur] * m
+            if child not in seen:
+                seen.add(child)
+                order.append(child)
+    return mult.get(cname, 0.0)
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Back-compat shim over analyze()."""
+    a = analyze(hlo_text)
+    stats = dict(a["collective_by_kind"])
+    stats["total"] = a["collective_bytes"]
+    stats["counts"] = a["collective_counts"]
+    return stats
+
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link (task-specified roofline model)
+
+
+def roofline_terms(flops: Optional[float], bytes_accessed: Optional[float],
+                   coll_bytes_per_dev: float, chips: int) -> dict:
+    """All three terms in seconds. Inputs are PER-DEVICE (partitioned HLO
+    shapes are shards; equivalent to global/(chips·peak))."""
+    out = {}
+    out["compute_s"] = (flops / PEAK_FLOPS) if flops else None
+    out["memory_s"] = (bytes_accessed / HBM_BW) if bytes_accessed else None
+    out["collective_s"] = coll_bytes_per_dev / ICI_BW
+    terms = {k: v for k, v in out.items() if v}
+    out["bottleneck"] = max(terms, key=terms.get) if terms else None
+    return out

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never touches
+jax device state. The dry-run entrypoint sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_local_mesh():
+    """1-device mesh for CPU smoke tests (same axis names as single-pod)."""
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+
+
+def make_mesh_for(devices: int, model_parallel: int = 16, pods: int = 1):
+    """Elastic-scaling helper: build a mesh for an arbitrary device count."""
+    data = devices // (model_parallel * pods)
+    assert data >= 1 and data * model_parallel * pods == devices, (devices, model_parallel, pods)
+    if pods > 1:
+        return jax.make_mesh((pods, data, model_parallel), ("pod", "data", "model"),
+                             axis_types=_auto(3))
+    return jax.make_mesh((data, model_parallel), ("data", "model"), axis_types=_auto(2))

@@ -1,0 +1,110 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Roofline reporting + per-cell profiling for the §Perf hypothesis loop.
+
+  python -m repro.launch.roofline --table [--jsonl results/dryrun.jsonl]
+  python -m repro.launch.roofline --detail qwen2-7b:decode_32k:pod1 \
+      [--overrides '{"act":{"seq":"model"}}']     # top collectives + dots
+"""
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results"
+
+
+def print_table(jsonl: str, mesh: str = "pod1"):
+    rows = {}
+    for line in Path(jsonl).read_text().splitlines():
+        r = json.loads(line)
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        rows[(r["arch"], r["shape"])] = r
+    hdr = (f"{'arch':<16}{'shape':<12}{'compute_s':>11}{'memory_s':>11}"
+           f"{'coll_s':>11} {'bottleneck':<12}{'MODEL/HLO':>10}"
+           f"{'arg+tmp_GB':>11}")
+    print(hdr)
+    print("-" * len(hdr))
+    for (arch, shape), r in sorted(rows.items()):
+        t = r["roofline"]
+        m = r.get("memory", {})
+        gb = (m.get("argument_size_in_bytes", 0)
+              + m.get("temp_size_in_bytes", 0)) / 1e9
+        print(f"{arch:<16}{shape:<12}{t['compute_s']:>11.3e}"
+              f"{t['memory_s']:>11.3e}{t['collective_s']:>11.3e} "
+              f"{t['bottleneck'][:-2]:<12}{(r.get('useful_ratio') or 0):>10.2f}"
+              f"{gb:>11.2f}")
+
+
+def detail(cell: str, overrides=None, top: int = 12):
+    import jax  # noqa: F401  (device count env already set above)
+    import re
+    from repro.configs import SHAPES
+    from repro.launch import hlo
+    from repro.launch.cells import build_cell, lower_cell
+    from repro.launch.mesh import make_production_mesh
+
+    arch, shape, mk = cell.split(":")
+    mesh = make_production_mesh(multi_pod=(mk == "pod2"))
+    with mesh:
+        c = build_cell(arch, SHAPES[shape], mesh, overrides=overrides)
+        compiled = lower_cell(c).compile()
+        text = compiled.as_text()
+        a = hlo.analyze(text)
+        print(json.dumps({k: v for k, v in a.items() if not isinstance(v, dict)}))
+        print("memory:", compiled.memory_analysis())
+
+    # rank individual collective ops and dots by (per-trip) operand bytes
+    lines = text.splitlines()
+    comps, cur, comp_of_line = {}, None, []
+    for line in lines:
+        mc = hlo._COMP_RE.match(line)
+        if mc:
+            cur = mc.group(2)
+        comp_of_line.append(cur)
+    shapes = {}
+    for line in lines:
+        pi = hlo._parse_instr(line)
+        if pi:
+            shapes[pi[0]] = pi[1]
+    colls, dots = [], []
+    for line, cn in zip(lines, comp_of_line):
+        pi = hlo._parse_instr(line)
+        if not pi:
+            continue
+        name, rtype, op, args, tail = pi
+        kind = next((k for k in hlo.COLLECTIVES if op.startswith(k)), None)
+        if kind:
+            ob = sum(hlo._shape_bytes(shapes.get(o, ""))
+                     for o in re.findall(r"%([\w.\-]+)", args))
+            colls.append((ob, kind, rtype[:48], cn[:40]))
+        elif op == "dot":
+            f, b = hlo._dot_flops(args, tail, rtype, shapes)
+            dots.append((f, rtype[:48], cn[:40]))
+    print(f"\ntop collectives (operand bytes per execution, x trips applies):")
+    for ob, kind, rt, cn in sorted(colls, reverse=True)[:top]:
+        print(f"  {ob/1e6:10.1f} MB  {kind:<20} {rt:<48} in {cn}")
+    print(f"\ntop dots (flops per execution):")
+    for f, rt, cn in sorted(dots, reverse=True)[:top]:
+        print(f"  {f/1e9:10.2f} GF  {rt:<48} in {cn}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--table", action="store_true")
+    ap.add_argument("--jsonl", default=str(RESULTS / "dryrun.jsonl"))
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--detail", default=None)
+    ap.add_argument("--overrides", default=None)
+    args = ap.parse_args()
+    if args.table:
+        print_table(args.jsonl, args.mesh)
+    if args.detail:
+        detail(args.detail,
+               json.loads(args.overrides) if args.overrides else None)
+
+
+if __name__ == "__main__":
+    main()

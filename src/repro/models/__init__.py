@@ -1,0 +1,1 @@
+from repro.models import attention, blocks, common, layers, lm, mamba, mlp, moe, xlstm  # noqa

@@ -1,0 +1,198 @@
+"""GQA attention: chunked flash-style prefill (memory-sane lowering) + decode.
+
+The prefill path is a pure-jnp online-softmax flash attention (lax.scan over KV
+chunks nested in a scan over Q chunks). It is (a) the reference oracle for the
+Pallas kernel in ``repro.kernels.flash_attention`` and (b) what the dry-run
+lowers — naive (S×S)-materializing attention would blow past HBM in
+memory_analysis() at 32k.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+from repro.models.layers import apply_mrope, apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------- specs ----------------
+
+def attn_spec(cfg, cross: bool = False) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    spec = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        spec["bq"] = ParamSpec((h, hd), ("heads", "head_dim"), init="zeros")
+        spec["bk"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+        spec["bv"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+    return spec
+
+
+# ---------------- core flash attention (jnp reference) ----------------
+
+def _chunk(n: int, target: int) -> int:
+    c = min(n, target)
+    while n % c:
+        c -= 1
+    return c
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_chunk", "kv_chunk"))
+def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Online-softmax attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with H % KV == 0 (GQA).
+    Returns (B, Sq, H, hd). Q/K positions are aligned at the end (standard
+    causal self-attention when Sq == Sk; for Sq < Sk, q is the suffix).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    qc = _chunk(Sq, q_chunk)
+    kc = _chunk(Sk, kv_chunk)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    q_off = Sk - Sq  # absolute position offset of q block
+
+    # operands stay in their storage dtype (bf16 on TPU); the MXU accumulates
+    # in f32 via preferred_element_type — avoids materializing f32 copies of
+    # Q/K/V, which would double HBM traffic (§Perf iteration 2)
+    qr = q.reshape(B, Sq // qc, qc, KV, G, hd)
+    kr = k.reshape(B, Sk // kc, kc, KV, hd)
+    vr = v.reshape(B, Sk // kc, kc, KV, hd)
+
+    def q_step(_, qi):
+        qblk, qidx = qi                                   # (B, qc, KV, G, hd)
+        q_pos = q_off + qidx * qc + jnp.arange(qc)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kidx = ki
+            k_pos = kidx * kc + jnp.arange(kc)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((qc, kc), jnp.bool_)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, qc, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kr.swapaxes(0, 1), vr.swapaxes(0, 1), jnp.arange(Sk // kc)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]      # (B, KV, G, qc, hd)
+        return None, out.transpose(0, 3, 1, 2, 4)          # (B, qc, KV, G, hd)
+
+    _, chunks = jax.lax.scan(q_step, None, (qr.swapaxes(0, 1), jnp.arange(Sq // qc)))
+    out = chunks.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: Optional[int] = None):
+    """Single-token attention against a KV cache.
+
+    q: (B, H, hd); caches: (B, S, KV, hd); cache_len: (B,) valid lengths
+    (the new token's position is cache_len - 1 after insertion).
+    """
+    B, H, hd = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    # bf16 operands + f32 accumulation: the KV cache is streamed once in its
+    # storage dtype instead of being copied to f32 first (§Perf iteration 2)
+    qr = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(S)[None]                              # (1, S)
+    mask = pos < cache_len[:, None]
+    if window is not None:
+        mask &= pos >= (cache_len[:, None] - window)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+# ---------------- full layer ops ----------------
+
+def qkv_project(p, x, cfg, pos=None, pos3=None, rope: bool = True,
+                lora=None, adapter_idx=None):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if lora is not None and adapter_idx is not None:
+        from repro.models.lora import qv_lora
+        q, v = qv_lora(x, lora, adapter_idx, q, v)
+    if rope:
+        if cfg.mrope_sections is not None and pos3 is not None:
+            q = apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
+        elif pos is not None:
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def out_project(p, attn_out, dtype):
+    return jnp.einsum("bshk,hkd->bsd", attn_out, p["wo"].astype(dtype))
+
+
+def self_attention(p, x, cfg, shard, *, causal=True, pos=None, pos3=None,
+                   lora=None, adapter_idx=None):
+    """Full-sequence self attention (train / prefill). Returns (out, (k, v))."""
+    q, k, v = qkv_project(p, x, cfg, pos=pos, pos3=pos3, lora=lora,
+                          adapter_idx=adapter_idx)
+    q = shard(q, ("batch", None, "heads", None))
+    k = shard(k, ("batch", None, "kv_heads", None))
+    v = shard(v, ("batch", None, "kv_heads", None))
+    o = flash_attention(q, k, v, causal=causal, window=cfg.sliding_window)
+    return out_project(p, o, x.dtype), (k, v)
+
+
+def cross_attention(p, x, enc_kv, cfg, shard):
+    """Decoder cross-attention over precomputed encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k, v = enc_kv
+    o = flash_attention(q, k.astype(x.dtype), v.astype(x.dtype), causal=False)
+    return out_project(p, o, x.dtype)
+
+
+def self_attention_decode(p, x, cache, cfg, shard, *, pos=None, pos3=None,
+                          lora=None, adapter_idx=None):
+    """One-step decode. x: (B, 1, d); cache: dict(k, v, len). Returns (out, cache')."""
+    q, k, v = qkv_project(p, x, cfg, pos=pos, pos3=pos3, lora=lora,
+                          adapter_idx=adapter_idx)
+    B = x.shape[0]
+    idx = cache["len"]                                    # (B,) insert position
+    bidx = jnp.arange(B)
+    k_cache = cache["k"].at[bidx, idx].set(k[:, 0].astype(cache["k"].dtype))
+    v_cache = cache["v"].at[bidx, idx].set(v[:, 0].astype(cache["v"].dtype))
+    o = decode_attention(q[:, 0], k_cache, v_cache, idx + 1, window=cfg.sliding_window)
+    out = out_project(p, o[:, None], x.dtype)
+    return out, {"k": k_cache, "v": v_cache, "len": idx + 1}

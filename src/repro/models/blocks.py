@@ -1,0 +1,210 @@
+"""Config-driven block dispatcher.
+
+A model is ``num_periods`` repetitions of a *period* — a fixed sequence of
+sublayers (attention / mamba / sLSTM / mLSTM, each optionally followed by a
+dense-FFN or MoE sublayer). Parameters and caches carry a leading
+``num_periods`` axis and are consumed by ``lax.scan`` in ``repro.models.lm`` —
+this keeps the HLO one-period-sized for 80-layer configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, MAMBA, MLSTM, SLSTM, ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba as mam
+from repro.models import xlstm as xl
+from repro.models.common import ParamSpec
+from repro.models.layers import rmsnorm, rmsnorm_spec
+from repro.models.mlp import mlp, mlp_spec
+from repro.models.moe import moe_ffn, moe_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class SubLayer:
+    kind: str
+    has_moe: bool
+    has_ffn: bool
+    has_cross: bool = False
+
+
+def period_len(cfg: ModelConfig) -> int:
+    base = len(cfg.block_pattern) if cfg.block_pattern else 1
+    if cfg.uses_moe:
+        base = math.lcm(base, cfg.moe_every)
+    assert cfg.num_layers % base == 0, (cfg.name, cfg.num_layers, base)
+    return base
+
+
+def period_layout(cfg: ModelConfig, cross: bool = False) -> list[SubLayer]:
+    plen = period_len(cfg)
+    blocks = cfg.blocks
+    out = []
+    for pos in range(plen):
+        kind = blocks[pos]
+        has_ffn = cfg.d_ff > 0 and kind not in (MLSTM, SLSTM)
+        has_moe = has_ffn and cfg._layer_has_moe(pos)
+        out.append(SubLayer(kind, has_moe, has_ffn, cross))
+    return out
+
+
+# ---------------- specs ----------------
+
+def sublayer_spec(cfg: ModelConfig, lay: SubLayer) -> dict:
+    d = cfg.d_model
+    spec: dict = {"ln1": rmsnorm_spec(d)}
+    if lay.kind == ATTN:
+        spec["attn"] = attn.attn_spec(cfg)
+    elif lay.kind == MAMBA:
+        spec["mamba"] = mam.mamba_spec(cfg)
+    elif lay.kind == MLSTM:
+        spec["mlstm"] = xl.mlstm_spec(cfg)
+    elif lay.kind == SLSTM:
+        spec["slstm"] = xl.slstm_spec(cfg)
+    if lay.has_cross:
+        spec["ln_x"] = rmsnorm_spec(d)
+        spec["cross"] = attn.attn_spec(cfg, cross=True)
+    if lay.has_ffn:
+        spec["ln2"] = rmsnorm_spec(d)
+        spec["ffn"] = moe_spec(cfg) if lay.has_moe else mlp_spec(cfg)
+    return spec
+
+
+def sublayer_cache_spec(cfg: ModelConfig, lay: SubLayer, batch: int, s_max: int,
+                        enc_len: int = 0) -> Optional[dict]:
+    """Decode-time cache carried per sublayer (logical axes included)."""
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    dt = jnp.bfloat16
+    if lay.kind == ATTN:
+        spec = {
+            "k": ParamSpec((batch, s_max, kv, hd), ("batch", "cache_seq", "kv_heads", None),
+                           init="zeros", dtype=dt),
+            "v": ParamSpec((batch, s_max, kv, hd), ("batch", "cache_seq", "kv_heads", None),
+                           init="zeros", dtype=dt),
+            "len": ParamSpec((batch,), ("batch",), init="zeros", dtype=jnp.int32),
+        }
+        if lay.has_cross:
+            spec["ck"] = ParamSpec((batch, enc_len, kv, hd),
+                                   ("batch", "cache_seq", "kv_heads", None),
+                                   init="zeros", dtype=dt)
+            spec["cv"] = ParamSpec((batch, enc_len, kv, hd),
+                                   ("batch", "cache_seq", "kv_heads", None),
+                                   init="zeros", dtype=dt)
+        return spec
+    di = cfg.mamba_expand * cfg.d_model
+    if lay.kind == MAMBA:
+        return {
+            "conv": ParamSpec((batch, cfg.mamba_d_conv - 1, di), ("batch", None, "mlp"),
+                              init="zeros", dtype=dt),
+            "ssm": ParamSpec((batch, di, cfg.mamba_d_state), ("batch", "mlp", None),
+                             init="zeros"),
+        }
+    dix = int(cfg.xlstm_proj_factor * cfg.d_model)
+    h = cfg.num_heads
+    if lay.kind == MLSTM:
+        return {
+            "C": ParamSpec((batch, h, dix // h, dix // h), ("batch", "heads", None, None),
+                           init="zeros"),
+            "n": ParamSpec((batch, h, dix // h), ("batch", "heads", None), init="zeros"),
+            "m": ParamSpec((batch, h), ("batch", "heads"), init="zeros"),
+        }
+    if lay.kind == SLSTM:
+        return {k: ParamSpec((batch, dix), ("batch", "mlp"), init="zeros")
+                for k in ("c", "n", "h", "m")}
+    return None
+
+
+# ---------------- apply ----------------
+
+def _ffn_apply(p, x, cfg, lay, shard):
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if lay.has_moe:
+        out, aux = moe_ffn(p["ffn"], h, k=cfg.experts_per_token,
+                           dispatch=cfg.moe_dispatch, shard=shard)
+        return x + out, aux
+    return x + mlp(p["ffn"], h, shard), 0.0
+
+
+def sublayer_apply(p, x, cfg: ModelConfig, lay: SubLayer, shard, *,
+                   mode: str, cache=None, pos=None, pos3=None, causal=True,
+                   enc_out=None, lora=None, adapter_idx=None):
+    """Apply one sublayer. mode: 'full' (train/prefill) or 'decode'.
+
+    Returns (x, cache', aux_loss). cache' is None unless a cache was provided
+    (prefill fills it; decode updates it).
+    """
+    aux = 0.0
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+
+    if lay.kind == ATTN:
+        if mode == "decode":
+            if pos is None:
+                pos = cache["len"][:, None]                       # rope position
+            if pos3 is None and cfg.mrope_sections is not None:
+                pos3 = jnp.repeat(pos[..., None], 3, axis=-1)     # text: t=h=w
+            out, attn_cache = attn.self_attention_decode(
+                p["attn"], h, cache, cfg, shard, pos=pos, pos3=pos3,
+                lora=lora, adapter_idx=adapter_idx)
+            new_cache = dict(cache, **attn_cache)
+        else:
+            out, (k, v) = attn.self_attention(
+                p["attn"], h, cfg, shard, causal=causal, pos=pos, pos3=pos3,
+                lora=lora, adapter_idx=adapter_idx)
+            new_cache = None
+            if cache is not None:  # prefill: fill the cache
+                S = x.shape[1]
+                new_cache = dict(cache)
+                new_cache["k"] = jnp.zeros_like(cache["k"]).at[:, :S].set(
+                    k.astype(cache["k"].dtype))
+                new_cache["v"] = jnp.zeros_like(cache["v"]).at[:, :S].set(
+                    v.astype(cache["v"].dtype))
+                new_cache["len"] = jnp.full_like(cache["len"], S)
+        x = x + out
+        if lay.has_cross:
+            hx = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+            if mode == "decode":
+                ck, cv = cache["ck"], cache["cv"]
+                o = attn.decode_attention(
+                    jnp.einsum("bsd,dhk->bshk", hx, p["cross"]["wq"].astype(hx.dtype))[:, 0],
+                    ck, cv, jnp.full((hx.shape[0],), ck.shape[1], jnp.int32))
+                x = x + attn.out_project(p["cross"], o[:, None], hx.dtype)
+            else:
+                # train/prefill: project encoder output to cross K/V here
+                ck = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wk"].astype(hx.dtype))
+                cv = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wv"].astype(hx.dtype))
+                if new_cache is not None:  # prefill: persist for decode
+                    new_cache["ck"] = ck.astype(cache["ck"].dtype)
+                    new_cache["cv"] = cv.astype(cache["cv"].dtype)
+                x = x + attn.cross_attention(p["cross"], hx, (ck, cv), cfg, shard)
+        if lay.has_ffn:
+            x, aux = _ffn_apply(p, x, cfg, lay, shard)
+        return x, new_cache, aux
+
+    if lay.kind == MAMBA:
+        if mode == "decode":
+            out, (conv, ssm) = mam.mamba_decode(p["mamba"], h, cfg, shard,
+                                                cache["conv"], cache["ssm"])
+            new_cache = {"conv": conv, "ssm": ssm}
+        else:
+            out, (conv, ssm) = mam.mamba_forward(p["mamba"], h, cfg, shard)
+            new_cache = {"conv": conv, "ssm": ssm} if cache is not None else None
+        x = x + out
+        if lay.has_ffn:
+            x, aux = _ffn_apply(p, x, cfg, lay, shard)
+        return x, new_cache, aux
+
+    if lay.kind == MLSTM:
+        out, state = xl.mlstm_forward(p["mlstm"], h, cfg, shard,
+                                      state=cache if mode == "decode" else None)
+        return x + out, (state if cache is not None else None), aux
+
+    if lay.kind == SLSTM:
+        out, state = xl.slstm_forward(p["slstm"], h, cfg, shard,
+                                      state=cache if mode == "decode" else None)
+        return x + out, (state if cache is not None else None), aux
+
+    raise ValueError(f"unknown block kind {lay.kind}")

@@ -1,0 +1,106 @@
+"""Minimal pure-JAX module system.
+
+Models are described as pytrees of ``ParamSpec`` (shape + logical axes + init).
+From one spec tree we derive:
+  * ``init_params``    — materialized arrays (smoke tests, real serving)
+  * ``shape_structs``  — ``jax.ShapeDtypeStruct`` stand-ins (dry-run, no allocation)
+  * ``logical_axes``   — same-structure tree of logical axis name tuples, consumed by
+                         ``repro.sharding`` to build PartitionSpecs.
+
+No flax dependency; everything is explicit pytrees + pure functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple                  # logical axis names per dim (None = replicated dim)
+    init: str = "normal"         # normal | zeros | ones
+    scale: Optional[float] = None  # default: 1/sqrt(fan_in)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def init_params(rng: jax.Array, spec_tree, dtype=None):
+    """Materialize a spec tree into arrays. ``dtype`` overrides spec dtype."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=_is_spec)
+    rngs = jax.random.split(rng, len(leaves))
+    out = []
+    for spec, key in zip(leaves, rngs):
+        dt = dtype or spec.dtype
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dt))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, dt))
+        else:
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else max(spec.shape[-1], 1)
+            scale = spec.scale if spec.scale is not None else 1.0 / np.sqrt(fan_in)
+            out.append((jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def shape_structs(spec_tree, dtype=None):
+    """ShapeDtypeStruct tree for dry-run lowering — never touches device memory."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype or s.dtype),
+        spec_tree, is_leaf=_is_spec)
+
+
+def logical_axes(spec_tree):
+    """Tree of logical-axis tuples, same structure as the param tree."""
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=_is_spec)
+
+
+def param_bytes(spec_tree, bytes_per_el=4) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=_is_spec)
+    return sum(int(np.prod(s.shape)) * bytes_per_el for s in leaves)
+
+
+def param_count(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=_is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def stack_specs(spec_tree, n: int, axis_name: Optional[str] = "layers"):
+    """Add a leading stacking dim (for lax.scan over layer periods)."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale, s.dtype),
+        spec_tree, is_leaf=_is_spec)
+
+
+class ShardCtx:
+    """Sharding-constraint injector threaded through model code.
+
+    ``shard(x, ("batch", None, "heads"))`` applies a with_sharding_constraint
+    derived from logical-axis rules when a mesh is active, else is a no-op
+    (CPU smoke tests).
+    """
+
+    def __init__(self, rules=None, mesh=None):
+        self.rules = rules
+        self.mesh = mesh
+
+    def __call__(self, x, axes):
+        if self.rules is None or self.mesh is None:
+            return x
+        from repro.sharding.rules import spec_for  # local import to avoid cycle
+        spec = spec_for(self.rules, axes, self.mesh, jnp.shape(x))
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, spec))
+
+
+NO_SHARD = ShardCtx()

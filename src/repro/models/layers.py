@@ -1,0 +1,79 @@
+"""Shared layers: norms, embeddings, RoPE / M-RoPE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+
+# ---------------- norms ----------------
+
+def rmsnorm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), init="ones")
+
+
+def rmsnorm(w, x, eps: float = 1e-5):
+    dt = x.dtype
+    # the barrier pins the residual stream (and the TP psum feeding it) to its
+    # storage dtype: without it XLA hoists this f32 convert above the
+    # all-reduce, doubling every TP collective (§Perf iteration 1)
+    x = jax.lax.optimization_barrier(x)
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+# ---------------- embeddings ----------------
+
+def embed_spec(vocab: int, d: int) -> ParamSpec:
+    return ParamSpec((vocab, d), ("vocab", "embed"), scale=1.0)
+
+
+def embed(tok_w, tokens):
+    return jnp.take(tok_w, tokens, axis=0)
+
+
+def head_spec(d: int, vocab: int) -> ParamSpec:
+    return ParamSpec((d, vocab), ("embed", "vocab"))
+
+
+# ---------------- RoPE ----------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, pos, theta: float = 10000.0):
+    """x: (..., S, H, hd); pos: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    angles = pos[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]                        # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, pos3, sections, theta: float = 10000.0):
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, hd); pos3: (B, S, 3) — temporal/height/width position streams.
+    ``sections`` (e.g. (16, 24, 24)) partitions the hd/2 rotary frequencies,
+    each partition rotated by its own position stream.
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    # section id per frequency
+    sec_id = jnp.repeat(jnp.arange(len(sections)), jnp.array(sections),
+                        total_repeat_length=hd // 2)     # (hd/2,)
+    pos_per_freq = jnp.take_along_axis(
+        pos3.astype(jnp.float32),                        # (B, S, 3)
+        jnp.broadcast_to(sec_id, pos3.shape[:-1] + (hd // 2,)).astype(jnp.int32),
+        axis=-1)                                         # (B, S, hd/2)
+    angles = (pos_per_freq * freqs)[..., None, :]        # (B, S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

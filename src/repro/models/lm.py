@@ -1,0 +1,253 @@
+"""Unified config-driven model: init / forward / loss / prefill / decode.
+
+One implementation serves all 11 configs (decoder LMs, MoE, SSM, hybrid,
+enc-dec, VLM backbone, representation FM). Layers are scanned per *period*
+(see ``repro.models.blocks``), activations are remat'ed in training, and the
+loss is computed in sequence chunks with vocab-sharded logits so the 256k-vocab
+archs never materialize (B, S, V).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as blk
+from repro.models.common import NO_SHARD, ParamSpec, init_params, shape_structs, stack_specs
+from repro.models.layers import embed, embed_spec, head_spec, rmsnorm, rmsnorm_spec
+
+
+# ---------------- specs ----------------
+
+def model_spec(cfg: ModelConfig) -> dict:
+    plen = blk.period_len(cfg)
+    nper = cfg.num_layers // plen
+    layout = blk.period_layout(cfg, cross=cfg.is_encoder_decoder)
+    spec: dict = {
+        "layers": [stack_specs(blk.sublayer_spec(cfg, lay), nper) for lay in layout],
+        "final_norm": rmsnorm_spec(cfg.d_model),
+    }
+    if cfg.vocab_size > 0:
+        spec["embed"] = embed_spec(cfg.vocab_size, cfg.d_model)
+        spec["head"] = head_spec(cfg.d_model, cfg.vocab_size)
+    if cfg.is_representation:
+        spec["head"] = ParamSpec((cfg.d_model, cfg.d_model), ("embed", None))
+    if cfg.is_encoder_decoder:
+        enc_lay = blk.SubLayer(kind="attn", has_moe=False, has_ffn=cfg.d_ff > 0)
+        spec["encoder"] = {
+            "layers": [stack_specs(blk.sublayer_spec(cfg, enc_lay), cfg.encoder_layers)],
+            "final_norm": rmsnorm_spec(cfg.d_model),
+        }
+    return spec
+
+
+def init_model(rng, cfg: ModelConfig, dtype=None):
+    return init_params(rng, model_spec(cfg), dtype=dtype)
+
+
+def model_structs(cfg: ModelConfig, dtype=None):
+    return shape_structs(model_spec(cfg), dtype=dtype)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, s_max: int) -> list:
+    """Stacked per-period decode cache (list over sublayers)."""
+    plen = blk.period_len(cfg)
+    nper = cfg.num_layers // plen
+    layout = blk.period_layout(cfg, cross=cfg.is_encoder_decoder)
+    enc_len = s_max if cfg.is_encoder_decoder else 0
+    return [stack_specs(blk.sublayer_cache_spec(cfg, lay, batch, s_max, enc_len), nper)
+            for lay in layout]
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int):
+    return init_params(jax.random.PRNGKey(0), cache_spec(cfg, batch, s_max))
+
+
+# ---------------- stack forward ----------------
+
+def _stack_forward(layers_p, layout, x, cfg, shard, *, mode, cache, pos, pos3,
+                   causal, enc_out, remat, lora=None, adapter_idx=None):
+    """Scan over periods. Returns (x, new_cache, aux_sum)."""
+    with_cache = cache is not None
+    with_lora = lora is not None
+
+    def body(carry, xs):
+        x = carry
+        xs = list(xs)
+        p_layers = xs.pop(0)
+        cache_layers = xs.pop(0) if with_cache else [None] * len(layout)
+        lora_layers = xs.pop(0) if with_lora else [None] * len(layout)
+        new_caches, aux = [], 0.0
+        for i, lay in enumerate(layout):
+            x, nc, a = blk.sublayer_apply(
+                p_layers[i], x, cfg, lay, shard, mode=mode, cache=cache_layers[i],
+                pos=pos, pos3=pos3, causal=causal, enc_out=enc_out,
+                lora=(lora_layers[i] or None), adapter_idx=adapter_idx)
+            new_caches.append(nc)
+            aux = aux + a
+        # residual-stream boundary constraint: under sequence parallelism the
+        # "seq" rule maps to the model axis, so the scan carry (and the remat
+        # residuals saved per layer) live sharded — see §Perf iteration 1
+        x = shard(x, ("batch", "seq", "embed"))
+        if with_cache:
+            return x, (new_caches, aux)
+        return x, aux
+
+    fn = jax.checkpoint(body) if remat else body
+    xs = [layers_p]
+    if with_cache:
+        xs.append(cache)
+    if with_lora:
+        xs.append(lora)
+    xs = tuple(xs)
+    x, ys = jax.lax.scan(fn, x, xs)
+    if with_cache:
+        new_cache, auxs = ys
+        return x, new_cache, jnp.sum(auxs)
+    return x, None, jnp.sum(ys)
+
+
+def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None, cache=None,
+            mode: str = "full", pos=None, pos3=None, enc_embeds=None,
+            shard=NO_SHARD, remat: bool = False, lora=None, adapter_idx=None):
+    """Backbone forward. Returns (hidden (B,S,d), new_cache, aux_loss).
+
+    Inputs: ``tokens`` (B,S) int32 or ``embeds`` (B,S,d) (stub frontends);
+    enc-dec models additionally take ``enc_embeds`` (B,S_enc,d).
+    """
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        if mode != "decode":
+            enc_lay = [blk.SubLayer(kind="attn", has_moe=False, has_ffn=cfg.d_ff > 0)]
+            e = shard(enc_embeds.astype(jnp.bfloat16), ("batch", None, "embed"))
+            e_pos = jnp.arange(enc_embeds.shape[1])[None]
+            e, _, _ = _stack_forward(params["encoder"]["layers"], enc_lay, e, cfg,
+                                     shard, mode="full", cache=None, pos=e_pos,
+                                     pos3=None, causal=False, enc_out=None,
+                                     remat=remat)
+            enc_out = rmsnorm(params["encoder"]["final_norm"], e, cfg.norm_eps)
+
+    if embeds is None:
+        x = embed(params["embed"].astype(jnp.bfloat16), tokens)
+    else:
+        x = embeds.astype(jnp.bfloat16)
+    x = shard(x, ("batch", None, "embed"))
+
+    if pos is None and mode != "decode":
+        pos = jnp.arange(x.shape[1])[None]
+
+    layout = blk.period_layout(cfg, cross=cfg.is_encoder_decoder)
+    causal = not cfg.is_representation
+    x, new_cache, aux = _stack_forward(
+        params["layers"], layout, x, cfg, shard, mode=mode, cache=cache, pos=pos,
+        pos3=pos3, causal=causal, enc_out=enc_out, remat=remat, lora=lora,
+        adapter_idx=adapter_idx)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, new_cache, aux
+
+
+# ---------------- losses ----------------
+
+def chunked_ce_loss(head_w, x, labels, weights, shard, chunk: int = 512,
+                    true_vocab: Optional[int] = None):
+    """Cross-entropy over vocab-sharded logits, scanned in sequence chunks.
+
+    x: (B, S, d); labels/weights: (B, S). Never materializes (B, S, V).
+    ``true_vocab``: mask out TP-padding vocab entries (see sharding.padding).
+    """
+    B, S, d = x.shape
+    V = head_w.shape[-1]
+    c = min(S, chunk)
+    while S % c:
+        c -= 1
+    n = S // c
+    xs = (x.reshape(B, n, c, d).swapaxes(0, 1),
+          labels.reshape(B, n, c).swapaxes(0, 1),
+          weights.reshape(B, n, c).swapaxes(0, 1))
+    pad_mask = None
+    if true_vocab is not None and true_vocab < V:
+        pad_mask = jnp.where(jnp.arange(V) < true_vocab, 0.0, -1e30)
+
+    def step(acc, t):
+        xc, lc, wc = t
+        logits = jnp.einsum("bsd,dv->bsv", xc.astype(jnp.float32),
+                            head_w.astype(jnp.float32))
+        logits = shard(logits, ("batch", None, "vocab"))
+        if pad_mask is not None:
+            logits = logits + pad_mask
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum((lse - gold) * wc), None
+
+    # remat: never keep per-chunk logits alive for the backward pass
+    tot, _ = jax.lax.scan(jax.checkpoint(step), jnp.zeros((), jnp.float32), xs)
+    return tot / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, shard=NO_SHARD,
+            remat: bool = True, aux_weight: float = 0.01):
+    """batch keys: tokens | embeds (+labels), enc_embeds, pos3, weights."""
+    tokens = batch.get("tokens")
+    embeds = batch.get("embeds")
+    x, _, aux = forward(params, cfg, tokens=tokens, embeds=embeds,
+                        enc_embeds=batch.get("enc_embeds"), pos3=batch.get("pos3"),
+                        shard=shard, remat=remat)
+    if cfg.is_representation:
+        # masked-reconstruction pretext (MOMENT-style): predict input embeddings
+        recon = jnp.einsum("bsd,de->bse", x, params["head"].astype(x.dtype))
+        err = (recon.astype(jnp.float32) - embeds.astype(jnp.float32)) ** 2
+        loss = jnp.mean(err)
+        return loss, {"loss": loss, "aux": aux}
+    if "labels" in batch:
+        labels, weights = batch["labels"], jnp.ones_like(batch["labels"], jnp.float32)
+    else:
+        labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+        weights = jnp.concatenate(
+            [jnp.ones((tokens.shape[0], tokens.shape[1] - 1), jnp.float32),
+             jnp.zeros((tokens.shape[0], 1), jnp.float32)], axis=1)
+    ce = chunked_ce_loss(params["head"], x, labels, weights, shard,
+                         true_vocab=cfg.true_vocab)
+    loss = ce + aux_weight * aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+# ---------------- serving steps ----------------
+
+def prefill(params, cfg: ModelConfig, *, tokens=None, embeds=None, enc_embeds=None,
+            pos3=None, cache, shard=NO_SHARD):
+    """Fill the decode cache from a prompt. Returns (last_logits, cache)."""
+    x, cache, _ = forward(params, cfg, tokens=tokens, embeds=embeds,
+                          enc_embeds=enc_embeds, pos3=pos3, cache=cache,
+                          mode="full", shard=shard)
+    last = x[:, -1]
+    if "head" in params and cfg.vocab_size > 0:
+        logits = jnp.einsum("bd,dv->bv", last.astype(jnp.float32),
+                            params["head"].astype(jnp.float32))
+        logits = shard(logits, ("batch", "vocab"))
+        return logits, cache
+    return last, cache
+
+
+def decode_step(params, cfg: ModelConfig, *, tokens=None, embeds=None, cache,
+                shard=NO_SHARD, lora=None, adapter_idx=None):
+    """One-token serve step. tokens: (B,) int32 or embeds: (B, d).
+    ``lora``/``adapter_idx``: co-batched multi-task serving (FMplex vFMs)."""
+    if embeds is None:
+        x = embed(params["embed"].astype(jnp.bfloat16), tokens[:, None])
+    else:
+        x = embeds[:, None].astype(jnp.bfloat16)
+    x, cache, _ = forward(params, cfg, embeds=x, cache=cache, mode="decode",
+                          shard=shard, lora=lora, adapter_idx=adapter_idx)
+    logits = jnp.einsum("bd,dv->bv", x[:, 0].astype(jnp.float32),
+                        params["head"].astype(jnp.float32))
+    logits = shard(logits, ("batch", "vocab"))
+    return logits, cache
+
+
+def backbone_features(params, cfg: ModelConfig, embeds, shard=NO_SHARD):
+    """Representation-FM forward (MOMENT-style): embeds -> features (B, S, d)."""
+    x, _, _ = forward(params, cfg, embeds=embeds, shard=shard)
+    return x

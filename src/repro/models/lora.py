@@ -1,0 +1,88 @@
+"""Multi-adapter backbone LoRA (FMplex task customization, S-LoRA style).
+
+Adapters attach to the q and v projections of every attention sublayer. A
+*stack* holds all co-resident adapters of a physical FM: leaves are shaped
+(num_periods, NA, ...) so they scan with the layer periods. Each request
+carries ``adapter_idx`` (B,) int32 — the sentinel NA means "base model".
+
+Two execution paths:
+  * gather-einsum (default, GSPMD-friendly): per-request A/B gathered then
+    applied — exact, used in training and the dry-run;
+  * segmented Pallas kernel (TPU serve path, ``repro.kernels.segmented_lora``)
+    for adapter-sorted batches.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ModelConfig
+from repro.models.common import ParamSpec, stack_specs
+
+
+def lora_sublayer_spec(cfg: ModelConfig, num_adapters: int, rank: int) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    mk = lambda out: {
+        "a": ParamSpec((num_adapters, d, rank), ("adapters", "embed", None),
+                       scale=0.05),
+        "b": ParamSpec((num_adapters, rank, out), ("adapters", None, "heads_flat"),
+                       init="zeros"),
+    }
+    return {"q": mk(h * hd), "v": mk(kv * hd)}
+
+
+def lora_spec(cfg: ModelConfig, num_adapters: int, rank: int) -> list:
+    """Per-sublayer stacked spec list matching ``lm.model_spec`` layers."""
+    from repro.models import blocks as blk
+    plen = blk.period_len(cfg)
+    nper = cfg.num_layers // plen
+    layout = blk.period_layout(cfg, cross=cfg.is_encoder_decoder)
+    out = []
+    for lay in layout:
+        if lay.kind == ATTN:
+            out.append(stack_specs(lora_sublayer_spec(cfg, num_adapters, rank), nper))
+        else:
+            out.append(stack_specs({}, nper))
+    return out
+
+
+def apply_lora_delta(x, a_stack, b_stack, adapter_idx):
+    """Gather-based per-request LoRA delta.
+
+    x: (B, S, d); a_stack: (NA, d, r); b_stack: (NA, r, out);
+    adapter_idx: (B,) with NA == "no adapter". Returns (B, S, out).
+    """
+    na = a_stack.shape[0]
+    safe = jnp.minimum(adapter_idx, na - 1)
+    a = a_stack[safe].astype(x.dtype)                    # (B, d, r)
+    b = b_stack[safe].astype(x.dtype)                    # (B, r, out)
+    h = jnp.einsum("bsd,bdr->bsr", x, a)
+    delta = jnp.einsum("bsr,bro->bso", h, b)
+    return jnp.where((adapter_idx < na)[:, None, None], delta,
+                     jnp.zeros_like(delta))
+
+
+def qv_lora(x, lora_sub: Optional[dict], adapter_idx, q, v):
+    """Add LoRA deltas to projected q/v. q: (B,S,H,hd); v: (B,S,KV,hd)."""
+    if lora_sub is None or not lora_sub or adapter_idx is None:
+        return q, v
+    B, S, H, hd = q.shape
+    KV = v.shape[2]
+    dq = apply_lora_delta(x, lora_sub["q"]["a"], lora_sub["q"]["b"], adapter_idx)
+    dv = apply_lora_delta(x, lora_sub["v"]["a"], lora_sub["v"]["b"], adapter_idx)
+    return q + dq.reshape(B, S, H, hd), v + dv.reshape(B, S, KV, hd)
+
+
+def init_single_adapter(rng, cfg: ModelConfig, rank: int):
+    """One adapter's weights (NA=1 stack) — Task-API fine-tuning target."""
+    from repro.models.common import init_params
+    return init_params(rng, lora_spec(cfg, 1, rank))
+
+
+def stack_adapters(adapters: list):
+    """Combine per-adapter pytrees (NA=1 each) into one NA=n stack."""
+    def cat(*xs):
+        return jnp.concatenate(xs, axis=1)   # axis 1: (nper, NA, ...)
+    return jax.tree.map(cat, *adapters)

@@ -1,0 +1,113 @@
+"""Mamba (selective SSM) block for Jamba's hybrid stack.
+
+TPU adaptation: the recurrence is evaluated chunkwise — ``lax.scan`` over
+sequence chunks carrying the SSM state, with the full (chunk × d_state) update
+materialized per step. This bounds the lowered temp footprint (the naive
+associative-scan form materializes B×S×d_in×d_state states, which fails
+memory_analysis at 4k×8k-wide configs) while keeping per-chunk compute dense
+for the MXU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+
+def mamba_spec(cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+    dc = cfg.mamba_d_conv
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "mlp")),
+        "conv_w": ParamSpec((dc, di), (None, "mlp"), scale=0.5),
+        "conv_b": ParamSpec((di,), ("mlp",), init="zeros"),
+        "x_bc": ParamSpec((di, 2 * ds), ("mlp", None)),
+        "x_dt": ParamSpec((di, 1), ("mlp", None)),
+        "dt_bias": ParamSpec((di,), ("mlp",), init="zeros"),
+        "A_log": ParamSpec((di, ds), ("mlp", None), init="zeros"),
+        "D": ParamSpec((di,), ("mlp",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def _ssm_chunk(x, dt, B, C, A, D, h0):
+    """Sequential scan over one chunk. x/dt: (T, di); B/C: (T, ds); h0: (di, ds)."""
+    dA = jnp.exp(dt[:, :, None] * A[None])                 # (T, di, ds)
+    dBx = dt[:, :, None] * B[:, None, :] * x[:, :, None]   # (T, di, ds)
+
+    def step(h, t):
+        dA_t, dBx_t = t
+        h = h * dA_t + dBx_t
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0, (dA, dBx))
+    y = jnp.einsum("tds,ts->td", hs, C) + x * D[None]
+    return y, hT
+
+
+def mamba_forward(p, x, cfg, shard, conv_state=None, ssm_state=None,
+                  chunk: int = 128):
+    """x: (B, S, d). Returns (y, (conv_state, ssm_state)) — states are the
+    decode cache. Prefill/train: pass states=None."""
+    Bsz, S, d = x.shape
+    di = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+    dc = cfg.mamba_d_conv
+    dt_x = x.dtype
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_x))
+    xin, z = jnp.split(xz, 2, axis=-1)                     # (B, S, di) each
+    xin = shard(xin, ("batch", None, "mlp"))
+
+    # causal depthwise conv (width dc)
+    if conv_state is None:
+        conv_state = jnp.zeros((Bsz, dc - 1, di), dt_x)
+    xpad = jnp.concatenate([conv_state, xin], axis=1)      # (B, S+dc-1, di)
+    new_conv_state = xpad[:, -(dc - 1):] if dc > 1 else conv_state
+    w = p["conv_w"].astype(dt_x)
+    xc = sum(xpad[:, i:i + S] * w[i][None, None] for i in range(dc))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(dt_x))
+
+    bc = jnp.einsum("bsd,dn->bsn", xc, p["x_bc"].astype(dt_x)).astype(jnp.float32)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                     # (B, S, ds)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dr->bs", xc, p["x_dt"].astype(dt_x)).astype(jnp.float32)[..., None]
+        + p["dt_bias"].astype(jnp.float32))                # (B, S, di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))           # (di, ds)
+    D = p["D"].astype(jnp.float32)
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((Bsz, di, ds), jnp.float32)
+
+    c = min(S, chunk)
+    while S % c:
+        c -= 1
+    n = S // c
+
+    def batch_row(xr, dtr, Br, Cr, h0):
+        @jax.checkpoint
+        def step(h, t):
+            # remat per chunk: the backward pass recomputes the in-chunk state
+            # trajectory instead of saving (c, di, d_state) tensors per chunk
+            xt, dtt, Bt, Ct = t
+            y, h = _ssm_chunk(xt, dtt, Bt, Ct, A, D, h)
+            return h, y
+        hT, ys = jax.lax.scan(
+            step, h0,
+            (xr.reshape(n, c, di).astype(jnp.float32), dtr.reshape(n, c, di),
+             Br.reshape(n, c, ds), Cr.reshape(n, c, ds)))
+        return ys.reshape(S, di), hT
+
+    y, hT = jax.vmap(batch_row)(xc, dt, Bm, Cm, ssm_state)
+    y = y.astype(dt_x) * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(dt_x))
+    return out, (new_conv_state, hT)
+
+
+def mamba_decode(p, x, cfg, shard, conv_state, ssm_state):
+    """One-step decode. x: (B, 1, d); conv_state: (B, dc-1, di); ssm: (B, di, ds)."""
+    return mamba_forward(p, x, cfg, shard, conv_state=conv_state,
+                         ssm_state=ssm_state, chunk=1)

@@ -1,0 +1,25 @@
+"""Gated (SwiGLU) feed-forward."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+
+def mlp_spec(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wi_gate": ParamSpec((d, f), ("embed", "mlp")),
+        "wi_up": ParamSpec((d, f), ("embed", "mlp")),
+        "wo": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp(p, x, shard):
+    dt = x.dtype
+    g = jnp.einsum("bsd,df->bsf", x, p["wi_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    h = shard(h, ("batch", None, "mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt))

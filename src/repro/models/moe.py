@@ -1,0 +1,249 @@
+"""Top-k Mixture-of-Experts FFN with expert parallelism.
+
+Two dispatch strategies (selected by ``dispatch=``):
+
+* ``"gshard"`` — classic capacity-based one-hot einsum dispatch (GShard/Switch).
+  Memory-sane via per-sequence-subgroup scanning, shards cleanly under GSPMD
+  (experts → ``model`` axis). This is the baseline the roofline measures. Its
+  known cost: the dispatch/combine einsums add O(T·E·C·d) FLOPs, which dominates
+  for small-``d_ff`` archs (olmoe) — see EXPERIMENTS.md §Perf.
+* ``"scatter"`` — gather/scatter-based dispatch: O(T·k·d) data movement, no
+  dense dispatch FLOPs. The beyond-paper optimization for compute-bound MoE.
+
+Both share the same router and capacity math; a pure-jnp per-token loop oracle
+(``moe_ref``) pins correctness in tests.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+
+def moe_spec(cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": ParamSpec((d, e), ("embed", "experts_v")),
+        "wi_gate": ParamSpec((e, d, f), ("experts", "embed", "mlp")),
+        "wi_up": ParamSpec((e, d, f), ("experts", "embed", "mlp")),
+        "wo": ParamSpec((e, f, d), ("experts", "mlp", "embed")),
+    }
+
+
+def capacity(group: int, k: int, num_experts: int, factor: float = 1.25) -> int:
+    c = int(group * k / num_experts * factor)
+    c = max(c, k)
+    return (c + 7) // 8 * 8 if c > 8 else c
+
+
+def _router(p, xg, k):
+    """xg: (g, d) -> gates (g, k), idx (g, k), load-balance aux loss."""
+    logits = jnp.einsum("gd,de->ge", xg.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_k, idx_k = jax.lax.top_k(probs, k)
+    gate_k = gate_k / jnp.maximum(gate_k.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum(frac_tokens * frac_probs)
+    e = probs.shape[-1]
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[idx_k.reshape(-1)].add(1.0) / idx_k.size
+    aux = e * jnp.sum(me * ce)
+    return gate_k, idx_k, aux
+
+
+def _positions(idx_k, num_experts, cap):
+    """Slot assignment: (g, k) expert ids -> (pos_in_expert, keep) each (g, k).
+
+    First choices get priority over second choices (k-major order), matching
+    GShard.
+    """
+    g, k = idx_k.shape
+    mask = jax.nn.one_hot(idx_k, num_experts, dtype=jnp.int32)      # (g, k, E)
+    mflat = mask.transpose(1, 0, 2).reshape(k * g, num_experts)     # k-major
+    pos_flat = jnp.cumsum(mflat, axis=0) - mflat                    # (k*g, E)
+    pos = (pos_flat.reshape(k, g, num_experts) * mask.transpose(1, 0, 2)).sum(-1)
+    pos = pos.transpose(1, 0)                                        # (g, k)
+    keep = pos < cap
+    return pos, keep
+
+
+def _expert_ffn(p, x_e, shard):
+    """x_e: (E, C, d) -> (E, C, d), experts sharded over 'model'."""
+    dt = x_e.dtype
+    x_e = shard(x_e, ("experts", None, None))
+    g = jnp.einsum("ecd,edf->ecf", x_e, p["wi_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", x_e, p["wi_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    h = shard(h, ("experts", None, "mlp"))
+    out = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt))
+    return shard(out, ("experts", None, None))
+
+
+def _group_gshard(p, xg, k, cap, shard):
+    """One subgroup, einsum dispatch. xg: (B, g, d) -> (B, g, d), aux."""
+    gate_k, idx_k, aux = jax.vmap(lambda t: _router(p, t, k))(xg)
+    e = p["router"].shape[-1]
+
+    def per_row(xr, gr, ir):
+        pos, keep = _positions(ir, e, cap)
+        # dispatch one-hots, summed over k: (g, E, C)
+        oh = (jax.nn.one_hot(ir, e, dtype=xr.dtype)[..., None]
+              * jax.nn.one_hot(pos, cap, dtype=xr.dtype)[..., None, :]
+              * keep[..., None, None].astype(xr.dtype))              # (g, k, E, C)
+        dispatch = oh.sum(axis=1)                                    # (g, E, C)
+        combine = (oh * gr[..., None, None].astype(xr.dtype)).sum(axis=1)
+        x_e = jnp.einsum("gec,gd->ecd", dispatch, xr)
+        y_e = _expert_ffn(p, x_e, shard)
+        return jnp.einsum("gec,ecd->gd", combine, y_e)
+
+    out = jax.vmap(per_row)(xg, gate_k, idx_k)
+    return out, aux.mean()
+
+
+def _group_scatter(p, xg, k, cap, shard):
+    """One subgroup, scatter/gather dispatch. xg: (B, g, d) -> (B, g, d), aux."""
+    e = p["router"].shape[-1]
+
+    def per_row(xr, gr, ir):
+        g = xr.shape[0]
+        pos, keep = _positions(ir, e, cap)
+        slot = jnp.where(keep, ir * cap + pos, e * cap)              # overflow slot
+        tok = jnp.broadcast_to(jnp.arange(g)[:, None], (g, k)).reshape(-1)
+        x_e = jnp.zeros((e * cap + 1, xr.shape[-1]), xr.dtype)
+        x_e = x_e.at[slot.reshape(-1)].set(xr[tok], mode="drop")
+        y_e = _expert_ffn(p, x_e[:-1].reshape(e, cap, -1), shard)
+        y_tok = y_e.reshape(e * cap, -1)[jnp.minimum(slot, e * cap - 1).reshape(-1)]
+        y_tok = y_tok.reshape(g, k, -1) * (keep * gr).astype(xr.dtype)[..., None]
+        return y_tok.sum(axis=1)
+
+    gate_k, idx_k, aux = jax.vmap(lambda t: _router(p, t, k))(xg)
+    out = jax.vmap(per_row)(xg, gate_k, idx_k)
+    return out, aux.mean()
+
+
+def moe_ffn(p, x, *, k: int,
+            dispatch: Literal["gshard", "scatter", "ep"] = "gshard",
+            subgroup: int = 1024, shard=None):
+    """x: (B, S, d) -> (B, S, d), aux_loss. Scans over seq subgroups to bound
+    dispatch-tensor memory; vmaps over batch (sharded over data axes).
+
+    dispatch="ep" uses explicit shard_map expert parallelism (local
+    scatter/gather dispatch + a single bf16 psum over the model axis) — the
+    §Perf replacement for both the gshard einsum (compute waste) and the
+    GSPMD-global scatter (collective explosion)."""
+    from repro.models.common import NO_SHARD
+    shard = shard or NO_SHARD
+    if dispatch == "ep":
+        out = _moe_ep(p, x, k, shard)
+        if out is not None:
+            return out
+        dispatch = "gshard"   # mesh/divisibility fallback
+    B, S, d = x.shape
+    gc = min(S, subgroup)
+    while S % gc:
+        gc -= 1
+    nsub = S // gc
+    e = p["router"].shape[-1]
+    cap = capacity(gc, k, e)
+    fn = _group_gshard if dispatch == "gshard" else _group_scatter
+
+    if nsub == 1:
+        out, aux = fn(p, x, k, cap, shard)
+        return out, aux
+
+    xs = x.reshape(B, nsub, gc, d).swapaxes(0, 1)                    # (nsub, B, gc, d)
+
+    def step(_, xsub):
+        out, aux = fn(p, xsub, k, cap, shard)
+        return None, (out, aux)
+
+    _, (outs, auxs) = jax.lax.scan(step, None, xs)
+    return outs.swapaxes(0, 1).reshape(B, S, d), auxs.mean()
+
+
+def _moe_ep(p, x, k: int, shard):
+    """shard_map expert parallelism.
+
+    Tokens stay sharded over the batch axes and replicated over 'model'; each
+    model rank routes ALL its local tokens but dispatches (locally, via
+    scatter) only to the experts it owns, runs its expert FFNs, combines
+    locally, and a single psum over 'model' assembles the output — identical
+    capacity/drop semantics to the gshard path (same _positions), but the only
+    collective is one activation-sized bf16 all-reduce. Returns None when the
+    mesh or expert count doesn't fit (caller falls back to gshard)."""
+    import jax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = getattr(shard, "mesh", None)
+    e = p["router"].shape[-1]
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    M = mesh.shape["model"]
+    if e % M != 0:
+        return None
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    B, S, d = x.shape
+    dp = 1
+    for a in batch_axes:
+        dp *= mesh.shape[a]
+    if B % dp != 0:
+        return None
+    e_loc = e // M
+    t_loc = (B // dp) * S
+    cap = capacity(t_loc, k, e)
+
+    def local_fn(xl, router_w, wg, wu, wo):
+        b_loc, s, _ = xl.shape
+        xf = xl.reshape(b_loc * s, d)
+        gate_k, idx_k, aux = _router({"router": router_w}, xf, k)
+        pos, keep = _positions(idx_k, e, cap)
+        m_idx = jax.lax.axis_index("model")
+        is_local = (idx_k // e_loc) == m_idx
+        keep_loc = keep & is_local
+        slot = jnp.where(keep_loc, (idx_k % e_loc) * cap + pos, e_loc * cap)
+        tok = jnp.broadcast_to(jnp.arange(b_loc * s)[:, None],
+                               (b_loc * s, k)).reshape(-1)
+        x_e = jnp.zeros((e_loc * cap + 1, d), xf.dtype)
+        x_e = x_e.at[slot.reshape(-1)].set(xf[tok])
+        x_e = x_e[:-1].reshape(e_loc, cap, d)
+        g = jnp.einsum("ecd,edf->ecf", x_e, wg.astype(xf.dtype))
+        u = jnp.einsum("ecd,edf->ecf", x_e, wu.astype(xf.dtype))
+        y_e = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                         wo.astype(xf.dtype))
+        y_tok = y_e.reshape(e_loc * cap, d)[
+            jnp.minimum(slot, e_loc * cap - 1).reshape(-1)]
+        y = (y_tok.reshape(b_loc * s, k, d)
+             * (keep_loc * gate_k).astype(xf.dtype)[..., None]).sum(axis=1)
+        y = jax.lax.psum(y, "model")
+        if batch_axes:
+            aux = jax.lax.pmean(aux, batch_axes)
+        return y.reshape(b_loc, s, d), aux
+
+    xspec = P(batch_axes if batch_axes else None, None, None)
+    out, aux = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(xspec, P(None, None), P("model", None, None),
+                  P("model", None, None), P("model", None, None)),
+        out_specs=(xspec, P()),
+        check_rep=False,
+    )(x, p["router"], p["wi_gate"], p["wi_up"], p["wo"])
+    return out, aux.mean()
+
+
+def moe_ref(p, x, k: int):
+    """Dense per-token oracle (no capacity drops) for unit tests."""
+    B, S, d = x.shape
+    xf = x.reshape(-1, d)
+    gate_k, idx_k, _ = _router(p, xf, k)
+    outs = []
+    for t in range(xf.shape[0]):
+        acc = jnp.zeros((d,), jnp.float32)
+        for j in range(k):
+            w = p["wi_gate"][idx_k[t, j]], p["wi_up"][idx_k[t, j]], p["wo"][idx_k[t, j]]
+            h = jax.nn.silu(xf[t] @ w[0]) * (xf[t] @ w[1])
+            acc += gate_k[t, j] * (h @ w[2]).astype(jnp.float32)
+        outs.append(acc)
+    return jnp.stack(outs).reshape(B, S, d).astype(x.dtype)

@@ -1,0 +1,158 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory, exp gating).
+
+Both are implemented in their exact recurrent form via ``lax.scan`` over time —
+the same code path serves train/prefill (full sequence) and decode (S=1 with a
+carried state), which is what makes xLSTM the O(1)-per-token arch that the
+``long_500k`` cell exercises. States are stabilized in log space per the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+
+def _di(cfg) -> int:
+    return int(cfg.xlstm_proj_factor * cfg.d_model)
+
+
+def _chunked_scan(step, state, xs, S: int, chunk: int = 64):
+    """Time scan in remat'ed chunks: the backward pass keeps only per-chunk
+    boundary states alive instead of one (B,H,hd,hd) matrix memory per step —
+    without this, 4k-step training saves ~40 GB of states per device."""
+    c = min(S, chunk)
+    while S % c:
+        c -= 1
+    n = S // c
+    xs_c = jax.tree.map(lambda a: a.reshape((n, c) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def chunk_step(st, xc):
+        return jax.lax.scan(step, st, xc)
+
+    state, ys = jax.lax.scan(chunk_step, state, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape((n * c,) + a.shape[2:]), ys)
+    return state, ys
+
+
+# ---------------- mLSTM ----------------
+
+def mlstm_spec(cfg) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    di = _di(cfg)
+    hd = di // h
+    return {
+        "up": ParamSpec((d, 2 * di), ("embed", "mlp")),
+        "wq": ParamSpec((di, h, hd), ("mlp", "heads", None)),
+        "wk": ParamSpec((di, h, hd), ("mlp", "heads", None)),
+        "wv": ParamSpec((di, h, hd), ("mlp", "heads", None)),
+        "wif": ParamSpec((di, 2 * h), ("mlp", None), scale=0.1),
+        "b_if": ParamSpec((2 * h,), (None,), init="zeros"),
+        "down": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def mlstm_init_state(cfg, batch):
+    h = cfg.num_heads
+    hd = _di(cfg) // h
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_forward(p, x, cfg, shard, state=None):
+    """x: (B, S, d) -> (y, state'). Exact recurrence, scan over S."""
+    B, S, d = x.shape
+    h = cfg.num_heads
+    di = _di(cfg)
+    hd = di // h
+    dt = x.dtype
+
+    xz = jnp.einsum("bsd,de->bse", x, p["up"].astype(dt))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard(xin, ("batch", None, "mlp"))
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    q = jnp.einsum("bsd,dhk->bshk", xin, p["wq"].astype(dt)).astype(jnp.float32)
+    k = (jnp.einsum("bsd,dhk->bshk", xin, p["wk"].astype(dt)).astype(jnp.float32) * scale)
+    v = jnp.einsum("bsd,dhk->bshk", xin, p["wv"].astype(dt)).astype(jnp.float32)
+    ifl = (jnp.einsum("bsd,dg->bsg", xin, p["wif"].astype(dt)).astype(jnp.float32)
+           + p["b_if"].astype(jnp.float32))
+    i_log, f_raw = jnp.split(ifl, 2, axis=-1)              # (B, S, H)
+    f_log = -jax.nn.softplus(-f_raw)                       # log sigmoid(f)
+
+    if state is None:
+        state = mlstm_init_state(cfg, B)
+
+    def step(st, t):
+        qt, kt, vt, il, fl = t                             # (B,H,hd) ×3, (B,H) ×2
+        m_new = jnp.maximum(fl + st["m"], il)
+        i_g = jnp.exp(il - m_new)[..., None]               # (B,H,1)
+        f_g = jnp.exp(fl + st["m"] - m_new)[..., None]
+        C = f_g[..., None] * st["C"] + i_g[..., None] * (vt[..., :, None] * kt[..., None, :])
+        n = f_g * st["n"] + i_g * kt
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), jnp.exp(-m_new))
+        return {"C": C, "n": n, "m": m_new}, num / den[..., None]
+
+    state, hs = _chunked_scan(step, state,
+                              (q.swapaxes(0, 1), k.swapaxes(0, 1),
+                               v.swapaxes(0, 1), i_log.swapaxes(0, 1),
+                               f_log.swapaxes(0, 1)), S)
+    y = hs.swapaxes(0, 1).reshape(B, S, di).astype(dt)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bsd,de->bse", y, p["down"].astype(dt)), state
+
+
+# ---------------- sLSTM ----------------
+
+def slstm_spec(cfg) -> dict:
+    d = cfg.d_model
+    di = _di(cfg)
+    return {
+        "up": ParamSpec((d, di), ("embed", "mlp")),
+        "w": ParamSpec((di, 4 * di), ("mlp", None), scale=0.05),
+        "r": ParamSpec((di, 4 * di), ("mlp", None), scale=0.05),
+        "b": ParamSpec((4 * di,), (None,), init="zeros"),
+        "down": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def slstm_init_state(cfg, batch):
+    di = _di(cfg)
+    z = lambda: jnp.zeros((batch, di), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, di), -1e30, jnp.float32)}
+
+
+def slstm_forward(p, x, cfg, shard, state=None):
+    """x: (B, S, d) -> (y, state'). Inherently sequential (recurrent h)."""
+    B, S, d = x.shape
+    di = _di(cfg)
+    dt = x.dtype
+    xin = jnp.einsum("bsd,de->bse", x, p["up"].astype(dt))
+    xin = shard(xin, ("batch", None, "mlp"))
+    wx = (jnp.einsum("bsd,dg->bsg", xin, p["w"].astype(dt)).astype(jnp.float32)
+          + p["b"].astype(jnp.float32))
+    r = p["r"].astype(jnp.float32)
+    if state is None:
+        state = slstm_init_state(cfg, B)
+
+    def step(st, wxt):
+        gates = wxt + st["h"] @ r                          # (B, 4di)
+        zi, ii, fi, oi = jnp.split(gates, 4, axis=-1)
+        zt = jnp.tanh(zi)
+        ot = jax.nn.sigmoid(oi)
+        f_log = -jax.nn.softplus(-fi)
+        m_new = jnp.maximum(f_log + st["m"], ii)
+        i_g = jnp.exp(ii - m_new)
+        f_g = jnp.exp(f_log + st["m"] - m_new)
+        c = f_g * st["c"] + i_g * zt
+        n = jnp.maximum(f_g * st["n"] + i_g, 1e-6)
+        h = ot * c / n
+        return {"c": c, "n": n, "h": h, "m": m_new}, h
+
+    state, hs = _chunked_scan(step, state, wx.swapaxes(0, 1), S)
+    y = hs.swapaxes(0, 1).astype(dt)
+    return jnp.einsum("bsd,de->bse", y, p["down"].astype(dt)), state

@@ -1,0 +1,1 @@
+from repro.serving import loadgen, metrics, simulator  # noqa

@@ -1,0 +1,65 @@
+"""Workload generators (paper §7.1.3): Poisson sweeps, noisy-neighbor bursts,
+and an Azure-Functions-like trace (lognormal per-task rates in low/moderate/
+high load bands, with bursty on/off periods)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.request import SLO, Request
+
+
+def poisson_trace(task_id: str, rps: float, horizon: float, *, seed: int = 0,
+                  slo_s: float | None = None, start: float = 0.0) -> list[Request]:
+    rng = np.random.RandomState(seed)
+    t, out = start, []
+    while True:
+        t += rng.exponential(1.0 / rps)
+        if t >= start + horizon:
+            break
+        out.append(Request(task_id, t, slo=SLO(slo_s)))
+    return out
+
+
+def burst_trace(task_id: str, base_rps: float, burst_rps: float,
+                burst_start: float, burst_len: float, horizon: float,
+                *, seed: int = 0, slo_s: float | None = None) -> list[Request]:
+    """Steady -> spike -> steady (noisy-neighbor pattern, paper Fig. 13)."""
+    a = poisson_trace(task_id, base_rps, burst_start, seed=seed, slo_s=slo_s)
+    b = poisson_trace(task_id, burst_rps, burst_len, seed=seed + 1,
+                      slo_s=slo_s, start=burst_start)
+    c = poisson_trace(task_id, base_rps, horizon - burst_start - burst_len,
+                      seed=seed + 2, slo_s=slo_s, start=burst_start + burst_len)
+    return a + b + c
+
+
+# Azure-Functions-like load bands, requests-per-MINUTE (paper §7.1.3)
+LOAD_BANDS = {"low": (6, 60), "moderate": (60, 600), "high": (600, 1800)}
+
+
+def azure_like_tasks(n_tasks: int, band: str, horizon: float, *, seed: int = 0,
+                     slo_s: float | None = None):
+    """Sample per-task mean rates log-uniformly within the band; each task is
+    bursty: on/off periods with 3x rate multiplier when 'hot'."""
+    lo, hi = LOAD_BANDS[band]
+    rng = np.random.RandomState(seed)
+    traces = {}
+    for i in range(n_tasks):
+        tid = f"task{i}"
+        rpm = float(np.exp(rng.uniform(np.log(lo), np.log(hi))))
+        rps = rpm / 60.0
+        reqs, t = [], 0.0
+        hot = rng.rand() < 0.3
+        while t < horizon:
+            period = rng.exponential(20.0)
+            rate = rps * (3.0 if hot else 0.7)
+            reqs += poisson_trace(tid, max(rate, 1e-3), min(period, horizon - t),
+                                  seed=rng.randint(1 << 30), slo_s=slo_s, start=t)
+            t += period
+            hot = not hot
+        traces[tid] = sorted(reqs, key=lambda r: r.arrival)
+    return traces
+
+
+def merge(traces) -> list[Request]:
+    out = [r for t in traces for r in (t if isinstance(t, list) else traces[t])]
+    return sorted(out, key=lambda r: r.arrival)

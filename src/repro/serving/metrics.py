@@ -1,0 +1,64 @@
+"""Latency / throughput / fairness metrics (paper §7.1.4)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def percentile(xs, p):
+    if not len(xs):
+        return float("nan")
+    return float(np.percentile(np.asarray(xs, float), p))
+
+
+def latency_stats(requests) -> dict:
+    lats = [r.latency for r in requests if r.latency is not None]
+    if not lats:
+        return {"n": 0}
+    return {
+        "n": len(lats),
+        "mean_ms": 1e3 * float(np.mean(lats)),
+        "p50_ms": 1e3 * percentile(lats, 50),
+        "p99_ms": 1e3 * percentile(lats, 99),
+        "max_ms": 1e3 * float(np.max(lats)),
+    }
+
+
+def jain_fairness(shares: dict[str, float], weights: dict[str, float]) -> float:
+    """Jain index over weight-normalized service shares (Elliott [16] style).
+
+    1.0 = every task received service exactly proportional to its weight.
+    Tasks with zero share count against fairness.
+    """
+    xs = np.array([shares.get(t, 0.0) / max(weights[t], 1e-12) for t in weights],
+                  float)
+    if xs.sum() <= 0:
+        return 1.0
+    n = len(xs)
+    return float(xs.sum() ** 2 / (n * (xs ** 2).sum() + 1e-30))
+
+
+def throughput_timeline(requests, window: float, horizon: float):
+    """Per-task completions/s in consecutive windows -> {task: [rps...]}."""
+    import collections
+    out = collections.defaultdict(lambda: [0] * max(int(horizon / window), 1))
+    for r in requests:
+        if r.finish_time is None:
+            continue
+        w = min(int(r.finish_time / window), len(out[r.task_id]) - 1) \
+            if out[r.task_id] else 0
+        out[r.task_id][w] += 1
+    return {t: [c / window for c in cs] for t, cs in out.items()}
+
+
+def fairness_timeline(requests, weights: dict[str, float], window: float,
+                      horizon: float):
+    thr = throughput_timeline(requests, window, horizon)
+    nwin = max(int(horizon / window), 1)
+    out = []
+    for w in range(nwin):
+        shares = {t: (thr.get(t, [0] * nwin)[w] if w < len(thr.get(t, [])) else 0)
+                  for t in weights}
+        # only judge fairness when there is demand in the window
+        if sum(shares.values()) > 0:
+            out.append(jain_fairness(shares, weights))
+    return out

@@ -1,0 +1,101 @@
+"""TP-friendly head/vocab padding (Megatron-style, exact).
+
+pjit requires argument dims to divide evenly across mesh axes. GQA configs like
+qwen2-7b (28 q heads, 4 kv heads) don't divide a 16-way model axis, so we apply
+the standard serving transformation:
+
+* **KV expansion** — store each kv head ``r = tp / gcd(kv, tp)`` times so the
+  expanded kv dim divides tp. Per-device cache bytes equal the classic
+  "replicate KV within TP groups" scheme.
+* **Q-group padding** — pad each kv group's q heads to a multiple of ``r`` so
+  the padded-q → expanded-kv mapping ``h -> h // (H'/KV')`` matches the
+  original ``h -> h // G``. Pad heads have zero weights: zero q/k/v/o rows make
+  them exact no-ops (outputs and gradients identically zero).
+* **Vocab padding** — round the vocab to a multiple of 128; pad logits are
+  masked to -inf in the loss (see ``chunked_ce_loss``), so softmax is unchanged.
+
+``pad_params`` converts real (unpadded) weights into padded weights for
+correctness tests; the dry-run only needs the padded shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTN, ModelConfig
+
+
+def pad_for_tp(cfg: ModelConfig, tp: int) -> ModelConfig:
+    if tp <= 1:
+        return cfg
+    over = {}
+    has_attn = any(b == ATTN for b in cfg.blocks) or cfg.is_encoder_decoder
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    if has_attn and (KV % tp != 0 or H % tp != 0) and KV < tp:
+        r = tp // math.gcd(KV, tp)
+        G = H // KV
+        Gp = math.ceil(G / r) * r
+        over["num_heads"] = KV * Gp
+        over["num_kv_heads"] = KV * r
+        over["head_dim"] = cfg.head_dim
+    if cfg.vocab_size > 0 and cfg.vocab_size % tp != 0:
+        over["vocab_size"] = math.ceil(cfg.vocab_size / 128) * 128
+        over["true_vocab"] = cfg.vocab_size
+    if not over:
+        return cfg
+    return dataclasses.replace(cfg, **over)
+
+
+def pad_params(params_small, cfg: ModelConfig, padded: ModelConfig):
+    """Zero-pad real weights from ``cfg`` layout to ``padded`` layout.
+
+    Only head/vocab dims change; q heads are padded *per kv group* and kv heads
+    are replicated ``r`` times (values must be duplicated, not zeroed, so that
+    expanded-cache attention matches).
+    """
+    import jax
+
+    G = cfg.num_heads // cfg.num_kv_heads
+    Gp = padded.num_heads // cfg.num_kv_heads      # padded group size
+    r = padded.num_kv_heads // cfg.num_kv_heads
+
+    def pad_leaf(path, x):
+        keys = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        x = np.asarray(x)
+        if "embed" in keys and x.ndim == 2 and x.shape[0] == cfg.vocab_size:
+            out = np.zeros((padded.vocab_size, x.shape[1]), x.dtype)
+            out[: cfg.vocab_size] = x
+            return jnp.asarray(out)
+        if "head" in keys and x.ndim == 2 and x.shape[1] == cfg.vocab_size:
+            out = np.zeros((x.shape[0], padded.vocab_size), x.dtype)
+            out[:, : cfg.vocab_size] = x
+            return jnp.asarray(out)
+        name = keys[-1]
+        def pad_q(arr, axis):
+            shp = list(arr.shape)
+            shp[axis] = padded.num_heads
+            out = np.zeros(shp, arr.dtype)
+            src = np.split(arr, cfg.num_kv_heads, axis=axis)
+            dst = np.split(out, cfg.num_kv_heads, axis=axis)
+            for s, d in zip(src, dst):
+                sl = [slice(None)] * arr.ndim
+                sl[axis] = slice(0, G)
+                d[tuple(sl)] = s
+            return jnp.asarray(np.concatenate(dst, axis=axis))
+        def rep_kv(arr, axis):
+            return jnp.asarray(np.repeat(arr, r, axis=axis))
+        # heads axis is always ndim-2: wq (..., d, H, hd), bq (..., H, hd)
+        if name in ("wq", "bq") and x.shape[x.ndim - 2] == cfg.num_heads:
+            return pad_q(x, x.ndim - 2)
+        if name == "wo" and x.shape[x.ndim - 3] == cfg.num_heads:
+            return pad_q(x, x.ndim - 3)
+        if name in ("wk", "wv") and x.shape[x.ndim - 2] == cfg.num_kv_heads:
+            return rep_kv(x, x.ndim - 2)
+        if name in ("bk", "bv") and x.shape[x.ndim - 2] == cfg.num_kv_heads:
+            return rep_kv(x, x.ndim - 2)
+        return jnp.asarray(x)
+
+    return jax.tree_util.tree_map_with_path(pad_leaf, params_small)

@@ -1,0 +1,100 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+A *rule set* maps logical axis names (attached to every ParamSpec dim and every
+activation constraint in model code) to mesh axes. ``spec_for`` resolves a
+tuple of logical names into a ``PartitionSpec``, dropping mesh axes that do not
+divide the dimension (replicate instead of pad) and never using a mesh axis
+twice in one spec — so one rule set serves every (arch × shape × mesh) cell.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# ---- activation rules (used by ShardCtx inside model code) ----
+ACT_RULES = {
+    "batch": ("pod", "data"),
+    "embed": None,
+    "seq": None,          # residual-stream sequence dim; "model" = Megatron SP
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "vocab": "model",
+    "cache_seq": None,
+}
+
+# §Perf: sequence-parallel residual stream — layer-boundary activations (and
+# the remat residuals the backward pass keeps alive) shard over 'model'
+SP_ACT = dict(ACT_RULES, seq="model")
+
+# ---- parameter rules ----
+TP_RULES = {            # tensor parallel only; weights replicated over data
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "experts_v": None,
+    "vocab": "model",
+    "layers": None,
+    "batch": ("pod", "data"),
+    "cache_seq": None,
+}
+FSDP_RULES = dict(TP_RULES, embed=("pod", "data"))   # + shard d_model rows over data
+
+# long-context decode: shard the KV-cache sequence over data (batch=1 cells)
+LONG_CTX_ACT = dict(ACT_RULES, cache_seq="data")
+LONG_CTX_PARAM = dict(TP_RULES, cache_seq="data")
+LONG_CTX_FSDP = dict(FSDP_RULES, cache_seq="data")
+
+
+def _axis_size(mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def spec_for(rules: dict, axes: Sequence[Optional[str]], mesh,
+             shape: Optional[Sequence[int]] = None) -> P:
+    """Resolve logical axes -> PartitionSpec under ``rules`` on ``mesh``."""
+    used: set[str] = set()
+    parts = []
+    for i, name in enumerate(axes):
+        rule = rules.get(name) if name is not None else None
+        if rule is None:
+            parts.append(None)
+            continue
+        cand = (rule,) if isinstance(rule, str) else tuple(rule)
+        cand = tuple(a for a in cand if a in mesh.axis_names and a not in used)
+        # longest prefix that fits the dim. Uneven sharding (dim % size != 0)
+        # is allowed — GSPMD pads — as long as every extra axis still has at
+        # least one row per shard (dim >= prod); otherwise replicate.
+        take: list[str] = []
+        prod = 1
+        for a in cand:
+            sz = _axis_size(mesh, a)
+            if shape is not None and shape[i] < prod * sz:
+                break
+            take.append(a)
+            prod *= sz
+        if not take:
+            parts.append(None)
+        else:
+            used.update(take)
+            parts.append(tuple(take) if len(take) > 1 else take[0])
+    return P(*parts)
+
+
+def tree_shardings(rules: dict, axes_tree, mesh, struct_tree):
+    """Map a logical-axes tree + struct tree -> NamedSharding tree."""
+    def one(axes, struct):
+        return NamedSharding(mesh, spec_for(rules, axes, mesh, struct.shape))
+    return jax.tree.map(one, axes_tree, struct_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(a, (str, type(None))) for a in x))
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

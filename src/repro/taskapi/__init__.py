@@ -1,0 +1,5 @@
+from repro.taskapi.artifacts import deserialize, package_pipeline, serialize, task_spec
+from repro.taskapi.interfaces import Adapter, Decoder, Encoder, vFM
+from repro.taskapi.modules import (IdentityEncoder, LinearChannelCombiner,
+                                   LinearDecoder, MLPDecoder)
+from repro.taskapi.pipeline import Pipeline

@@ -1,0 +1,74 @@
+"""Task-API interfaces (paper Table 1): Encoder / Decoder / Adapter / vFM.
+
+Pure-JAX module convention: a module instance holds hyperparameters; its
+parameters are an explicit pytree (``init`` creates them, ``apply`` consumes
+them) so pipelines can freeze the backbone and train only extensions.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+class Module:
+    """Base for task extensions."""
+
+    def init(self, rng) -> dict:
+        return {}
+
+    def apply(self, params, x):
+        raise NotImplementedError
+
+    def run(self, params, x):      # paper naming
+        return self.apply(params, x)
+
+
+class Encoder(Module):
+    """Input-side adaptation: raw request -> backbone embeddings (B, S, d)."""
+
+
+class Decoder(Module):
+    """Task head: backbone features -> task output."""
+
+
+class Adapter:
+    """PEFT adapter attached to the vFM backbone (LoRA on q/v projections)."""
+
+    def __init__(self, rank: int = 16, adapter_id: str = "adapter0"):
+        self.rank = rank
+        self.adapter_id = adapter_id
+
+    def init(self, rng, cfg: ModelConfig):
+        from repro.models import lora
+        return lora.init_single_adapter(rng, cfg, self.rank)
+
+
+class vFM:
+    """Task-side handle to a (virtual) foundation model.
+
+    Locally backed by a real backbone copy for fine-tuning; at deployment the
+    artifact binds to a *shared* physical FM — the task keeps the same logical
+    view (paper §4.1).
+    """
+
+    def __init__(self, backbone: str | ModelConfig, *, seed: int = 0,
+                 params=None):
+        self.cfg = backbone if isinstance(backbone, ModelConfig) \
+            else get_config(backbone)
+        self.params = params if params is not None \
+            else lm.init_model(jax.random.PRNGKey(seed), self.cfg)
+
+    def run(self, embeds, lora_tree=None):
+        """Backbone features for a batch of embeddings (B, S, d) -> (B, S, d)."""
+        aidx = None
+        if lora_tree is not None:
+            aidx = jnp.zeros((embeds.shape[0],), jnp.int32)
+        feats, _, _ = lm.forward(self.params, self.cfg, embeds=embeds,
+                                 lora=lora_tree, adapter_idx=aidx)
+        return feats

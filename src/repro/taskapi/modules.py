@@ -1,0 +1,74 @@
+"""Reference Task-API extensions (paper Listing 1/2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.taskapi.interfaces import Decoder, Encoder
+
+
+class LinearChannelCombiner(Encoder):
+    """Multichannel time series -> patch embeddings.
+
+    (B, T, C) --channel combine--> (B, T, C') --patchify--> (B, T/P, P·C')
+    --linear--> (B, S, d_model). The paper's MOMENT encoder example.
+    """
+
+    def __init__(self, num_channels: int, new_num_channels: int,
+                 patch: int, d_model: int):
+        self.c_in, self.c_out, self.patch, self.d = \
+            num_channels, new_num_channels, patch, d_model
+
+    def init(self, rng):
+        k1, k2 = jax.random.split(rng)
+        return {
+            "combine": jax.random.normal(k1, (self.c_in, self.c_out)) / self.c_in ** 0.5,
+            "proj": jax.random.normal(
+                k2, (self.patch * self.c_out, self.d)) / (self.patch * self.c_out) ** 0.5,
+        }
+
+    def apply(self, p, x):
+        B, T, C = x.shape
+        x = x @ p["combine"]                                   # (B, T, C')
+        S = T // self.patch
+        x = x[:, : S * self.patch].reshape(B, S, self.patch * self.c_out)
+        return x @ p["proj"]                                   # (B, S, d)
+
+
+class IdentityEncoder(Encoder):
+    def apply(self, p, x):
+        return x
+
+
+class MLPDecoder(Decoder):
+    """Pooled features -> task output (classification logits / regression)."""
+
+    def __init__(self, input_dim: int, hidden_dim: int, output_dim: int):
+        self.i, self.h, self.o = input_dim, hidden_dim, output_dim
+
+    def init(self, rng):
+        k1, k2 = jax.random.split(rng)
+        return {
+            "w1": jax.random.normal(k1, (self.i, self.h)) / self.i ** 0.5,
+            "b1": jnp.zeros((self.h,)),
+            "w2": jax.random.normal(k2, (self.h, self.o)) / self.h ** 0.5,
+            "b2": jnp.zeros((self.o,)),
+        }
+
+    def apply(self, p, feats):
+        x = feats.mean(axis=1) if feats.ndim == 3 else feats   # pool (B, d)
+        x = jax.nn.gelu(x @ p["w1"] + p["b1"])
+        return x @ p["w2"] + p["b2"]
+
+
+class LinearDecoder(Decoder):
+    def __init__(self, input_dim: int, output_dim: int):
+        self.i, self.o = input_dim, output_dim
+
+    def init(self, rng):
+        return {"w": jax.random.normal(rng, (self.i, self.o)) / self.i ** 0.5,
+                "b": jnp.zeros((self.o,))}
+
+    def apply(self, p, feats):
+        x = feats.mean(axis=1) if feats.ndim == 3 else feats
+        return x @ p["w"] + p["b"]

@@ -1,0 +1,103 @@
+"""Task pipeline (paper §4.3, Listings 1–2): compose encoder + vFM(+adapter)
++ decoder; fine-tune extensions with the backbone frozen; package artifacts.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.optim.adamw import AdamW
+from repro.taskapi.interfaces import Adapter, Decoder, Encoder, vFM
+
+
+class Pipeline:
+    def __init__(self, vfm: vFM, task_id: str = "task0", seed: int = 0):
+        self.vfm = vfm
+        self.task_id = task_id
+        self.encoder: Optional[Encoder] = None
+        self.decoder: Optional[Decoder] = None
+        self.adapter: Optional[Adapter] = None
+        self._rng = jax.random.PRNGKey(seed)
+        self.state: dict = {"encoder": {}, "decoder": {}, "adapter": None}
+
+    def _split(self):
+        self._rng, k = jax.random.split(self._rng)
+        return k
+
+    # ---- composition (Table 1) ----
+    def add_encoder(self, enc: Encoder):
+        self.encoder = enc
+        self.state["encoder"] = enc.init(self._split())
+        return self
+
+    def add_decoder(self, dec: Decoder):
+        self.decoder = dec
+        self.state["decoder"] = dec.init(self._split())
+        return self
+
+    def attach_adapter(self, adapter: Adapter):
+        self.adapter = adapter
+        self.state["adapter"] = adapter.init(self._split(), self.vfm.cfg)
+        return self
+
+    def remove_adapter(self, adapter_id: str | None = None):
+        self.adapter = None
+        self.state["adapter"] = None
+        return self
+
+    # ---- inference ----
+    def _forward(self, ext_params, x):
+        e = self.encoder.apply(ext_params["encoder"], x) if self.encoder else x
+        e = e.astype(jnp.float32)
+        feats = self.vfm.run(e, lora_tree=ext_params.get("adapter"))
+        y = self.decoder.apply(ext_params["decoder"], feats.astype(jnp.float32)) \
+            if self.decoder else feats
+        return y
+
+    def run(self, x):
+        return self._forward(self.state, jnp.asarray(x))
+
+    # ---- fine-tuning (backbone frozen) ----
+    def train(self, data: Iterable, *, steps: int = 50, lr: float = 1e-3,
+              parts_to_train=("encoder", "decoder", "adapter"),
+              loss: str = "mse", verbose: bool = False) -> list[float]:
+        train_parts = {k: v for k, v in self.state.items()
+                       if k in parts_to_train and v is not None}
+        frozen = {k: v for k, v in self.state.items() if k not in train_parts}
+
+        def loss_fn(tp, x, y):
+            ext = {**frozen, **tp}
+            pred = self._forward(ext, x)
+            if loss == "mse":
+                return jnp.mean((pred - y) ** 2)
+            logp = jax.nn.log_softmax(pred, axis=-1)
+            return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+        opt = AdamW(lr=lr, weight_decay=0.0)
+        opt_state = opt.init(train_parts)
+        grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+        losses = []
+        it = iter(data)
+        for step in range(steps):
+            try:
+                x, y = next(it)
+            except StopIteration:
+                it = iter(data)
+                x, y = next(it)
+            l, g = grad_fn(train_parts, jnp.asarray(x), jnp.asarray(y))
+            train_parts, opt_state, _ = opt.update(g, opt_state, train_parts)
+            losses.append(float(l))
+            if verbose and step % 10 == 0:
+                print(f"step {step}: loss {l:.4f}")
+        self.state.update(train_parts)
+        return losses
+
+    # ---- deployment artifact ----
+    def package(self, *, weight: float = 1.0, slo_s: float | None = None,
+                demand_rps: float = 1.0) -> dict:
+        from repro.taskapi.artifacts import package_pipeline
+        return package_pipeline(self, weight=weight, slo_s=slo_s,
+                                demand_rps=demand_rps)

@@ -1,0 +1,161 @@
+"""BFQ unit tests: tag math (paper Eqs. 1-3), batch formation, SLO-aware
+admission, adapter sub-batching, work conservation, retro-correction."""
+import pytest
+
+from repro.core.bfq import BFQ, FIFOBatch, STFQ
+from repro.core.profile import FMProfile
+from repro.core.request import Request, SLO
+from repro.core.vfm import VFM, TaskExtensions
+
+
+def make(weight_a=1.0, weight_b=1.0, b_max=8, adapter_a=None, adapter_b=None):
+    prof = FMProfile("fm", alpha=10e-3, beta=2e-3, b_max=b_max)
+    sched = BFQ(prof)
+    va = VFM("A", weight=weight_a, extensions=TaskExtensions(adapter_id=adapter_a))
+    vb = VFM("B", weight=weight_b, extensions=TaskExtensions(adapter_id=adapter_b))
+    return sched, {"A": va, "B": vb}
+
+
+def test_arrival_tags_eq1_eq2():
+    sched, vfms = make(weight_a=2.0)
+    l1 = sched.profile.l(1)
+    r1 = Request("A", 0.0)
+    sched.on_arrival(vfms["A"], r1, 0.0)
+    assert r1.start_tag == 0.0
+    assert r1.finish_tag == pytest.approx(l1 / 2.0)          # F = S + l/w
+    r2 = Request("A", 0.0)
+    sched.on_arrival(vfms["A"], r2, 0.0)
+    assert r2.start_tag == pytest.approx(r1.finish_tag)      # S = max(F_prev, v)
+    # global tag advances only with dispatches
+    b = sched.next_batch(vfms, 0.0)
+    assert sched.v >= r1.finish_tag
+
+
+def test_start_tag_jumps_to_v_for_idle_task():
+    sched, vfms = make()
+    for i in range(5):
+        sched.on_arrival(vfms["A"], Request("A", 0.0), 0.0)
+    sched.next_batch(vfms, 0.0)
+    r = Request("B", 1.0)
+    sched.on_arrival(vfms["B"], r, 1.0)
+    assert r.start_tag == pytest.approx(sched.v)   # no credit for idling
+
+
+def test_batch_respects_bmax():
+    sched, vfms = make(b_max=4)
+    for i in range(10):
+        sched.on_arrival(vfms["A"], Request("A", 0.0), 0.0)
+    batch = sched.next_batch(vfms, 0.0)
+    assert batch.size == 4
+    assert len(vfms["A"].queue) == 6
+
+
+def test_slo_limits_batch_growth():
+    """Adding requests extends completion; stop before violating any SLO."""
+    prof = FMProfile("fm", alpha=10e-3, beta=10e-3, b_max=16)
+    sched = BFQ(prof)
+    v = VFM("A", slo=SLO(0.045))
+    for i in range(10):
+        sched.on_arrival(v, Request("A", 0.0, slo=SLO(0.045)), 0.0)
+    batch = sched.next_batch({"A": v}, 0.0)
+    # l(b) = 10ms + 10ms*b <= 45ms -> b <= 3
+    assert batch.size == 3
+
+
+def test_adapter_sub_batching():
+    sched, vfms = make(adapter_a="la", adapter_b=None)
+    sched.on_arrival(vfms["A"], Request("A", 0.0), 0.0)
+    sched.on_arrival(vfms["B"], Request("B", 0.0), 0.0)
+    batch = sched.next_batch(vfms, 0.0)
+    assert batch.size == 2                       # one backbone co-batch
+    assert batch.num_adapters == 1               # one adapter sub-batch
+    adapters = dict(batch.sub_batches)
+    assert len(adapters["la"]) == 1 and len(adapters[None]) == 1
+
+
+def test_exec_time_charges_adapter_subbatches():
+    sched, vfms = make(adapter_a="la", adapter_b="lb")
+    sched.on_arrival(vfms["A"], Request("A", 0.0), 0.0)
+    sched.on_arrival(vfms["B"], Request("B", 0.0), 0.0)
+    batch = sched.next_batch(vfms, 0.0)
+    t = sched.exec_time(batch)
+    p = sched.profile
+    assert t == pytest.approx(p.l(2) + 2 * (p.adapter_alpha + p.adapter_beta * 1))
+
+
+def test_retro_correction_eq3():
+    """After a batch, queued requests of participating tasks get l(b)-based tags."""
+    sched, vfms = make(b_max=2)
+    for i in range(4):
+        sched.on_arrival(vfms["A"], Request("A", 0.0), 0.0)
+    batch = sched.next_batch(vfms, 0.0)
+    assert batch.size == 2
+    lb = sched.profile.effective_per_request(2)
+    sched.on_complete(batch, vfms, 0.1)
+    q = list(vfms["A"].queue)
+    assert q[0].finish_tag - q[0].start_tag == pytest.approx(lb)
+    assert q[1].start_tag == pytest.approx(q[0].finish_tag)
+
+
+def test_work_conserving():
+    sched, vfms = make()
+    assert sched.next_batch(vfms, 0.0) is None
+    sched.on_arrival(vfms["B"], Request("B", 0.0), 0.0)
+    assert sched.next_batch(vfms, 0.0).size == 1
+
+
+def test_tag_order_prefers_underserved():
+    """Heavier-weight task accumulates tags slower -> gets more slots."""
+    sched, vfms = make(weight_a=3.0, weight_b=1.0, b_max=1)
+    for i in range(12):
+        sched.on_arrival(vfms["A"], Request("A", 0.0), 0.0)
+        sched.on_arrival(vfms["B"], Request("B", 0.0), 0.0)
+    served = {"A": 0, "B": 0}
+    for _ in range(8):
+        b = sched.next_batch(vfms, 0.0)
+        served[b.requests[0].task_id] += 1
+        sched.on_complete(b, vfms, 0.0)
+    assert served["A"] == 6 and served["B"] == 2   # 3:1 share
+
+
+def test_stfq_serves_one():
+    prof = FMProfile("fm", alpha=1e-3, beta=1e-3, b_max=8)
+    s = STFQ(prof)
+    v = VFM("A")
+    for i in range(4):
+        s.on_arrival(v, Request("A", 0.0), 0.0)
+    assert s.next_batch({"A": v}, 0.0).size == 1
+
+
+def test_fifo_batches_arrival_order():
+    prof = FMProfile("fm", alpha=1e-3, beta=1e-3, b_max=3)
+    s = FIFOBatch(prof)
+    v = VFM("A")
+    rs = [Request("A", t * 0.001) for t in range(5)]
+    for r in rs:
+        s.on_arrival(v, r, r.arrival)
+    b = s.next_batch({"A": v}, 0.01)
+    assert [r.rid for r in b.requests] == [r.rid for r in rs[:3]]
+
+
+def test_token_level_accounting():
+    """Paper §4.2, token-based FMs: with equal weights, a task sending
+    10x-token requests receives ~1/10th the REQUEST rate (equal token rate)."""
+    prof = FMProfile("llm", alpha=1e-3, beta=1e-3, b_max=1)
+    sched = BFQ(prof)
+    va, vb = VFM("A"), VFM("B")
+    vfms = {"A": va, "B": vb}
+    for i in range(300):
+        sched.on_arrival(va, Request("A", 0.0, tokens=10.0), 0.0)
+        sched.on_arrival(vb, Request("B", 0.0, tokens=1.0), 0.0)
+    served = {"A": 0, "B": 0}
+    tokens = {"A": 0.0, "B": 0.0}
+    for _ in range(220):
+        b = sched.next_batch(vfms, 0.0)
+        r = b.requests[0]
+        served[r.task_id] += 1
+        tokens[r.task_id] += r.tokens
+        sched.on_complete(b, vfms, 0.0)
+    # token shares ~equal; request shares ~1:10
+    assert abs(tokens["A"] - tokens["B"]) / max(tokens.values()) < 0.15
+    assert served["B"] > 5 * served["A"]

@@ -1,0 +1,93 @@
+"""FMplex-Controller: Max-Share (Algorithm 1), elastic adaptation, failures."""
+import pytest
+
+from repro.controller import (ClusterState, ElasticAdapter, MaxShare, Server,
+                              TaskSpec, get_profile)
+from repro.core.profile import FMProfile
+
+
+def cluster(n=4, mem=16e9, profiles=None):
+    profiles = profiles or {"moment-large": get_profile("moment-large")}
+    return ClusterState([Server(f"s{i}", mem_bytes=mem) for i in range(n)],
+                        profiles)
+
+
+def test_prefers_existing_backbone():
+    c = cluster()
+    ms = MaxShare(c)
+    p1 = ms.place(TaskSpec("t0", "moment-large", demand_rps=5))
+    p2 = ms.place(TaskSpec("t1", "moment-large", demand_rps=5))
+    assert p1.new_deployments and not p2.new_deployments
+    assert list(p2.assignment) == list(p1.assignment)   # same deployment reused
+
+
+def test_provisions_when_capacity_exhausted():
+    c = cluster()
+    ms = MaxShare(c)
+    cap = get_profile("moment-large")
+    cap_rps = 0.8 * cap.b_max / cap.l(cap.b_max)
+    ms.place(TaskSpec("big", "moment-large", demand_rps=cap_rps * 0.9))
+    plan = ms.place(TaskSpec("t1", "moment-large", demand_rps=cap_rps * 0.5))
+    assert plan is not None and plan.new_deployments   # had to provision
+
+
+def test_replication_splits_demand():
+    c = cluster()
+    ms = MaxShare(c)
+    cap = get_profile("moment-large")
+    cap_rps = 0.8 * cap.b_max / cap.l(cap.b_max)
+    plan = ms.place(TaskSpec("huge", "moment-large", demand_rps=cap_rps * 2.5))
+    assert plan is not None and len(plan.assignment) >= 3
+    assert sum(plan.assignment.values()) == pytest.approx(1.0)
+
+
+def test_infeasible_returns_none_and_rolls_back():
+    prof = FMProfile("big-fm", memory_bytes=int(20e9))   # > server memory
+    c = cluster(profiles={"big-fm": prof})
+    ms = MaxShare(c)
+    assert ms.place(TaskSpec("t", "big-fm")) is None
+    assert not c.deployments
+
+
+def test_memory_admission_limits_instance_per_task():
+    """Instance-per-task (no sharing) OOMs where sharing admits ~6x more."""
+    prof = get_profile("moment-large")
+    c = cluster(n=1)
+    per_gpu_replicas = int(16e9 // prof.memory_bytes)
+    # sharing: one deployment hosts many tasks
+    ms = MaxShare(c)
+    admitted = 0
+    for i in range(60):
+        if ms.place(TaskSpec(f"t{i}", "moment-large", demand_rps=1.0)):
+            admitted += 1
+    assert admitted >= 6 * per_gpu_replicas
+
+
+def test_adaptation_rebind_is_fast_path():
+    c = cluster()
+    ms = MaxShare(c)
+    for i in range(3):
+        ms.place(TaskSpec(f"t{i}", "moment-large", demand_rps=5))
+    ea = ElasticAdapter(c)
+    res = ea.on_surge(TaskSpec("t0", "moment-large", demand_rps=5), 10.0)
+    assert res.path == "rebind"
+    assert res.ready_s < 0.1                       # task-state timescale
+    res2 = ea.on_surge(TaskSpec("t1", "moment-large", demand_rps=5), 500.0)
+    assert res2.path in ("provision", "infeasible")
+    if res2.path == "provision":
+        assert res2.ready_s > 1.0                  # backbone-load timescale
+
+
+def test_failure_rebinds_all_tasks():
+    c = cluster()
+    ms = MaxShare(c)
+    for i in range(6):
+        ms.place(TaskSpec(f"t{i}", "moment-large", demand_rps=5))
+    ea = ElasticAdapter(c)
+    dead = [d.server_id for d in c.deployments.values()][0]
+    results = ea.on_server_failure(dead)
+    assert results and all(r.path in ("rebind", "provision") for r in results)
+    for t in [f"t{i}" for i in range(6)]:
+        assert t in c.task_bindings
+        for dep_id in c.task_bindings[t]:
+            assert c.deployments[dep_id].server_id != dead

@@ -1,0 +1,19 @@
+"""Integration: one real dry-run cell lowers + compiles on the production
+mesh in a subprocess (device count locks at first jax init)."""
+import json
+import subprocess
+import sys
+
+
+def test_dryrun_cell_compiles(tmp_path):
+    out = tmp_path / "cell.jsonl"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--cell", "xlstm-125m:decode_32k:pod1", "--out", str(out)],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    rec = json.loads(out.read_text().splitlines()[-1])
+    assert rec["status"] == "ok" and rec["chips"] == 256
+    assert rec["roofline"]["bottleneck"] is not None
+    assert rec["memory"]["temp_size_in_bytes"] < 16e9   # fits a v5e chip

@@ -1,0 +1,129 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bfq import BFQ
+from repro.core.profile import FMProfile
+from repro.core.request import Request
+from repro.core.vfm import VFM
+from repro.distributed.compression import dequantize_int8, quantize_int8
+from repro.kernels.segmented_lora import sort_by_adapter
+from repro.serving.metrics import jain_fairness
+
+# ---------------- BFQ invariants ----------------
+
+weights_st = st.lists(st.floats(0.5, 8.0), min_size=2, max_size=5)
+arrivals_st = st.lists(st.tuples(st.integers(0, 4),
+                                 st.floats(0, 1.0)), min_size=5, max_size=60)
+
+
+@settings(max_examples=60, deadline=None)
+@given(weights=weights_st, arrivals=arrivals_st, b_max=st.integers(1, 16))
+def test_bfq_completes_everything_and_bounds_batches(weights, arrivals, b_max):
+    """Work conservation: every request is eventually dispatched; batches never
+    exceed B_max; per-task start tags are non-decreasing in dispatch order."""
+    prof = FMProfile("fm", alpha=5e-3, beta=1e-3, b_max=b_max)
+    sched = BFQ(prof)
+    vfms = {f"t{i}": VFM(f"t{i}", weight=w) for i, w in enumerate(weights)}
+    reqs = []
+    for ti, at in sorted(arrivals, key=lambda x: x[1]):
+        tid = f"t{ti % len(weights)}"
+        r = Request(tid, at)
+        sched.on_arrival(vfms[tid], r, at)
+        reqs.append(r)
+    now, dispatched = 1.0, []
+    last_start = {}
+    while True:
+        b = sched.next_batch(vfms, now)
+        if b is None:
+            break
+        assert b.size <= b_max
+        for r in b.requests:
+            prev = last_start.get(r.task_id, -1e18)
+            assert r.start_tag >= prev - 1e-9
+            last_start[r.task_id] = r.start_tag
+        now += sched.exec_time(b)
+        sched.on_complete(b, vfms, now)
+        dispatched += b.requests
+    assert len(dispatched) == len(reqs)
+    assert not any(len(v.queue) for v in vfms.values())
+
+
+@settings(max_examples=30, deadline=None)
+@given(wa=st.floats(1.0, 4.0), wb=st.floats(1.0, 4.0))
+def test_bfq_saturated_shares_track_weights(wa, wb):
+    """Under permanent backlog, service shares converge to the weight ratio."""
+    prof = FMProfile("fm", alpha=5e-3, beta=1e-3, b_max=1)  # b=1 isolates tags
+    sched = BFQ(prof)
+    vfms = {"A": VFM("A", weight=wa), "B": VFM("B", weight=wb)}
+    for i in range(400):
+        sched.on_arrival(vfms["A"], Request("A", 0.0), 0.0)
+        sched.on_arrival(vfms["B"], Request("B", 0.0), 0.0)
+    served = {"A": 0, "B": 0}
+    for _ in range(200):
+        b = sched.next_batch(vfms, 0.0)
+        served[b.requests[0].task_id] += 1
+        sched.on_complete(b, vfms, 0.0)
+    got = served["A"] / max(served["B"], 1)
+    want = wa / wb
+    assert abs(got - want) / want < 0.15
+    f = jain_fairness(served, {"A": wa, "B": wb})
+    assert f > 0.97
+
+
+# ---------------- sharding rules ----------------
+
+@settings(max_examples=50, deadline=None)
+@given(dims=st.lists(st.integers(1, 64), min_size=1, max_size=4),
+       data=st.data())
+def test_spec_for_never_reuses_axes_and_respects_fit(dims, data):
+    import os
+    os.environ.setdefault("XLA_FLAGS", "")
+    from repro.sharding.rules import ACT_RULES, spec_for
+
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 4, "model": 4}
+
+    names = data.draw(st.lists(
+        st.sampled_from(list(ACT_RULES) + [None]),
+        min_size=len(dims), max_size=len(dims)))
+    spec = spec_for(ACT_RULES, tuple(names), FakeMesh(), tuple(dims))
+    used = []
+    for part, dim in zip(spec, dims):
+        if part is None:
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        prod = 1
+        for a in axes:
+            assert a not in used
+            used.append(a)
+            prod *= FakeMesh.shape[a]
+        assert dim >= prod       # every shard nonempty
+
+
+# ---------------- kernels / compression ----------------
+
+@settings(max_examples=40, deadline=None)
+@given(ids=st.lists(st.integers(0, 7), min_size=1, max_size=200),
+       bt=st.sampled_from([8, 16, 32]))
+def test_sort_by_adapter_properties(ids, bt):
+    ids = np.array(ids)
+    perm, blocks, total = sort_by_adapter(ids, 8, block_t=bt)
+    assert total % bt == 0 and len(blocks) == total // bt
+    seen = sorted(j for j in perm if j >= 0)
+    assert seen == list(range(len(ids)))            # permutation, no loss
+    for i, aid in enumerate(blocks):
+        real = {ids[j] for j in perm[i * bt:(i + 1) * bt] if j >= 0}
+        assert len(real) <= 1 and (not real or real.pop() == aid)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1, max_size=64))
+def test_int8_quantization_error_bound(xs):
+    import jax.numpy as jnp
+    x = jnp.asarray(np.array(xs, np.float32))
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s)
+    bound = float(jnp.max(jnp.abs(x))) / 127.0 * 0.5 + 1e-6
+    assert float(jnp.max(jnp.abs(back - x))) <= bound + 1e-5

@@ -1,0 +1,73 @@
+"""Per-assigned-architecture smoke tests (deliverable f).
+
+Each arch: instantiate a REDUCED same-family config, run one forward + one
+train step on CPU, assert output shapes and finiteness. Full configs are
+exercised only via the dry-run (ShapeDtypeStruct, no allocation).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import make_batch
+from repro.configs import ASSIGNED, get_config, reduced
+from repro.models import lm
+from repro.optim.adamw import AdamW
+
+ALL = ASSIGNED + ["moment-large"]
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_forward_shapes_and_finite(arch):
+    cfg = reduced(get_config(arch))
+    params = lm.init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    batch = make_batch(cfg, B, S)
+    x, _, aux = lm.forward(params, cfg, tokens=batch.get("tokens"),
+                           embeds=batch.get("embeds"),
+                           enc_embeds=batch.get("enc_embeds"),
+                           pos3=batch.get("pos3"))
+    assert x.shape == (B, S, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(x.astype(jnp.float32))))
+    assert bool(jnp.isfinite(jnp.asarray(aux)))
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_one_train_step(arch):
+    cfg = reduced(get_config(arch))
+    params = lm.init_model(jax.random.PRNGKey(0), cfg)
+    opt = AdamW(lr=1e-3)
+    opt_state = opt.init(params)
+    batch = make_batch(cfg, 2, 16)
+
+    @jax.jit
+    def step(p, o, b):
+        (loss, m), g = jax.value_and_grad(lm.loss_fn, has_aux=True)(p, cfg, b)
+        p2, o2, _ = opt.update(g, o, p)
+        return p2, o2, loss
+
+    p2, o2, loss = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(loss)) and float(loss) > 0
+    # params actually changed
+    l0 = jax.tree.leaves(params)[1]
+    l1 = jax.tree.leaves(p2)[1]
+    assert not bool(jnp.allclose(l0, l1))
+
+
+@pytest.mark.parametrize("arch", [a for a in ALL
+                                  if get_config(a).has_decode])
+def test_prefill_decode_shapes(arch):
+    cfg = reduced(get_config(arch))
+    params = lm.init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 8
+    batch = make_batch(cfg, B, S)
+    cache = lm.init_cache(cfg, B, S + 4)
+    logits, cache = lm.prefill(params, cfg, cache=cache,
+                               tokens=batch.get("tokens"),
+                               embeds=batch.get("embeds"),
+                               enc_embeds=batch.get("enc_embeds"),
+                               pos3=batch.get("pos3"))
+    assert logits.shape[0] == B
+    tok = jnp.ones((B,), jnp.int32)
+    logits2, cache = lm.decode_step(params, cfg, tokens=tok, cache=cache)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
