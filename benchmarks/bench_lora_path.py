@@ -1,0 +1,116 @@
+"""Gather-einsum vs segmented (SGMV) LoRA serve-forward timings.
+
+Times ``PhysicalFM.run_batch`` — the full serve forward including the
+per-batch host-side segment-metadata build — across a
+(batch, num_adapters) grid for both ``lora_impl`` paths, and verifies the
+de-recompiled steady state: after the grid warm-up, binding one more
+adapter within slot-bucket capacity and serving again must add ZERO jitted
+executables.
+
+Results land in ``BENCH_serving.json`` (repo root) as
+  {"grid": [{batch, num_adapters, gather_ms, segmented_ms}, ...],
+   "steady_state": {"recompiles_after_add_within_capacity": 0, ...}}
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core.physical import PhysicalFM, slot_bucket_for
+
+BATCHES = (1, 2, 4, 8, 16, 32)
+ADAPTERS = (1, 2, 4, 8, 16)
+INPUT_LEN = 16
+REPEATS = 5
+
+
+def _randomized_adapter(fm: PhysicalFM, i: int):
+    """Nonzero A AND B (B is zero-init) so the delta path does real work."""
+    tree = fm.adapters._mod.init_single_adapter(
+        jax.random.PRNGKey(i), fm.cfg, fm.adapters.rank)
+    leaves, tdef = jax.tree.flatten(tree)
+    ks = jax.random.split(jax.random.PRNGKey(1000 + i), len(leaves))
+    return jax.tree.unflatten(tdef, [
+        jax.random.normal(k, l.shape, l.dtype) * 0.05
+        for k, l in zip(ks, leaves)])
+
+
+def _fm(cfg, impl: str, num_adapters: int) -> PhysicalFM:
+    fm = PhysicalFM(cfg, seed=0, input_len=INPUT_LEN, lora_rank=8,
+                    lora_impl=impl, seg_block_t=16)
+    for i in range(num_adapters):
+        fm.adapters.add(f"lora{i}", _randomized_adapter(fm, i))
+    return fm
+
+
+def _time_batch(fm: PhysicalFM, batch: int, num_adapters: int) -> float:
+    rng = np.random.RandomState(batch * 100 + num_adapters)
+    x = rng.randn(batch, INPUT_LEN, fm.cfg.d_model).astype(np.float32)
+    aidx = (np.arange(batch) % num_adapters).astype(np.int32)
+    fm.run_batch(x, aidx)                                   # warm / compile
+    t0 = time.perf_counter()
+    for _ in range(REPEATS):
+        fm.run_batch(x, aidx)
+    return (time.perf_counter() - t0) / REPEATS * 1e3
+
+
+def run_all(out_path: str = None):
+    cfg = reduced(get_config("moment-large"))
+    grid = []
+    # one FM per (impl, slot bucket): realistic multi-adapter residency, and
+    # the jit cache is shared across the grid cells the way serving shares it
+    fms = {(impl, slot_bucket_for(na)): None
+           for impl in ("gather", "segmented") for na in ADAPTERS}
+    for (impl, cap) in fms:
+        fms[(impl, cap)] = _fm(cfg, impl, cap)
+    for na in ADAPTERS:
+        cap = slot_bucket_for(na)
+        for b in BATCHES:
+            row = {"batch": b, "num_adapters": na}
+            for impl in ("gather", "segmented"):
+                row[f"{impl}_ms"] = round(
+                    _time_batch(fms[(impl, cap)], b, na), 3)
+            grid.append(row)
+            print(f"b={b:3d} na={na:3d} gather={row['gather_ms']:8.2f}ms "
+                  f"segmented={row['segmented_ms']:8.2f}ms")
+
+    # steady state: bind one more task within slot capacity -> zero recompiles
+    fm = _fm(cfg, "segmented", 2)                 # 2 adapters, slot bucket 4
+    cap = fm.adapters.capacity()
+    x = np.random.RandomState(7).randn(4, INPUT_LEN,
+                                       cfg.d_model).astype(np.float32)
+    fm.run_batch(x, np.array([0, 1, 0, cap], np.int32))     # warm
+    before = fm.compile_count()
+    fm.adapters.add("late-bound", _randomized_adapter(fm, 99))
+    assert fm.adapters.capacity() == cap, "bucket crossed; pick smaller NA"
+    fm.run_batch(x, np.array([len(fm.adapters) - 1, 0, 0, cap], np.int32))
+    steady = {
+        "recompiles_after_add_within_capacity": fm.compile_count() - before,
+        "jit_entries": len(fm._jit_cache),
+        "slot_bucket": cap,
+    }
+    print("steady state:", steady)
+
+    out = {
+        "config": cfg.name,
+        "input_len": INPUT_LEN,
+        "repeats": REPEATS,
+        "backend": jax.default_backend(),
+        "grid": grid,
+        "steady_state": steady,
+    }
+    path = pathlib.Path(out_path or
+                        pathlib.Path(__file__).resolve().parent.parent /
+                        "BENCH_serving.json")
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    run_all()

@@ -92,22 +92,30 @@ class BFQ(SchedulerBase):
             return None
         queued.sort(key=lambda r: (r.start_tag, r.rid))
         selected: list[Request] = []
+        # incremental formation state (O(B_max) per dispatch instead of
+        # O(B_max^2)): adapter-size counter and the tightest deadline among
+        # still-satisfiable candidates are both maintained as requests join
+        sizes: collections.Counter = collections.Counter()
+        l1 = self.profile.l(1)
+        min_deadline = float("inf")
         for r in queued:
             if len(selected) >= self.profile.b_max:
                 break
-            cand = selected + [r]
-            sizes = collections.Counter(
-                vfms[c.task_id].extensions.adapter_id for c in cand)
-            a_sizes = [n for aid, n in sizes.items() if aid is not None]
-            done = now + self.profile.exec_time(len(cand), a_sizes)
+            aid = vfms[r.task_id].extensions.adapter_id
+            sizes[aid] += 1
+            a_sizes = [n for a, n in sizes.items() if a is not None]
+            done = now + self.profile.exec_time(len(selected) + 1, a_sizes)
+            cand_deadline = min(
+                min_deadline,
+                r.deadline() if r.deadline() >= now + l1 else float("inf"))
             # stop extending if it would push a STILL-SATISFIABLE request past
             # its deadline (already-expired requests are served best-effort —
             # they cannot be "pushed past" anything)
-            if selected and any(
-                    done > c.deadline() >= now + self.profile.l(1)
-                    for c in cand):
+            if selected and done > cand_deadline:
+                sizes[aid] -= 1
                 break
             selected.append(r)
+            min_deadline = cand_deadline
         self._pop(vfms, selected)
         batch = Batch(selected, group_sub_batches(selected, vfms))
         # dispatch bookkeeping: v = max_i F_i^last over dispatched requests

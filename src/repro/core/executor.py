@@ -1,10 +1,30 @@
 """Batch executor: runs a BFQ-formed batch against a physical FM (real plane).
 
-Request path (paper Fig. 4 steps 4–7): the scheduler's co-batch executes ONE
-shared backbone pass; per-task LoRA deltas are applied grouped by adapter
-(compatible sub-batches — rows are adapter-sorted so the segmented-LoRA
-kernel sees single-adapter blocks); finally each request's task decoder head
-produces the output.
+Serve data path (paper Fig. 4 steps 4-7, segmented-LoRA formulation):
+
+  1. adapter sort   — the scheduler's co-batch arrives as adapter-compatible
+     sub-batches (``Batch.sub_batches``); the executor concatenates them so
+     rows sharing an adapter are contiguous, and maps each row's adapter id
+     to its slot in the FM's ``AdapterStore`` (sentinel == store capacity
+     means "base model, no adapter").
+  2. block metadata — ``PhysicalFM.run_batch`` flattens the sorted batch
+     token-major and builds the SGMV metadata ONCE per batch on the host
+     (``kernels.segmented_lora.segment_metadata``): a permutation into
+     block-padded single-adapter segments, its inverse, and one adapter id
+     per ``block_t`` token block.
+  3. SGMV backbone  — one shared backbone pass; at every attention sublayer
+     the q/v LoRA deltas dispatch through ``kernels.ops.segmented_lora``
+     (Pallas on TPU, jnp oracle on CPU), so each (block_t, d) tile multiplies
+     against exactly one adapter's (d, r) @ (r, out) — no per-request
+     (B, d, r) weight materialization.
+  4. task heads     — pooled features are split per task and each task's
+     decoder head is applied ONCE over its feature sub-array (batched), not
+     per request; heads that are not batch-aware fall back to per-row
+     application.
+
+Batch shapes are bucketed (batch size AND adapter slot count), so steady-state
+serving reuses compiled executables — zero recompiles as tasks come and go
+within slot capacity.
 """
 from __future__ import annotations
 
@@ -20,6 +40,48 @@ from repro.core.vfm import VFM
 class Executor:
     def __init__(self, fm: PhysicalFM):
         self.fm = fm
+        # task_id -> (head object, batch-aware verdict); the head is stored so
+        # a rebound task with a NEW head re-probes (id()-keyed caching would
+        # let a recycled id inherit a stale verdict on this persistent object)
+        self._batch_aware: dict[str, tuple[object, bool]] = {}
+
+    def _apply_head(self, tid: str, head, feats: np.ndarray, idxs: list[int]):
+        """Apply one task's head over its feature sub-array — batched when the
+        head vectorizes over rows, per-row otherwise. The verdict is probed on
+        the head's first multi-row batch: its batched output must match
+        per-row application on the first row (a shape check alone is not
+        enough — a head that reduces over its input, e.g. mean-centering,
+        returns the right shape with cross-row-contaminated values). The probe
+        costs one extra row-0 call; heads are assumed pure over features.
+        n_t == 1 always goes per-row (the conventions are indistinguishable
+        there)."""
+        if len(idxs) <= 1:
+            return [head(feats[i]) for i in idxs]
+        cached = self._batch_aware.get(tid)
+        if cached is not None and cached[0] is head:
+            if cached[1]:
+                return list(head(feats[idxs]))
+            return [head(feats[i]) for i in idxs]
+        if not np.ptp(feats[idxs], axis=0).any():
+            # identical probe rows can't discriminate batched from reducing
+            # heads (e.g. all-default zero payloads) — apply per-row and defer
+            # the verdict to a batch with distinct rows
+            return [head(feats[i]) for i in idxs]
+        try:
+            y = head(feats[idxs])
+            row0 = head(feats[idxs[0]])
+            rowN = head(feats[idxs[-1]])      # catches row-position-dependent
+            ok = (getattr(y, "shape", (None,))[0] == len(idxs)
+                  and np.asarray(y[0]).shape == np.asarray(row0).shape
+                  and np.allclose(np.asarray(y[0]), np.asarray(row0))
+                  and np.asarray(y[-1]).shape == np.asarray(rowN).shape
+                  and np.allclose(np.asarray(y[-1]), np.asarray(rowN)))
+        except Exception:
+            y, ok = None, False
+        self._batch_aware[tid] = (head, ok)
+        if ok:
+            return list(y)                    # reuse the probed batched output
+        return [head(feats[i]) for i in idxs]
 
     def execute(self, batch: Batch, vfms: dict[str, VFM]) -> dict[int, object]:
         """Returns {request id: task output}. Measures wall time on the batch."""
@@ -37,10 +99,20 @@ class Executor:
                 embeds.append(x)
                 aidx.append(ai)
         feats = self.fm.run_batch(np.stack(embeds), np.asarray(aidx, np.int32))
-        out = {}
+        # per-task batched head application over feature sub-arrays
+        by_task: dict[str, list[int]] = {}
         for i, r in enumerate(order):
-            head = self.fm.heads.get(r.task_id)
-            y = head(feats[i]) if head is not None else feats[i]
-            out[r.rid] = y
+            by_task.setdefault(r.task_id, []).append(i)
+        out = {}
+        for tid, idxs in by_task.items():
+            head = self.fm.heads.get(tid)
+            ys = [feats[i] for i in idxs] if head is None \
+                else self._apply_head(tid, head, feats, idxs)
+            for i, y in zip(idxs, ys):
+                out[order[i].rid] = y
+        # evict verdicts of detached tasks (persistent executor: don't retain
+        # dead head closures for the life of the server)
+        self._batch_aware = {t: v for t, v in self._batch_aware.items()
+                             if t in self.fm.heads}
         self.last_exec_s = time.perf_counter() - t0
         return out

@@ -3,10 +3,18 @@
 The real-execution plane (CPU-scale configs). A PhysicalFM owns:
   * backbone params (pure pytree) for one ``ModelConfig``;
   * an adapter store — LoRA A/B stacks keyed by adapter id, padded to a
-    common rank so they batch into the segmented-LoRA kernel;
+    common rank AND to a slot bucket (4/8/16/...) so adding a task within
+    capacity reuses the compiled executable instead of recompiling;
   * a decoder-head store — per-task heads applied after the shared pass;
-  * a bucket cache of jitted executables (one per batch bucket) so TPU-style
-    static shapes never recompile in steady state.
+  * a cache of jitted executables keyed on (batch bucket, adapter slot
+    bucket) so TPU-style static shapes never recompile in steady state.
+
+``run_batch`` executes the segmented (SGMV) LoRA serve path by default: the
+adapter-sorted co-batch is flattened token-major, permuted into block-padded
+segments (metadata built ONCE per batch on the host via
+``kernels.segmented_lora.segment_metadata``), and the q/v deltas dispatch
+through the Pallas kernel (ref oracle on CPU). ``lora_impl="gather"`` keeps
+the per-request gather-einsum path (train / dry-run / parity testing).
 """
 from __future__ import annotations
 
@@ -19,9 +27,11 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.profile import FMProfile, profile_backbone
+from repro.kernels.segmented_lora import padded_tokens, segment_metadata
 from repro.models import lm
 
 BUCKETS = (1, 2, 4, 8, 16, 32)
+SLOT_BUCKETS = (4, 8, 16, 32, 64)
 
 
 def bucket_for(n: int) -> int:
@@ -31,12 +41,29 @@ def bucket_for(n: int) -> int:
     return BUCKETS[-1]
 
 
+def slot_bucket_for(n: int) -> int:
+    for b in SLOT_BUCKETS:
+        if n <= b:
+            return b
+    return SLOT_BUCKETS[-1]
+
+
 class AdapterStore:
     """Backbone LoRA adapters of one physical FM, stacked for co-batching.
 
     Each entry is a full per-layer LoRA pytree (``models.lora`` layout, NA=1);
-    ``stacked()`` concatenates them into one NA=n stack consumed by
-    ``lm.forward(lora=..., adapter_idx=...)``.
+    ``stacked()`` maintains one NA=capacity() stack consumed by
+    ``lm.forward(lora=..., adapter_idx=...)``. The stack is padded with
+    zero-weight adapters up to the slot bucket, so (a) its shape — and hence
+    the jitted executable — is stable while tasks come and go within
+    capacity, and (b) the "no adapter" sentinel can never alias a real
+    adapter slot: ``index()`` returns ``capacity()``, which both execution
+    paths treat as "zero delta", and any stale in-between index lands on a
+    zero-B pad slot whose delta is exactly zero anyway.
+
+    The stack is cached incrementally: adding an adapter writes it into the
+    next free pad slot of the existing stack (no re-concatenation); only
+    removal or a capacity change invalidates the cache.
     """
 
     def __init__(self, cfg, rank: int = 16):
@@ -47,11 +74,27 @@ class AdapterStore:
         self.ids: list[str] = []
         self._trees: list = []
         self._stacked = None
+        self._stacked_n = 0        # how many real adapters the cache holds
+        self._stacked_cap = 0      # slot capacity the cache was built for
+
+    def __len__(self):
+        return len(self.ids)
+
+    def capacity(self) -> int:
+        """Current slot-bucket capacity of the stacked representation."""
+        return slot_bucket_for(max(1, len(self.ids)))
 
     def add(self, adapter_id: str, tree):
+        if len(self.ids) >= SLOT_BUCKETS[-1]:
+            # beyond the top bucket the capacity() sentinel would alias a
+            # real slot and incremental writes would clamp out of bounds
+            raise ValueError(
+                f"adapter slots exhausted ({SLOT_BUCKETS[-1]}) on this FM; "
+                "deploy another physical FM instance for more tasks")
         self.ids.append(adapter_id)
         self._trees.append(tree)
-        self._stacked = None
+        if self._stacked is not None and self._stacked_cap != self.capacity():
+            self._stacked = None   # crossed a slot bucket: full rebuild
 
     def new(self, adapter_id: str, seed: int = 0):
         tree = self._mod.init_single_adapter(
@@ -60,20 +103,46 @@ class AdapterStore:
         return tree
 
     def remove(self, adapter_id: str):
+        """Idempotent: the server frees adapters on unbind, so callers that
+        also remove explicitly (tests, manual lifecycle) must not fail."""
+        if adapter_id not in self.ids:
+            return
         i = self.ids.index(adapter_id)
         del self.ids[i], self._trees[i]
-        self._stacked = None
+        self._stacked = None       # slots shift: precise full invalidation
 
     def index(self, adapter_id: Optional[str]) -> int:
-        """Sentinel == len(ids) means 'no adapter' (base model)."""
-        return self.ids.index(adapter_id) if adapter_id in self.ids else len(self.ids)
+        """Sentinel == capacity() (the stack's NA) means 'no adapter'."""
+        if adapter_id in self.ids:
+            return self.ids.index(adapter_id)
+        return self.capacity()
+
+    def _zero_tree(self):
+        template = self._trees[0] if self._trees else \
+            self._mod.init_single_adapter(jax.random.PRNGKey(0), self.cfg,
+                                          self.rank)
+        return jax.tree.map(jnp.zeros_like, template)
 
     def stacked(self):
-        if self._stacked is None:
-            trees = self._trees or [self._mod.init_single_adapter(
-                jax.random.PRNGKey(0), self.cfg, self.rank)]
-            self._stacked = self._mod.stack_adapters(trees) if len(trees) > 1 \
-                else trees[0]
+        cap = self.capacity()
+        n = len(self.ids)
+        if self._stacked is not None and self._stacked_cap == cap:
+            if self._stacked_n < n:
+                # incremental: write the new adapters into their pad slots
+                st = self._stacked
+                for j in range(self._stacked_n, n):
+                    tree = self._trees[j]
+                    st = jax.tree.map(
+                        lambda s, t: s.at[:, j].set(t[:, 0].astype(s.dtype)),
+                        st, tree)
+                self._stacked = st
+                self._stacked_n = n
+            return self._stacked
+        zero = self._zero_tree()
+        trees = self._trees + [zero] * (cap - n)
+        self._stacked = self._mod.stack_adapters(trees) if len(trees) > 1 \
+            else trees[0]
+        self._stacked_n, self._stacked_cap = n, cap
         return self._stacked
 
 
@@ -81,14 +150,17 @@ class PhysicalFM:
     """One deployed backbone instance."""
 
     def __init__(self, cfg: ModelConfig, *, seed: int = 0, lora_rank: int = 16,
-                 input_len: int = 32):
+                 input_len: int = 32, lora_impl: str = "segmented",
+                 seg_block_t: int = 16):
         self.cfg = cfg
         self.input_len = input_len
+        self.lora_impl = lora_impl
+        self.seg_block_t = seg_block_t
         t0 = time.perf_counter()
         self.params = lm.init_model(jax.random.PRNGKey(seed), cfg)
         self.adapters = AdapterStore(cfg, lora_rank)
         self.heads: dict[str, Callable] = {}        # task_id -> head fn
-        self._jit_cache: dict[int, Callable] = {}
+        self._jit_cache: dict[tuple[int, int], Callable] = {}
         self.load_time_s = time.perf_counter() - t0
         self.profile: Optional[FMProfile] = None
 
@@ -100,33 +172,69 @@ class PhysicalFM:
         self.heads.pop(task_id, None)
 
     # ---- execution ----
-    def _features_fn(self, bucket: int):
-        """Shared backbone forward with per-request backbone LoRA deltas."""
-        if bucket not in self._jit_cache:
-            cfg = self.cfg
+    def compile_count(self) -> int:
+        """Total jitted executables across all bucket keys (steady-state
+        serving must not grow this when tasks are added within capacity).
+        ``_cache_size`` is a private jax accessor; if a jax release drops it,
+        degrade to counting cache keys (one trace per key in steady state)."""
+        return sum(f._cache_size() if hasattr(f, "_cache_size") else 1
+                   for f in self._jit_cache.values())
+
+    def _features_fn(self, bucket: int, slots: int):
+        """Shared backbone forward with per-request backbone LoRA deltas,
+        jitted per (batch bucket, adapter slot bucket)."""
+        key = (bucket, slots)
+        if key not in self._jit_cache:
+            cfg, impl, bt = self.cfg, self.lora_impl, self.seg_block_t
 
             @jax.jit
-            def run(params, embeds, lora_stack, adapter_idx):
+            def run(params, embeds, lora_stack, adapter_idx, perm, inv, blocks):
+                seg = None
+                if impl == "segmented":
+                    seg = {"perm": perm, "inv": inv, "block_adapter": blocks,
+                           "block_t": bt}
                 if cfg.is_encoder_decoder:
                     # audio-style backbone: stub frames go to the encoder; the
                     # decoder runs over a BOS-only token stream
                     toks = jnp.zeros(embeds.shape[:2], jnp.int32)
                     feats, _, _ = lm.forward(params, cfg, tokens=toks,
                                              enc_embeds=embeds, lora=lora_stack,
-                                             adapter_idx=adapter_idx)
+                                             adapter_idx=adapter_idx,
+                                             lora_impl=impl, lora_seg=seg)
                 else:
                     feats, _, _ = lm.forward(params, cfg, embeds=embeds,
                                              lora=lora_stack,
-                                             adapter_idx=adapter_idx)
+                                             adapter_idx=adapter_idx,
+                                             lora_impl=impl, lora_seg=seg)
                 return feats.mean(axis=1)                      # (B, d) pooled
 
-            self._jit_cache[bucket] = run
-        return self._jit_cache[bucket]
+            self._jit_cache[key] = run
+        return self._jit_cache[key]
+
+    def _segment_meta(self, adapter_idx: np.ndarray, cap: int, seq_len: int):
+        """Per-batch SGMV metadata (host side, built once per co-batch).
+
+        Shapes depend only on (batch bucket, slot bucket, input_len, block_t)
+        — all static per jit-cache key — so steady state never recompiles."""
+        b = len(adapter_idx)
+        bt = self.seg_block_t
+        # worst case: every distinct adapter plus the two sentinels ("no
+        # adapter" == cap and batch padding) opens a block-padded segment
+        max_segs = min(b, cap + 2)
+        tp = padded_tokens(b * seq_len, max_segs, bt)
+        return segment_metadata(np.repeat(adapter_idx, seq_len), cap,
+                                block_t=bt, max_tokens=tp)
 
     def run_batch(self, embeds: np.ndarray, adapter_idx: np.ndarray):
         """embeds: (n, S, d); adapter_idx: (n,). Returns (n, d) features.
-        Pads to the next bucket so steady-state serving never recompiles."""
+        Pads to the next batch bucket (and the adapter stack to its slot
+        bucket) so steady-state serving never recompiles."""
         n = embeds.shape[0]
+        if n > BUCKETS[-1]:            # oversize co-batch: serve in chunks
+            c = BUCKETS[-1]
+            return np.concatenate(
+                [self.run_batch(embeds[i:i + c], adapter_idx[i:i + c])
+                 for i in range(0, n, c)])
         b = bucket_for(n)
         pad = b - n
         if pad:
@@ -134,9 +242,17 @@ class PhysicalFM:
                                                       embeds.dtype)])
             adapter_idx = np.concatenate(
                 [adapter_idx, np.full((pad,), 10**6, np.int32)])
-        out = self._features_fn(b)(self.params, jnp.asarray(embeds),
-                                   self.adapters.stacked(),
-                                   jnp.asarray(adapter_idx, jnp.int32))
+        stack = self.adapters.stacked()
+        cap = self.adapters.capacity()
+        if self.lora_impl == "segmented":
+            perm, inv, blocks = self._segment_meta(
+                np.asarray(adapter_idx), cap, embeds.shape[1])
+        else:   # gather path never reads the metadata; pass static dummies
+            perm = inv = blocks = np.zeros((1,), np.int32)
+        out = self._features_fn(b, cap)(
+            self.params, jnp.asarray(embeds), stack,
+            jnp.asarray(adapter_idx, jnp.int32), jnp.asarray(perm),
+            jnp.asarray(inv), jnp.asarray(blocks))
         return np.asarray(out)[:n]
 
     def calibrate(self, sizes=(1, 2, 4, 8, 16)) -> FMProfile:

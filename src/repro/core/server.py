@@ -25,6 +25,7 @@ class FMplexServer:
     def __init__(self, server_id: str = "s0"):
         self.server_id = server_id
         self.fms: dict[str, PhysicalFM] = {}          # physical FM instances
+        self.executors: dict[str, Executor] = {}      # persistent, one per FM
         self.profiles: dict[str, FMProfile] = {}
         self.schedulers: dict[str, SchedulerBase] = {}
         self.vfms: dict[str, VFM] = {}                # task_id -> vFM
@@ -35,6 +36,7 @@ class FMplexServer:
                   profile: Optional[FMProfile] = None, scheduler: str = "bfq"):
         if fm is not None:
             self.fms[fm_id] = fm
+            self.executors[fm_id] = Executor(fm)
             profile = profile or fm.profile or fm.calibrate()
         assert profile is not None
         self.profiles[fm_id] = profile
@@ -42,6 +44,7 @@ class FMplexServer:
 
     def undeploy_fm(self, fm_id: str):
         self.fms.pop(fm_id, None)
+        self.executors.pop(fm_id, None)
         self.profiles.pop(fm_id)
         self.schedulers.pop(fm_id)
 
@@ -63,7 +66,15 @@ class FMplexServer:
         return vfm
 
     def unbind_task(self, task_id: str) -> Optional[dict]:
-        """Detach a task, returning its movable snapshot (elastic adaptation)."""
+        """Detach a task, returning its movable snapshot (elastic adaptation).
+
+        Frees the task's adapter slot when the binding owns the adapter (its
+        extensions carry the weights — the symmetric case to bind_task adding
+        it) and no other task bound to the same FM shares it: the store has
+        finite slot capacity, so lifetime task churn must not accumulate dead
+        adapters. The snapshot keeps the weights; rebinding re-adds them.
+        Adapters registered out-of-band (``fm.adapters.new``) are left alone.
+        """
         vfm = self.vfms.pop(task_id, None)
         if vfm is None:
             return None
@@ -71,6 +82,14 @@ class FMplexServer:
         fm = self.fms.get(fm_id)
         if fm is not None:
             fm.detach_task(task_id)
+            ext = vfm.extensions
+            aid = ext.adapter_id if ext is not None else None
+            if aid is not None and ext.adapter_weights is not None and not any(
+                    v.extensions is not None
+                    and v.extensions.adapter_id == aid
+                    and self.bindings.get(t) == fm_id
+                    for t, v in self.vfms.items()):
+                fm.adapters.remove(aid)
         return vfm.snapshot()
 
     def rebind_snapshot(self, snap: dict, fm_id: str) -> VFM:
@@ -117,7 +136,9 @@ class FMplexServer:
         batch = self.next_batch(fm_id, now)
         if batch is None:
             return None
-        ex = Executor(self.fms[fm_id])
+        ex = self.executors.get(fm_id)
+        if ex is None:       # FM deployed profile-only, then attached later
+            ex = self.executors[fm_id] = Executor(self.fms[fm_id])
         results = ex.execute(batch, self.vfms)
         self.on_complete(fm_id, batch, time.perf_counter())
         for r in batch.requests:

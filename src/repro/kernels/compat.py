@@ -1,0 +1,19 @@
+"""Version shims shared by the Pallas kernels."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def compiler_params_cls():
+    """jax renamed TPUCompilerParams -> CompilerParams across releases; return
+    whichever this jax provides (raising clearly if the API moved again)."""
+    cls = getattr(pltpu, "CompilerParams",
+                  getattr(pltpu, "TPUCompilerParams", None))
+    if cls is None:
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+            "TPUCompilerParams; update repro.kernels.compat for this jax")
+    return cls
+
+
+COMPILER_PARAMS = compiler_params_cls()

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import COMPILER_PARAMS as _COMPILER_PARAMS
+
 NEG_INF = -1e30
 
 
@@ -113,7 +115,7 @@ def decode_attention_int8(q, k_q, v_q, k_scale, v_scale, lengths, *,
         functools.partial(_kernel, scale=scale, window=window, bs=bs),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths, scales, qg, k_q, v_q)

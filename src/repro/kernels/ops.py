@@ -55,7 +55,7 @@ def decode_attention(q, k_cache, v_cache, lengths, *, window: Optional[int] = No
 
 def segmented_lora(x, block_adapter, a_w, b_w, *, block_t: int = 128,
                    backend: Optional[str] = None, interpret: bool = False):
-    """x: (T, d) adapter-sorted; -> LoRA delta (T, d)."""
+    """x: (T, d) adapter-sorted; b_w: (NA, r, out) -> LoRA delta (T, out)."""
     b = _resolve(backend)
     if b == "pallas":
         return _sgmv_pallas(x, block_adapter, a_w, b_w, block_t=block_t,

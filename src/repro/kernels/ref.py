@@ -59,10 +59,11 @@ def segmented_lora_ref(x, block_adapter, a_w, b_w, block_size: int):
     x: (T, d) rows sorted/padded so each ``block_size`` block belongs to ONE
     adapter; block_adapter: (T // block_size,) adapter id per block (may repeat;
     id == num_adapters means "no adapter" -> zero delta);
-    a_w: (NA, d, r); b_w: (NA, r, d). Returns the LoRA delta (T, d).
+    a_w: (NA, d, r); b_w: (NA, r, out). Returns the LoRA delta (T, out).
     """
     T, d = x.shape
     na = a_w.shape[0]
+    out_dim = b_w.shape[-1]
     nb = T // block_size
     xb = x.reshape(nb, block_size, d)
 
@@ -74,4 +75,4 @@ def segmented_lora_ref(x, block_adapter, a_w, b_w, block_size: int):
         return jnp.where(valid, y, 0.0)
 
     out = jax.vmap(one)(xb, block_adapter)
-    return out.reshape(T, d).astype(x.dtype)
+    return out.reshape(T, out_dim).astype(x.dtype)

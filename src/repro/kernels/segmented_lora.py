@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import COMPILER_PARAMS as _COMPILER_PARAMS
+
 
 def _kernel(seg_ref, x_ref, a_ref, b_ref, o_ref, *, na: int):
     it = pl.program_id(0)
@@ -47,11 +49,13 @@ def segmented_lora(x, block_adapter, a_w, b_w, *, block_t: int = 128,
 
     x: (T, d) with T % block_t == 0, rows grouped so each block has one
     adapter; block_adapter: (T // block_t,) int32 adapter id per block
-    (== num_adapters -> no adapter); a_w: (NA, d, r); b_w: (NA, r, d).
-    Returns (T, d) delta.
+    (== num_adapters -> no adapter); a_w: (NA, d, r); b_w: (NA, r, out).
+    Returns (T, out) delta (out == d for square projections; the serve path
+    also uses out = H*hd / KV*hd for the q / v deltas).
     """
     T, d = x.shape
     na, _, r = a_w.shape
+    out = b_w.shape[-1]
     assert T % block_t == 0, (T, block_t)
     nt = T // block_t
 
@@ -61,15 +65,15 @@ def segmented_lora(x, block_adapter, a_w, b_w, *, block_t: int = 128,
         in_specs=[
             pl.BlockSpec((block_t, d), lambda i, seg: (i, 0)),
             pl.BlockSpec((1, d, r), lambda i, seg: (jnp.minimum(seg[i], na - 1), 0, 0)),
-            pl.BlockSpec((1, r, d), lambda i, seg: (jnp.minimum(seg[i], na - 1), 0, 0)),
+            pl.BlockSpec((1, r, out), lambda i, seg: (jnp.minimum(seg[i], na - 1), 0, 0)),
         ],
-        out_specs=pl.BlockSpec((block_t, d), lambda i, seg: (i, 0)),
+        out_specs=pl.BlockSpec((block_t, out), lambda i, seg: (i, 0)),
     )
     return pl.pallas_call(
         functools.partial(_kernel, na=na),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((T, d), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        out_shape=jax.ShapeDtypeStruct((T, out), x.dtype),
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(block_adapter, x, a_w, b_w)
@@ -101,3 +105,33 @@ def sort_by_adapter(adapter_ids, num_adapters: int, block_t: int = 128,
         perm += [-1] * (max_tokens - total)
         total = max_tokens
     return (np.array(perm, np.int32), np.array(blocks, np.int32), total)
+
+
+def segment_metadata(adapter_ids, num_adapters: int, block_t: int = 128,
+                     max_tokens: int | None = None):
+    """Host-side serve-path metadata, built ONCE per co-batch and reused by
+    every attention sublayer: ``(perm, inv, block_adapter)`` numpy arrays.
+
+    ``perm`` (Tp,) gathers the flattened token stream into adapter-sorted,
+    block-padded order (pad rows clamped to 0 — their garbage deltas live in
+    single-adapter blocks and are dropped by the inverse gather); ``inv`` (T,)
+    scatters the (Tp, out) kernel output back to the original token order as a
+    pure gather, which keeps the jitted forward free of dynamic scatters.
+    """
+    import numpy as np
+
+    raw_perm, blocks, total = sort_by_adapter(
+        adapter_ids, num_adapters, block_t=block_t, max_tokens=max_tokens)
+    real = raw_perm >= 0
+    inv = np.zeros(len(adapter_ids), np.int32)
+    inv[raw_perm[real]] = np.nonzero(real)[0].astype(np.int32)
+    perm = np.where(real, raw_perm, 0).astype(np.int32)
+    return perm, inv, blocks
+
+
+def padded_tokens(n_tokens: int, max_segments: int, block_t: int) -> int:
+    """Static upper bound on the sorted/padded token count: every one of up to
+    ``max_segments`` adapter segments pads to a block multiple. Keyed only on
+    bucketed quantities so jitted serve shapes are stable across batches."""
+    base = -(-n_tokens // block_t) * block_t
+    return base + max_segments * block_t

@@ -9,19 +9,25 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def make_mesh(shape, axes):
+    # jax.sharding.AxisType (explicit-auto axis marking) only exists on newer
+    # jax; older releases treat every axis as Auto already, so omit the kwarg
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh():
     """1-device mesh for CPU smoke tests (same axis names as single-pod)."""
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def make_mesh_for(devices: int, model_parallel: int = 16, pods: int = 1):
@@ -29,6 +35,5 @@ def make_mesh_for(devices: int, model_parallel: int = 16, pods: int = 1):
     data = devices // (model_parallel * pods)
     assert data >= 1 and data * model_parallel * pods == devices, (devices, model_parallel, pods)
     if pods > 1:
-        return jax.make_mesh((pods, data, model_parallel), ("pod", "data", "model"),
-                             axis_types=_auto(3))
-    return jax.make_mesh((data, model_parallel), ("data", "model"), axis_types=_auto(2))
+        return make_mesh((pods, data, model_parallel), ("pod", "data", "model"))
+    return make_mesh((data, model_parallel), ("data", "model"))

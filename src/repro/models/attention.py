@@ -138,7 +138,8 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window: Optional[int] = 
 # ---------------- full layer ops ----------------
 
 def qkv_project(p, x, cfg, pos=None, pos3=None, rope: bool = True,
-                lora=None, adapter_idx=None):
+                lora=None, adapter_idx=None, lora_impl: str = "gather",
+                lora_seg=None):
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
@@ -148,7 +149,8 @@ def qkv_project(p, x, cfg, pos=None, pos3=None, rope: bool = True,
         v = v + p["bv"].astype(x.dtype)
     if lora is not None and adapter_idx is not None:
         from repro.models.lora import qv_lora
-        q, v = qv_lora(x, lora, adapter_idx, q, v)
+        q, v = qv_lora(x, lora, adapter_idx, q, v, impl=lora_impl,
+                       seg=lora_seg)
     if rope:
         if cfg.mrope_sections is not None and pos3 is not None:
             q = apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
@@ -164,10 +166,12 @@ def out_project(p, attn_out, dtype):
 
 
 def self_attention(p, x, cfg, shard, *, causal=True, pos=None, pos3=None,
-                   lora=None, adapter_idx=None):
+                   lora=None, adapter_idx=None, lora_impl="gather",
+                   lora_seg=None):
     """Full-sequence self attention (train / prefill). Returns (out, (k, v))."""
     q, k, v = qkv_project(p, x, cfg, pos=pos, pos3=pos3, lora=lora,
-                          adapter_idx=adapter_idx)
+                          adapter_idx=adapter_idx, lora_impl=lora_impl,
+                          lora_seg=lora_seg)
     q = shard(q, ("batch", None, "heads", None))
     k = shard(k, ("batch", None, "kv_heads", None))
     v = shard(v, ("batch", None, "kv_heads", None))
@@ -184,10 +188,12 @@ def cross_attention(p, x, enc_kv, cfg, shard):
 
 
 def self_attention_decode(p, x, cache, cfg, shard, *, pos=None, pos3=None,
-                          lora=None, adapter_idx=None):
+                          lora=None, adapter_idx=None, lora_impl="gather",
+                          lora_seg=None):
     """One-step decode. x: (B, 1, d); cache: dict(k, v, len). Returns (out, cache')."""
     q, k, v = qkv_project(p, x, cfg, pos=pos, pos3=pos3, lora=lora,
-                          adapter_idx=adapter_idx)
+                          adapter_idx=adapter_idx, lora_impl=lora_impl,
+                          lora_seg=lora_seg)
     B = x.shape[0]
     idx = cache["len"]                                    # (B,) insert position
     bidx = jnp.arange(B)

@@ -131,7 +131,8 @@ def _ffn_apply(p, x, cfg, lay, shard):
 
 def sublayer_apply(p, x, cfg: ModelConfig, lay: SubLayer, shard, *,
                    mode: str, cache=None, pos=None, pos3=None, causal=True,
-                   enc_out=None, lora=None, adapter_idx=None):
+                   enc_out=None, lora=None, adapter_idx=None,
+                   lora_impl: str = "gather", lora_seg=None):
     """Apply one sublayer. mode: 'full' (train/prefill) or 'decode'.
 
     Returns (x, cache', aux_loss). cache' is None unless a cache was provided
@@ -148,12 +149,14 @@ def sublayer_apply(p, x, cfg: ModelConfig, lay: SubLayer, shard, *,
                 pos3 = jnp.repeat(pos[..., None], 3, axis=-1)     # text: t=h=w
             out, attn_cache = attn.self_attention_decode(
                 p["attn"], h, cache, cfg, shard, pos=pos, pos3=pos3,
-                lora=lora, adapter_idx=adapter_idx)
+                lora=lora, adapter_idx=adapter_idx, lora_impl=lora_impl,
+                lora_seg=lora_seg)
             new_cache = dict(cache, **attn_cache)
         else:
             out, (k, v) = attn.self_attention(
                 p["attn"], h, cfg, shard, causal=causal, pos=pos, pos3=pos3,
-                lora=lora, adapter_idx=adapter_idx)
+                lora=lora, adapter_idx=adapter_idx, lora_impl=lora_impl,
+                lora_seg=lora_seg)
             new_cache = None
             if cache is not None:  # prefill: fill the cache
                 S = x.shape[1]

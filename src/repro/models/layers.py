@@ -13,12 +13,25 @@ def rmsnorm_spec(d: int) -> ParamSpec:
     return ParamSpec((d,), ("embed",), init="ones")
 
 
+@jax.custom_jvp
+def _grad_transparent_barrier(x):
+    # optimization_barrier has no differentiation rule; it is semantically the
+    # identity, so expose it to autodiff as one (identity tangent, and the
+    # linear tangent rule transposes to an identity cotangent for reverse mode)
+    return jax.lax.optimization_barrier(x)
+
+
+@_grad_transparent_barrier.defjvp
+def _grad_transparent_barrier_jvp(primals, tangents):
+    return _grad_transparent_barrier(primals[0]), tangents[0]
+
+
 def rmsnorm(w, x, eps: float = 1e-5):
     dt = x.dtype
     # the barrier pins the residual stream (and the TP psum feeding it) to its
     # storage dtype: without it XLA hoists this f32 convert above the
     # all-reduce, doubling every TP collective (§Perf iteration 1)
-    x = jax.lax.optimization_barrier(x)
+    x = _grad_transparent_barrier(x)
     x = x.astype(jnp.float32)
     x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
     return (x * w.astype(jnp.float32)).astype(dt)

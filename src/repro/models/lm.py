@@ -69,7 +69,8 @@ def init_cache(cfg: ModelConfig, batch: int, s_max: int):
 # ---------------- stack forward ----------------
 
 def _stack_forward(layers_p, layout, x, cfg, shard, *, mode, cache, pos, pos3,
-                   causal, enc_out, remat, lora=None, adapter_idx=None):
+                   causal, enc_out, remat, lora=None, adapter_idx=None,
+                   lora_impl="gather", lora_seg=None):
     """Scan over periods. Returns (x, new_cache, aux_sum)."""
     with_cache = cache is not None
     with_lora = lora is not None
@@ -85,7 +86,8 @@ def _stack_forward(layers_p, layout, x, cfg, shard, *, mode, cache, pos, pos3,
             x, nc, a = blk.sublayer_apply(
                 p_layers[i], x, cfg, lay, shard, mode=mode, cache=cache_layers[i],
                 pos=pos, pos3=pos3, causal=causal, enc_out=enc_out,
-                lora=(lora_layers[i] or None), adapter_idx=adapter_idx)
+                lora=(lora_layers[i] or None), adapter_idx=adapter_idx,
+                lora_impl=lora_impl, lora_seg=lora_seg)
             new_caches.append(nc)
             aux = aux + a
         # residual-stream boundary constraint: under sequence parallelism the
@@ -112,11 +114,16 @@ def _stack_forward(layers_p, layout, x, cfg, shard, *, mode, cache, pos, pos3,
 
 def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None, cache=None,
             mode: str = "full", pos=None, pos3=None, enc_embeds=None,
-            shard=NO_SHARD, remat: bool = False, lora=None, adapter_idx=None):
+            shard=NO_SHARD, remat: bool = False, lora=None, adapter_idx=None,
+            lora_impl: str = "gather", lora_seg=None):
     """Backbone forward. Returns (hidden (B,S,d), new_cache, aux_loss).
 
     Inputs: ``tokens`` (B,S) int32 or ``embeds`` (B,S,d) (stub frontends);
     enc-dec models additionally take ``enc_embeds`` (B,S_enc,d).
+
+    ``lora_impl``: "gather" (per-request gather-einsum; train/dry-run) or
+    "segmented" (SGMV serve path — requires ``lora_seg`` metadata built once
+    per adapter-sorted co-batch, see ``kernels.segmented_lora``).
     """
     enc_out = None
     if cfg.is_encoder_decoder:
@@ -144,7 +151,7 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None, cache=None,
     x, new_cache, aux = _stack_forward(
         params["layers"], layout, x, cfg, shard, mode=mode, cache=cache, pos=pos,
         pos3=pos3, causal=causal, enc_out=enc_out, remat=remat, lora=lora,
-        adapter_idx=adapter_idx)
+        adapter_idx=adapter_idx, lora_impl=lora_impl, lora_seg=lora_seg)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     return x, new_cache, aux
 
@@ -232,7 +239,8 @@ def prefill(params, cfg: ModelConfig, *, tokens=None, embeds=None, enc_embeds=No
 
 
 def decode_step(params, cfg: ModelConfig, *, tokens=None, embeds=None, cache,
-                shard=NO_SHARD, lora=None, adapter_idx=None):
+                shard=NO_SHARD, lora=None, adapter_idx=None,
+                lora_impl: str = "gather", lora_seg=None):
     """One-token serve step. tokens: (B,) int32 or embeds: (B, d).
     ``lora``/``adapter_idx``: co-batched multi-task serving (FMplex vFMs)."""
     if embeds is None:
@@ -240,7 +248,8 @@ def decode_step(params, cfg: ModelConfig, *, tokens=None, embeds=None, cache,
     else:
         x = embeds[:, None].astype(jnp.bfloat16)
     x, cache, _ = forward(params, cfg, embeds=x, cache=cache, mode="decode",
-                          shard=shard, lora=lora, adapter_idx=adapter_idx)
+                          shard=shard, lora=lora, adapter_idx=adapter_idx,
+                          lora_impl=lora_impl, lora_seg=lora_seg)
     logits = jnp.einsum("bd,dv->bv", x[:, 0].astype(jnp.float32),
                         params["head"].astype(jnp.float32))
     logits = shard(logits, ("batch", "vocab"))

@@ -53,25 +53,75 @@ def apply_lora_delta(x, a_stack, b_stack, adapter_idx):
 
     x: (B, S, d); a_stack: (NA, d, r); b_stack: (NA, r, out);
     adapter_idx: (B,) with NA == "no adapter". Returns (B, S, out).
+
+    Accumulates in f32 (matching the segmented kernel's MXU accumulation) so
+    the two paths agree to float-roundoff, then casts back to x.dtype.
     """
     na = a_stack.shape[0]
     safe = jnp.minimum(adapter_idx, na - 1)
-    a = a_stack[safe].astype(x.dtype)                    # (B, d, r)
-    b = b_stack[safe].astype(x.dtype)                    # (B, r, out)
-    h = jnp.einsum("bsd,bdr->bsr", x, a)
-    delta = jnp.einsum("bsr,bro->bso", h, b)
+    a = a_stack[safe]                                    # (B, d, r)
+    b = b_stack[safe]                                    # (B, r, out)
+    h = jnp.einsum("bsd,bdr->bsr", x, a,
+                   preferred_element_type=jnp.float32)
+    delta = jnp.einsum("bsr,bro->bso", h, b.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    delta = delta.astype(x.dtype)
     return jnp.where((adapter_idx < na)[:, None, None], delta,
                      jnp.zeros_like(delta))
 
 
-def qv_lora(x, lora_sub: Optional[dict], adapter_idx, q, v):
-    """Add LoRA deltas to projected q/v. q: (B,S,H,hd); v: (B,S,KV,hd)."""
+def apply_lora_delta_segmented(x, a_stack, b_stack, seg):
+    """Segmented (SGMV) per-token LoRA delta — the serve hot path.
+
+    x: (B, S, d); a_stack: (NA, d, r); b_stack: (NA, r, out); ``seg`` is the
+    per-batch metadata dict built once by the executor plane:
+      perm          (Tp,)  int32 — flat-token gather into adapter-sorted,
+                                   block-padded order (pads clamped to 0)
+      inv           (T,)   int32 — inverse gather back to token order
+      block_adapter (Tp // block_t,) int32 — one adapter id per block
+                                   (>= NA means "no adapter": zero delta)
+      block_t       int (static)  — kernel token-block size
+    Returns (B, S, out). Every (block_t, d) tile multiplies against exactly
+    one adapter's (d, r) @ (r, out), so the kernel runs dense MXU matmuls with
+    per-block A/B DMA instead of materializing (B, d, r) gathered weights.
+    """
+    from repro.kernels import ops
+
+    B, S, d = x.shape
+    out = b_stack.shape[-1]
+    x_flat = x.reshape(B * S, d)
+    x_sorted = jnp.take(x_flat, seg["perm"], axis=0)
+    delta = ops.segmented_lora(x_sorted, seg["block_adapter"], a_stack, b_stack,
+                               block_t=seg["block_t"])
+    return jnp.take(delta, seg["inv"], axis=0).reshape(B, S, out)
+
+
+def qv_lora(x, lora_sub: Optional[dict], adapter_idx, q, v,
+            impl: str = "gather", seg: Optional[dict] = None):
+    """Add LoRA deltas to projected q/v. q: (B,S,H,hd); v: (B,S,KV,hd).
+
+    ``impl``: "gather" (train/dry-run default) or "segmented" (serve path;
+    requires ``seg`` metadata — see ``apply_lora_delta_segmented``).
+    """
     if lora_sub is None or not lora_sub or adapter_idx is None:
         return q, v
     B, S, H, hd = q.shape
     KV = v.shape[2]
-    dq = apply_lora_delta(x, lora_sub["q"]["a"], lora_sub["q"]["b"], adapter_idx)
-    dv = apply_lora_delta(x, lora_sub["v"]["a"], lora_sub["v"]["b"], adapter_idx)
+    if impl == "segmented":
+        if seg is None:
+            # fail loudly: a silent gather fallback would pass every parity
+            # test while serving the exact path this impl exists to replace
+            raise ValueError("lora impl 'segmented' requires seg metadata "
+                             "(perm/inv/block_adapter/block_t)")
+        dq = apply_lora_delta_segmented(x, lora_sub["q"]["a"],
+                                        lora_sub["q"]["b"], seg)
+        dv = apply_lora_delta_segmented(x, lora_sub["v"]["a"],
+                                        lora_sub["v"]["b"], seg)
+    else:
+        dq = apply_lora_delta(x, lora_sub["q"]["a"], lora_sub["q"]["b"],
+                              adapter_idx)
+        dv = apply_lora_delta(x, lora_sub["v"]["a"], lora_sub["v"]["b"],
+                              adapter_idx)
     return q + dq.reshape(B, S, H, hd), v + dv.reshape(B, S, KV, hd)
 
 

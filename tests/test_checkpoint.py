@@ -72,8 +72,8 @@ def test_shrink_plan():
 
 def test_cross_mesh_restore_reshards(tmp_path):
     """Restore with explicit shardings places arrays on the current mesh."""
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh()
     from jax.sharding import NamedSharding, PartitionSpec as P
     t = tree()
     ckpt.save(tmp_path, 0, t)

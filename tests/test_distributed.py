@@ -19,7 +19,8 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.distributed.compression import compressed_pmean
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4,), ("data",))
 x = jnp.asarray(np.random.RandomState(0).randn(4, 64).astype(np.float32))
 def f(xs):
     return compressed_pmean(xs, "data")
@@ -33,9 +34,12 @@ scale = float(jnp.max(jnp.abs(want))) + 1e-9
 assert err / scale < 2e-2, (err, scale)
 print("OK", err)
 """
+    # JAX_PLATFORMS=cpu: without it jax may probe TPU/GCP metadata endpoints
+    # from the stripped env, stalling the subprocess past its timeout
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=240, env={"PYTHONPATH": "src",
-                                                    "PATH": "/usr/bin:/bin"})
+                                                    "PATH": "/usr/bin:/bin",
+                                                    "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, r.stderr[-2000:]
     assert "OK" in r.stdout
 

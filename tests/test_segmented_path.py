@@ -1,0 +1,194 @@
+"""Segmented (SGMV) LoRA serve path: numerical parity vs the gather-einsum
+path on mixed-adapter co-batches, and steady-state recompile freedom of the
+bucketed PhysicalFM serve plane."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.physical import AdapterStore, PhysicalFM, slot_bucket_for
+from repro.kernels.segmented_lora import (padded_tokens, segment_metadata,
+                                          segmented_lora)
+from repro.models.lora import (apply_lora_delta, apply_lora_delta_segmented,
+                               init_single_adapter, qv_lora)
+
+BT = 16
+
+
+def _seg_meta(adapter_idx, na, S, bt=BT):
+    """Build the serve-path metadata dict the way PhysicalFM does."""
+    b = len(adapter_idx)
+    tp = padded_tokens(b * S, min(b, na + 2), bt)
+    perm, inv, blocks = segment_metadata(np.repeat(adapter_idx, S), na,
+                                         block_t=bt, max_tokens=tp)
+    return {"perm": jnp.asarray(perm), "inv": jnp.asarray(inv),
+            "block_adapter": jnp.asarray(blocks), "block_t": bt}
+
+
+# ---------------- delta-level parity (f32, atol 1e-4) ----------------
+
+@pytest.mark.parametrize("out_dim", [64, 96, 32])   # == d, > d, < d (q/v dims)
+def test_segmented_matches_gather_mixed_batch(out_dim):
+    """Mixed-adapter batch incl. base-model sentinel rows; ragged segments
+    (S=12 with block_t=16 -> no segment is a block multiple)."""
+    B, S, d, r, na = 7, 12, 64, 4, 3
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(ks[0], (B, S, d), jnp.float32)
+    a = jax.random.normal(ks[1], (na, d, r), jnp.float32) * 0.05
+    b = jax.random.normal(ks[2], (na, r, out_dim), jnp.float32) * 0.05
+    aidx = np.array([0, 2, 0, na, 1, na, 2], np.int32)   # na == no adapter
+
+    want = apply_lora_delta(x, a, b, jnp.asarray(aidx))
+    got = apply_lora_delta_segmented(x, a, b, _seg_meta(aidx, na, S))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+    # sentinel rows contribute exactly zero delta
+    assert np.abs(np.asarray(got)[aidx == na]).max() == 0.0
+
+
+def test_segmented_all_base_model_rows():
+    B, S, d, r, na = 4, 16, 32, 4, 2
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d), jnp.float32)
+    a = jnp.ones((na, d, r)) * 0.1
+    b = jnp.ones((na, r, d)) * 0.1
+    aidx = np.full((B,), na, np.int32)
+    got = apply_lora_delta_segmented(x, a, b, _seg_meta(aidx, na, S))
+    assert np.abs(np.asarray(got)).max() == 0.0
+
+
+def test_qv_lora_impl_parity():
+    """qv_lora dispatches both impls to the same q/v outputs."""
+    B, S, H, KV, hd, d, r, na = 3, 8, 4, 2, 8, 32, 4, 2
+    ks = jax.random.split(jax.random.PRNGKey(2), 7)
+    x = jax.random.normal(ks[0], (B, S, d), jnp.float32)
+    q = jax.random.normal(ks[1], (B, S, H, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    sub = {"q": {"a": jax.random.normal(ks[3], (na, d, r)) * 0.05,
+                 "b": jax.random.normal(ks[4], (na, r, H * hd)) * 0.05},
+           "v": {"a": jax.random.normal(ks[5], (na, d, r)) * 0.05,
+                 "b": jax.random.normal(ks[6], (na, r, KV * hd)) * 0.05}}
+    aidx = np.array([1, na, 0], np.int32)
+    q1, v1 = qv_lora(x, sub, jnp.asarray(aidx), q, v, impl="gather")
+    q2, v2 = qv_lora(x, sub, jnp.asarray(aidx), q, v, impl="segmented",
+                     seg=_seg_meta(aidx, na, S))
+    np.testing.assert_allclose(np.asarray(q2), np.asarray(q1), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(v2), np.asarray(v1), atol=1e-4)
+
+
+def test_pallas_kernel_rectangular_out():
+    """The Pallas kernel itself (interpret mode) supports out != d — the q/v
+    serve deltas project to H*hd / KV*hd, not d."""
+    T, d, r, na, out, bt = 64, 32, 4, 3, 48, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    x = jax.random.normal(ks[0], (T, d), jnp.float32)
+    a = jax.random.normal(ks[1], (na, d, r)) * 0.05
+    b = jax.random.normal(ks[2], (na, r, out)) * 0.05
+    blocks = jnp.asarray([0, 2, na, 1], jnp.int32)
+    got = segmented_lora(x, blocks, a, b, block_t=bt, interpret=True)
+    from repro.kernels import ref
+    want = ref.segmented_lora_ref(x, blocks, a, b, bt)
+    assert got.shape == (T, out)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------- model-level parity on the serve plane ----------------
+
+@pytest.fixture(scope="module")
+def fm_pair():
+    cfg = reduced(get_config("moment-large"))
+    pair = {}
+    for impl in ("segmented", "gather"):
+        fm = PhysicalFM(cfg, seed=0, input_len=12, lora_rank=4,
+                        lora_impl=impl, seg_block_t=BT)
+        for i in range(3):
+            tree = init_single_adapter(jax.random.PRNGKey(i), cfg, 4)
+            # randomize B (zero-init by default) so deltas are nonzero
+            leaves, tdef = jax.tree.flatten(tree)
+            rks = jax.random.split(jax.random.PRNGKey(100 + i), len(leaves))
+            tree = jax.tree.unflatten(tdef, [
+                jax.random.normal(k, l.shape, l.dtype) * 0.05
+                for k, l in zip(rks, leaves)])
+            fm.adapters.add(f"lora{i}", tree)
+        pair[impl] = fm
+    return pair
+
+
+def test_run_batch_segmented_is_default_and_matches_gather(fm_pair):
+    assert PhysicalFM.__init__.__kwdefaults__["lora_impl"] == "segmented"
+    seg, gat = fm_pair["segmented"], fm_pair["gather"]
+    cap = seg.adapters.capacity()
+    rng = np.random.RandomState(0)
+    x = rng.randn(6, 12, seg.cfg.d_model).astype(np.float32)
+    aidx = np.array([0, 0, 2, cap, 1, 2], np.int32)   # mixed + sentinel
+    f_seg = seg.run_batch(x, aidx)
+    f_gat = gat.run_batch(x, aidx)
+    np.testing.assert_allclose(f_seg, f_gat, atol=1e-4)
+    # the adapters actually do something
+    f_base = gat.run_batch(x, np.full(6, cap, np.int32))
+    assert np.abs(f_gat - f_base).max() > 1e-3
+
+
+def test_zero_recompiles_within_slot_capacity(fm_pair):
+    """Binding a new task (adding an adapter) within the slot bucket must not
+    add jit cache entries nor retrace the existing executable."""
+    fm = fm_pair["segmented"]
+    cap = fm.adapters.capacity()
+    rng = np.random.RandomState(1)
+    x = rng.randn(3, 12, fm.cfg.d_model).astype(np.float32)
+    fm.run_batch(x, np.array([0, 1, cap], np.int32))
+    keys_before = set(fm._jit_cache)
+    compiles_before = fm.compile_count()
+    assert len(fm.adapters) < cap                     # room in the bucket
+    fm.adapters.new("late-bound", seed=9)             # bind a new task
+    fm.run_batch(x, np.array([len(fm.adapters) - 1, 0, cap], np.int32))
+    assert set(fm._jit_cache) == keys_before
+    assert fm.compile_count() == compiles_before      # zero new executables
+    fm.adapters.remove("late-bound")
+
+
+# ---------------- adapter store invariants ----------------
+
+def test_adapter_store_incremental_stack_and_sentinel():
+    cfg = reduced(get_config("moment-large"))
+    store = AdapterStore(cfg, rank=4)
+    assert store.index("missing") == store.capacity()   # sentinel == NA
+    t0 = store.new("a0", seed=0)
+    st1 = store.stacked()
+    na = jax.tree.leaves(st1)[0].shape[1]
+    assert na == store.capacity() == slot_bucket_for(1)
+    # incremental add reuses the cached stack object (no full rebuild)
+    store.new("a1", seed=1)
+    st2 = store.stacked()
+    assert jax.tree.leaves(st2)[0].shape[1] == na       # same padded NA
+    # slot 1 holds the new adapter, slots >= 2 stay zero
+    leaf2 = jax.tree.leaves(st2)[0]
+    assert float(jnp.abs(leaf2[:, 2:]).max()) == 0.0
+    # sentinel stays out of range of real adapters after the add
+    assert store.index("nope") == store.capacity() >= len(store.ids)
+    # removal invalidates precisely: stack rebuilt without the adapter
+    store.remove("a0")
+    st3 = store.stacked()
+    l0 = jax.tree.leaves(store._trees[0])[0][:, 0]
+    np.testing.assert_allclose(np.asarray(jax.tree.leaves(st3)[0][:, 0]),
+                               np.asarray(l0))
+
+
+def test_segment_metadata_inverse_roundtrip():
+    from repro.kernels.segmented_lora import sort_by_adapter
+    ids = np.random.RandomState(2).randint(0, 5, 57)
+    tp = padded_tokens(57, 6, 16)
+    perm, inv, blocks = segment_metadata(ids, 4, block_t=16, max_tokens=tp)
+    x = np.random.RandomState(3).randn(57, 8).astype(np.float32)
+    # gather-out then gather-back is the identity on real rows
+    np.testing.assert_array_equal(x[perm][inv], x)
+    # each block holds rows of exactly the adapter blocks[] names (pad rows,
+    # marked -1 in the raw permutation, excluded)
+    raw_perm, raw_blocks, total = sort_by_adapter(ids, 4, block_t=16,
+                                                  max_tokens=tp)
+    np.testing.assert_array_equal(raw_blocks, blocks)
+    for i in range(total // 16):
+        rows = raw_perm[i * 16:(i + 1) * 16]
+        real = {int(ids[j]) for j in rows if j >= 0}
+        assert len(real) <= 1
+        if real:
+            assert real.pop() == raw_blocks[i]
