@@ -1,0 +1,225 @@
+"""Prefill+decode serving benchmark: naive gather decode loop vs DecodeEngine.
+
+Two ways to serve the same generative co-batch (batch × adapters × decode
+steps grid):
+
+  * ``gather_loop`` — the status-quo decode path before the engine existed:
+    a jitted ``lm.decode_step`` per token with ``lora_impl="gather"`` (the
+    (B, d, r) adapter weights are re-gathered every step), a bf16 KV cache,
+    and a host round-trip (argmax on numpy logits) between every token.
+  * ``engine`` — the ``DecodeEngine``: persistent int8 KV slot pool, SGMV
+    segment metadata built once per batch composition, and chunked
+    device-resident greedy decode (one dispatch + one host sync per chunk).
+
+Reported per cell: decode ms/step for both paths and the speedup. The
+steady-state section drives request churn (join/leave with changing adapter
+assignments) through the engine and records that the jitted executable count
+stays flat and the host-side segment sort runs only on composition changes —
+the invariants the tests assert (``tests/test_decode_engine.py``).
+
+Results land under the "decode" section of ``BENCH_serving.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import write_serving_section
+from repro.configs import get_config, reduced
+from repro.core.decode_engine import DecodeEngine
+from repro.core.physical import PhysicalFM, slot_bucket_for
+from repro.models import lm
+
+BATCHES = (2, 4, 8, 16)
+ADAPTERS = (2, 4, 8)
+DECODE_STEPS = (16, 64)       # >= 2 decode chunks: steady state, not boundary
+PROMPT_LEN = 16
+WARMUP = 1
+REPEATS = 5
+
+_gather_jits: dict = {}        # (kind, batch) -> jitted fn, shared across cells
+
+
+def _fm(cfg, num_adapters: int) -> PhysicalFM:
+    fm = PhysicalFM(cfg, seed=0, input_len=PROMPT_LEN, lora_rank=8,
+                    lora_impl="segmented", seg_block_t=16)
+    for i in range(num_adapters):
+        tree = fm.adapters._mod.init_single_adapter(
+            jax.random.PRNGKey(i), fm.cfg, fm.adapters.rank)
+        leaves, tdef = jax.tree.flatten(tree)
+        ks = jax.random.split(jax.random.PRNGKey(1000 + i), len(leaves))
+        fm.adapters.add(f"lora{i}", jax.tree.unflatten(tdef, [
+            jax.random.normal(k, l.shape, l.dtype) * 0.05
+            for k, l in zip(ks, leaves)]))
+    return fm
+
+
+def gather_decode_loop(fm: PhysicalFM, prompts: np.ndarray, aidx: np.ndarray,
+                       steps: int):
+    """Status-quo baseline: jitted per-token gather decode, bf16 KV, host
+    argmax every token. Returns (ttft_s, decode_s, tokens)."""
+    cfg = fm.cfg
+    B = prompts.shape[0]
+    s_max = prompts.shape[1] + steps + 1
+    stack = fm.adapters.stacked()
+    key = ("prefill", B, s_max)
+    if key not in _gather_jits:
+        def pre(params, toks, stack, ai):
+            cache = lm.init_cache(cfg, B, s_max)
+            return lm.prefill(params, cfg, tokens=toks, cache=cache,
+                              lora=stack, adapter_idx=ai, lora_impl="gather")
+        _gather_jits[key] = jax.jit(pre)
+    key_d = ("decode", B)
+    if key_d not in _gather_jits:
+        def dec(params, tok, cache, stack, ai):
+            return lm.decode_step(params, cfg, tokens=tok, cache=cache,
+                                  lora=stack, adapter_idx=ai,
+                                  lora_impl="gather")
+        _gather_jits[key_d] = jax.jit(dec)
+    ai = jnp.asarray(aidx)
+    t0 = time.perf_counter()
+    logits, cache = _gather_jits[key](fm.params, jnp.asarray(prompts), stack, ai)
+    tok = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)   # host sync
+    jax.block_until_ready(cache)     # don't let async prefill leak into decode
+    t1 = time.perf_counter()
+    toks = [tok]
+    for _ in range(steps - 1):
+        logits, cache = _gather_jits[key_d](fm.params, jnp.asarray(tok), cache,
+                                            stack, ai)
+        tok = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
+        toks.append(tok)
+    return t1 - t0, time.perf_counter() - t1, np.stack(toks, axis=1)
+
+
+def engine_decode(eng: DecodeEngine, prompts: np.ndarray, aidx_names, steps: int):
+    """Engine path. Returns (ttft_s, decode_s, tokens)."""
+    t0 = time.perf_counter()
+    for i in range(prompts.shape[0]):
+        eng.join(f"t{i}", prompts[i], adapter_id=aidx_names[i],
+                 max_new_tokens=steps, rid=i)
+    jax.block_until_ready(eng.pool)  # attribute async admission to TTFT,
+    t1 = time.perf_counter()         # not to the first decode chunk
+    done = sorted(eng.drain(), key=lambda s: s.rid)
+    return t1 - t0, time.perf_counter() - t1, \
+        np.asarray([d.tokens for d in done])
+
+
+def run_all(out_path: str = None, smoke: bool = False):
+    global BATCHES, ADAPTERS, DECODE_STEPS
+    if smoke:
+        BATCHES, ADAPTERS, DECODE_STEPS = (8,), (4,), (16,)
+    repeats = 1 if smoke else REPEATS
+    cfg = reduced(get_config("stablelm-1.6b"))
+    fms = {}
+    for na in ADAPTERS:
+        cap = slot_bucket_for(na)
+        if cap not in fms:
+            fms[cap] = _fm(cfg, cap)
+    engines = {}
+    grid = []
+    rng = np.random.RandomState(0)
+    for b in BATCHES:
+        prompts = rng.randint(0, cfg.vocab_size,
+                              (b, PROMPT_LEN)).astype(np.int32)
+        for na in ADAPTERS:
+            cap = slot_bucket_for(na)
+            fm = fms[cap]
+            names = [f"lora{i % na}" for i in range(b)]
+            aidx = np.asarray([fm.adapters.index(n) for n in names], np.int32)
+            ekey = (b, cap)
+            if ekey not in engines:
+                engines[ekey] = DecodeEngine(
+                    fm, num_slots=b, prompt_len=PROMPT_LEN,
+                    max_new=max(DECODE_STEPS), chunk=8)
+            eng = engines[ekey]
+            for steps in DECODE_STEPS:
+                g_ms, e_ms, ttft_g, ttft_e = [], [], [], []
+                for it in range(WARMUP + repeats):
+                    tg, dg, toks_g = gather_decode_loop(fm, prompts, aidx, steps)
+                    te, de, toks_e = engine_decode(eng, prompts, names, steps)
+                    if it >= WARMUP:
+                        g_ms.append(dg * 1e3 / max(steps - 1, 1))
+                        e_ms.append(de * 1e3 / max(steps - 1, 1))
+                        ttft_g.append(tg * 1e3)
+                        ttft_e.append(te * 1e3 / b)   # per-request admission
+                row = {
+                    "batch": b, "num_adapters": na, "decode_steps": steps,
+                    "gather_loop_ms_per_step": round(statistics.median(g_ms), 3),
+                    "engine_ms_per_step": round(statistics.median(e_ms), 3),
+                    "gather_prefill_ms": round(statistics.median(ttft_g), 3),
+                    "engine_admission_ms_per_req": round(
+                        statistics.median(ttft_e), 3),
+                    # int8-KV engine vs bf16-KV loop: tokens can diverge by
+                    # quantization; report agreement, not strict equality
+                    "token_agreement": round(
+                        float((toks_g == toks_e).mean()), 3),
+                }
+                row["speedup"] = round(row["gather_loop_ms_per_step"] /
+                                       max(row["engine_ms_per_step"], 1e-9), 2)
+                grid.append(row)
+                print(f"b={b:3d} na={na:2d} steps={steps:3d} "
+                      f"gather={row['gather_loop_ms_per_step']:7.2f}ms/step "
+                      f"engine={row['engine_ms_per_step']:7.2f}ms/step "
+                      f"x{row['speedup']:.2f} agree={row['token_agreement']}")
+
+    # steady state: request churn (join/leave, adapter reassignment) across
+    # chunks must add zero executables and only re-sort on composition change
+    fm = fms[min(fms)]
+    eng = DecodeEngine(fm, num_slots=4, prompt_len=PROMPT_LEN, max_new=16,
+                       chunk=4)
+    prompts = rng.randint(0, cfg.vocab_size, (8, PROMPT_LEN)).astype(np.int32)
+    for i in range(4):
+        eng.join(f"t{i}", prompts[i], adapter_id=f"lora{i % 2}",
+                 max_new_tokens=6 + i, rid=i)
+    eng.drain()                                     # warm all executables
+    compiles_before = eng.compile_count()
+    builds_before = fm.seg_meta_cache.builds
+    for i in range(4, 8):                           # churn: new compositions
+        eng.join(f"t{i}", prompts[i], adapter_id=f"lora{(i + 1) % 2}",
+                 max_new_tokens=5 + i % 3, rid=i)
+    # steady segment: drain with stable composition; sorts only on the
+    # occupancy changes caused by joins/retires, never per token
+    eng.drain()
+    steady = {
+        "recompiles_after_churn": eng.compile_count() - compiles_before,
+        "seg_meta_builds_during_churn": fm.seg_meta_cache.builds - builds_before,
+        "decode_steps_executed": eng.steps,
+        "jit_entries": len(eng._jit_decode) + len(eng._jit_prefill) + 1,
+    }
+    print("steady state:", steady)
+    assert steady["recompiles_after_churn"] == 0, steady
+
+    # the acceptance condition this PR is judged on: segmented engine decode
+    # beats the naive gather loop wherever co-batching bites (b>=8, na>=4)
+    target = [r for r in grid if r["batch"] >= 8 and r["num_adapters"] >= 4]
+    wins = sum(1 for r in target if r["speedup"] > 1.0)
+    print(f"engine beats gather loop in {wins}/{len(target)} cells "
+          f"with batch >= 8, adapters >= 4")
+
+    out = {
+        "config": cfg.name,
+        "prompt_len": PROMPT_LEN,
+        "chunk": 8,
+        "warmup": WARMUP,
+        "repeats": repeats,
+        "stat": "median",
+        "grid": grid,
+        "segmented_beats_gather_b8_na4": wins == len(target),
+        "steady_state": steady,
+    }
+    write_serving_section("decode", out, out_path)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: single cell, 1 repeat")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    run_all(out_path=args.out, smoke=args.smoke)

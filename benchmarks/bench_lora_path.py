@@ -7,25 +7,29 @@ de-recompiled steady state: after the grid warm-up, binding one more
 adapter within slot-bucket capacity and serving again must add ZERO jitted
 executables.
 
-Results land in ``BENCH_serving.json`` (repo root) as
-  {"grid": [{batch, num_adapters, gather_ms, segmented_ms}, ...],
-   "steady_state": {"recompiles_after_add_within_capacity": 0, ...}}
+Each cell runs ``WARMUP`` untimed iterations then reports the MEDIAN of
+``REPEATS`` individually-timed runs (CPU wall times are noisy; means of a
+single hot loop produced non-monotonic grids). Results land under the
+"pooled" section of ``BENCH_serving.json`` (repo root), stamped with
+backend + jax version + timestamp by ``common.write_serving_section``.
 """
 from __future__ import annotations
 
-import json
-import pathlib
+import argparse
+import statistics
 import time
 
 import jax
 import numpy as np
 
+from common import write_serving_section
 from repro.configs import get_config, reduced
 from repro.core.physical import PhysicalFM, slot_bucket_for
 
 BATCHES = (1, 2, 4, 8, 16, 32)
 ADAPTERS = (1, 2, 4, 8, 16)
 INPUT_LEN = 16
+WARMUP = 2
 REPEATS = 5
 
 
@@ -48,18 +52,26 @@ def _fm(cfg, impl: str, num_adapters: int) -> PhysicalFM:
     return fm
 
 
-def _time_batch(fm: PhysicalFM, batch: int, num_adapters: int) -> float:
+def _time_batch(fm: PhysicalFM, batch: int, num_adapters: int,
+                repeats: int = REPEATS) -> float:
     rng = np.random.RandomState(batch * 100 + num_adapters)
     x = rng.randn(batch, INPUT_LEN, fm.cfg.d_model).astype(np.float32)
     aidx = (np.arange(batch) % num_adapters).astype(np.int32)
-    fm.run_batch(x, aidx)                                   # warm / compile
-    t0 = time.perf_counter()
-    for _ in range(REPEATS):
+    for _ in range(1 + WARMUP):                             # compile + warm
         fm.run_batch(x, aidx)
-    return (time.perf_counter() - t0) / REPEATS * 1e3
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fm.run_batch(x, aidx)
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times) * 1e3
 
 
-def run_all(out_path: str = None):
+def run_all(out_path: str = None, smoke: bool = False):
+    global BATCHES, ADAPTERS
+    if smoke:                                 # CI: tiny grid, one repeat
+        BATCHES, ADAPTERS = (1, 4), (1, 2)
+    repeats = 1 if smoke else REPEATS
     cfg = reduced(get_config("moment-large"))
     grid = []
     # one FM per (impl, slot bucket): realistic multi-adapter residency, and
@@ -74,7 +86,7 @@ def run_all(out_path: str = None):
             row = {"batch": b, "num_adapters": na}
             for impl in ("gather", "segmented"):
                 row[f"{impl}_ms"] = round(
-                    _time_batch(fms[(impl, cap)], b, na), 3)
+                    _time_batch(fms[(impl, cap)], b, na, repeats), 3)
             grid.append(row)
             print(f"b={b:3d} na={na:3d} gather={row['gather_ms']:8.2f}ms "
                   f"segmented={row['segmented_ms']:8.2f}ms")
@@ -99,18 +111,20 @@ def run_all(out_path: str = None):
     out = {
         "config": cfg.name,
         "input_len": INPUT_LEN,
-        "repeats": REPEATS,
-        "backend": jax.default_backend(),
+        "warmup": WARMUP,
+        "repeats": repeats,
+        "stat": "median",
         "grid": grid,
         "steady_state": steady,
     }
-    path = pathlib.Path(out_path or
-                        pathlib.Path(__file__).resolve().parent.parent /
-                        "BENCH_serving.json")
-    path.write_text(json.dumps(out, indent=2) + "\n")
-    print(f"wrote {path}")
+    write_serving_section("pooled", out, out_path)
     return out
 
 
 if __name__ == "__main__":
-    run_all()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny grid, 1 repeat")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    run_all(out_path=args.out, smoke=args.smoke)

@@ -1,10 +1,42 @@
 """Shared helpers for the per-figure benchmarks."""
 from __future__ import annotations
 
+import json
+import pathlib
+import time
+
 from repro.controller.profiles import get_profile
 from repro.serving.loadgen import merge, poisson_trace
 from repro.serving.metrics import jain_fairness, latency_stats
 from repro.serving.simulator import build_single_gpu
+
+BENCH_SERVING = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_serving.json"
+
+
+def write_serving_section(section: str, payload: dict, out_path=None) -> dict:
+    """Merge one benchmark's results into BENCH_serving.json under its own
+    top-level key ("pooled" / "decode"), stamping backend + jax version +
+    timestamp so numbers from different environments can't be conflated."""
+    import jax
+
+    path = pathlib.Path(out_path) if out_path else BENCH_SERVING
+    data = {}
+    if path.exists():
+        try:
+            data = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            data = {}
+    if "grid" in data:           # legacy flat layout (PR 1): rehome as pooled
+        data = {"pooled": data}
+    payload = dict(payload)
+    payload["backend"] = jax.default_backend()
+    payload["jax_version"] = jax.__version__
+    payload["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S%z")
+    data[section] = payload
+    path.write_text(json.dumps(data, indent=2) + "\n")
+    print(f"wrote section '{section}' to {path}")
+    return data
 
 
 def run_mode(mode: str, n_tasks: int, rps_per_task: float, horizon: float,

@@ -1,0 +1,291 @@
+"""Continuous-batching decode engine: segmented-LoRA token serving over a
+persistent int8 KV-cache pool.
+
+Autoregressive serving is where FMplex's co-location wins compound: every
+decode step re-uses the shared backbone across all co-resident tasks, so the
+per-step cost of multi-task isolation must be ~zero. The engine owns:
+
+  * a **slot pool** — a fixed, bucketed number of decode slots backed by one
+    persistent KV cache allocated ONCE (``lm.init_cache(kv_quant=True)``):
+    self-attention K/V live as int8 with per-(slot, kv-head) scales fixed at
+    prefill admission (``kernels.decode_attention_int8.quantize_kv``), halving
+    cache traffic; every decode step streams int8 only;
+  * **admission prefill** — a joining request's prompt runs a single jitted
+    prefill (LoRA applied, K/V quantized in-graph) and is scattered into its
+    slot with one ``dynamic_update_slice`` per cache leaf;
+  * **chunked decode** — ``step_chunk`` advances ALL occupied slots ``chunk``
+    greedy tokens under one jitted ``lax.scan`` (device-resident sampling:
+    one dispatch and one host sync per chunk, not per token);
+  * **cached SGMV metadata** — segment metadata for the S=1 token co-batch is
+    built once per batch *composition* (slot occupancy + adapter assignment)
+    and reused every step; steady-state decode performs zero host-side sorts
+    (``PhysicalFM.seg_meta_cache`` memoizes, this class caches the
+    device-uploaded arrays) and zero recompiles (jit keyed on
+    (slot bucket, adapter slot bucket, chunk), like ``run_batch``).
+
+Requests join and leave slots between chunks without recompilation: all
+traced shapes depend only on the bucketed quantities above. Free slots keep
+stepping (static shapes) — their rows are per-slot isolated garbage that the
+next admission's prefill overwrites.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.physical import PAD_SENTINEL, PhysicalFM, bucket_for
+from repro.models import lm
+
+FREE = PAD_SENTINEL   # free-slot adapter sentinel (same as run_batch padding)
+
+
+@dataclasses.dataclass
+class DecodeSlot:
+    """One occupied decode stream."""
+    rid: int
+    task_id: str
+    adapter_slot: int
+    max_new: int
+    eos_id: Optional[int]
+    tokens: list          # generated token ids (first one from prefill)
+    t_join: float
+    t_first: float        # wall time of the first generated token (TTFT end)
+    done: bool = False
+
+
+class DecodeEngine:
+    """Slot-based continuous-batching token server bound to one PhysicalFM."""
+
+    def __init__(self, fm: PhysicalFM, *, num_slots: int = 8,
+                 prompt_len: Optional[int] = None, max_new: int = 32,
+                 chunk: int = 4, kv_quant: bool = True,
+                 eos_id: Optional[int] = None):
+        cfg = fm.cfg
+        assert cfg.vocab_size > 0 and not cfg.is_representation, \
+            "DecodeEngine serves generative decoder LMs (vocab head required)"
+        assert not cfg.is_encoder_decoder, \
+            "enc-dec decode needs per-slot encoder state (not supported yet)"
+        self.fm = fm
+        self.cfg = cfg
+        self.num_slots = bucket_for(num_slots)
+        self.prompt_len = prompt_len or fm.input_len
+        self.max_new = max_new
+        self.chunk = chunk
+        self.kv_quant = kv_quant
+        self.eos_id = eos_id
+        self.s_max = self.prompt_len + max_new + 1
+        # the persistent pool: allocated once, updated in place (donated)
+        self.pool = lm.init_cache(cfg, self.num_slots, self.s_max,
+                                  kv_quant=kv_quant)
+        self._tokens = jnp.zeros((self.num_slots,), jnp.int32)  # last token/slot
+        self.slots: list[Optional[DecodeSlot]] = [None] * self.num_slots
+        self._slot_adapters = np.full((self.num_slots,), FREE, np.int32)
+        self._jit_prefill: dict[tuple, Callable] = {}
+        self._jit_decode: dict[tuple, Callable] = {}
+        self._jit_write: Optional[Callable] = None
+        self._seg_key = None        # composition signature of cached metadata
+        self._seg_dev = None        # device-uploaded (perm, inv, blocks)
+        self.steps = 0              # decode steps executed (all slots)
+        self.last_chunk_s = 0.0
+
+    # ---- occupancy ----
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def active_count(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    def compile_count(self) -> int:
+        """Total jitted executables (prefill + decode + pool writes); steady
+        state across request join/leave churn must not grow this."""
+        fns = list(self._jit_prefill.values()) + list(self._jit_decode.values())
+        if self._jit_write is not None:
+            fns.append(self._jit_write)
+        return sum(f._cache_size() if hasattr(f, "_cache_size") else 1
+                   for f in fns)
+
+    # ---- jitted planes ----
+    @staticmethod
+    def _donate(*argnums):
+        return argnums if jax.default_backend() != "cpu" else ()
+
+    def _prefill_fn(self, cap: int):
+        key = (cap,)
+        if key not in self._jit_prefill:
+            cfg, impl, bt = self.cfg, self.fm.lora_impl, self.fm.seg_block_t
+            s_max, kvq = self.s_max, self.kv_quant
+
+            @jax.jit
+            def run(params, tokens, lora_stack, adapter_idx, perm, inv, blocks):
+                seg = None
+                if impl == "segmented":
+                    seg = {"perm": perm, "inv": inv, "block_adapter": blocks,
+                           "block_t": bt}
+                cache = lm.init_cache(cfg, 1, s_max, kv_quant=kvq)
+                logits, cache = lm.prefill(
+                    params, cfg, tokens=tokens, cache=cache, lora=lora_stack,
+                    adapter_idx=adapter_idx, lora_impl=impl, lora_seg=seg)
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+            self._jit_prefill[key] = run
+        return self._jit_prefill[key]
+
+    def _write_fn(self):
+        if self._jit_write is None:
+            donate = self._donate(0)
+
+            def write(pool, cache, slot):
+                # every cache leaf is (nper, batch, ...): scatter the one-row
+                # prefill cache into the pool's slot along the batch axis
+                return jax.tree.map(
+                    lambda p, c: jax.lax.dynamic_update_slice_in_dim(
+                        p, c.astype(p.dtype), slot, axis=1), pool, cache)
+
+            self._jit_write = jax.jit(write, donate_argnums=donate)
+        return self._jit_write
+
+    def _decode_fn(self, cap: int, chunk: int):
+        key = (self.num_slots, cap, chunk)
+        if key not in self._jit_decode:
+            cfg, impl, bt = self.cfg, self.fm.lora_impl, self.fm.seg_block_t
+            donate = self._donate(1)
+
+            def run(params, pool, tokens, lora_stack, adapter_idx, perm, inv,
+                    blocks):
+                seg = None
+                if impl == "segmented":
+                    seg = {"perm": perm, "inv": inv, "block_adapter": blocks,
+                           "block_t": bt}
+
+                def body(carry, _):
+                    pool, tok = carry
+                    logits, pool = lm.decode_step(
+                        params, cfg, tokens=tok, cache=pool, lora=lora_stack,
+                        adapter_idx=adapter_idx, lora_impl=impl, lora_seg=seg)
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    return (pool, nxt), nxt
+
+                (pool, tok), out = jax.lax.scan(body, (pool, tokens), None,
+                                                length=chunk)
+                return pool, tok, out.T                      # (slots, chunk)
+
+            self._jit_decode[key] = jax.jit(run, donate_argnums=donate)
+        return self._jit_decode[key]
+
+    # ---- segment metadata (per composition, not per token) ----
+    def _segments(self, cap: int):
+        key = (self._slot_adapters.tobytes(), cap)
+        if key != self._seg_key:
+            perm, inv, blocks = self.fm.segment_meta(self._slot_adapters, cap, 1)
+            self._seg_dev = (jnp.asarray(perm), jnp.asarray(inv),
+                             jnp.asarray(blocks))
+            self._seg_key = key
+        return self._seg_dev
+
+    def _prefill_segments(self, adapter_slot: int, cap: int):
+        ids = np.full((self.prompt_len,), adapter_slot, np.int32)
+        perm, inv, blocks = self.fm.segment_meta(ids, cap, 1)
+        return jnp.asarray(perm), jnp.asarray(inv), jnp.asarray(blocks)
+
+    # ---- serving surface ----
+    def join(self, task_id: str, prompt: np.ndarray, *,
+             adapter_id: Optional[str] = None, max_new_tokens: int = 8,
+             rid: int = -1, eos_id: Optional[int] = None) -> int:
+        """Admit one request: prefill its prompt (LoRA applied, K/V int8-
+        quantized in-graph), scatter it into a free slot, produce the first
+        token. Returns the slot index; raises if the pool is full.
+
+        Admission is fixed-shape (the prefill executable is compiled for
+        ``prompt_len``), so mismatched requests degrade gracefully instead of
+        wedging the serving step: short prompts are left-padded with token 0
+        (attended, but positionally before the real prompt), long prompts
+        keep their LAST ``prompt_len`` tokens, and the decode budget clamps
+        to the pool's ``max_new`` capacity."""
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("no free decode slots; step_chunk() first")
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) > self.prompt_len:
+            prompt = prompt[-self.prompt_len:]     # causal LM: suffix matters
+        elif len(prompt) < self.prompt_len:
+            prompt = np.concatenate(
+                [np.zeros(self.prompt_len - len(prompt), np.int32), prompt])
+        max_new_tokens = max(1, min(max_new_tokens, self.max_new))
+        slot = free[0]
+        cap = self.fm.adapters.capacity()
+        aslot = self.fm.adapters.index(adapter_id)
+        perm, inv, blocks = self._prefill_segments(aslot, cap)
+        first, cache = self._prefill_fn(cap)(
+            self.fm.params, jnp.asarray(prompt[None]), self.fm.adapters.stacked(),
+            jnp.full((1,), aslot, jnp.int32), perm, inv, blocks)
+        self.pool = self._write_fn()(self.pool, cache, slot)
+        self._tokens = self._tokens.at[slot].set(first[0])
+        now = time.perf_counter()
+        tok0 = int(first[0])
+        eos = self.eos_id if eos_id is None else eos_id
+        self.slots[slot] = DecodeSlot(
+            rid=rid, task_id=task_id, adapter_slot=aslot,
+            max_new=max_new_tokens, eos_id=eos,
+            tokens=[tok0], t_join=now, t_first=now,
+            done=(max_new_tokens == 1 or (eos is not None and tok0 == eos)))
+        self._slot_adapters[slot] = aslot
+        self._seg_key = None                    # composition changed
+        return slot
+
+    def leave(self, slot: int) -> DecodeSlot:
+        """Retire a slot (finished or cancelled) and free it for admission."""
+        s = self.slots[slot]
+        assert s is not None, slot
+        self.slots[slot] = None
+        self._slot_adapters[slot] = FREE
+        self._seg_key = None                    # composition changed
+        # keep the freed slot's cache length bounded while it idles
+        for sub in self.pool:
+            if isinstance(sub, dict) and "len" in sub:
+                sub["len"] = sub["len"].at[:, slot].set(0)
+        return s
+
+    def step_chunk(self) -> list[DecodeSlot]:
+        """Advance every occupied slot by up to ``chunk`` greedy tokens under
+        one jitted scan; retire and return the slots that finished."""
+        t0 = time.perf_counter()
+        finished = [i for i, s in enumerate(self.slots)
+                    if s is not None and s.done]
+        live = [i for i, s in enumerate(self.slots)
+                if s is not None and not s.done]
+        if live:
+            cap = self.fm.adapters.capacity()
+            perm, inv, blocks = self._segments(cap)
+            self.pool, self._tokens, out = self._decode_fn(cap, self.chunk)(
+                self.fm.params, self.pool, self._tokens,
+                self.fm.adapters.stacked(),
+                jnp.asarray(self._slot_adapters), perm, inv, blocks)
+            out = np.asarray(out)               # one host sync per chunk
+            self.steps += self.chunk
+            now = time.perf_counter()
+            for i in live:
+                s = self.slots[i]
+                take = min(self.chunk, s.max_new - len(s.tokens))
+                for t in out[i, :take]:
+                    s.tokens.append(int(t))
+                    if s.eos_id is not None and int(t) == s.eos_id:
+                        break
+                if len(s.tokens) >= s.max_new or (
+                        s.eos_id is not None and s.tokens[-1] == s.eos_id):
+                    s.done = True
+                    finished.append(i)
+        retired = [self.leave(i) for i in finished]
+        self.last_chunk_s = time.perf_counter() - t0
+        return retired
+
+    def drain(self) -> list[DecodeSlot]:
+        """Step until every occupied slot retires."""
+        out = []
+        while self.active_count():
+            out += self.step_chunk()
+        return out

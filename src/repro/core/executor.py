@@ -1,26 +1,33 @@
-"""Batch executor: runs a BFQ-formed batch against a physical FM (real plane).
+"""Batch executor: runs BFQ-formed batches against a physical FM (real plane).
 
-Serve data path (paper Fig. 4 steps 4-7, segmented-LoRA formulation):
+The executor owns both halves of the serve data path (paper Fig. 4 steps 4-7,
+segmented-LoRA formulation), split by workload:
+
+**Pooled-feature path** (``execute`` — one shared forward per batch):
 
   1. adapter sort   — the scheduler's co-batch arrives as adapter-compatible
      sub-batches (``Batch.sub_batches``); the executor concatenates them so
      rows sharing an adapter are contiguous, and maps each row's adapter id
      to its slot in the FM's ``AdapterStore`` (sentinel == store capacity
      means "base model, no adapter").
-  2. block metadata — ``PhysicalFM.run_batch`` flattens the sorted batch
-     token-major and builds the SGMV metadata ONCE per batch on the host
-     (``kernels.segmented_lora.segment_metadata``): a permutation into
-     block-padded single-adapter segments, its inverse, and one adapter id
-     per ``block_t`` token block.
-  3. SGMV backbone  — one shared backbone pass; at every attention sublayer
-     the q/v LoRA deltas dispatch through ``kernels.ops.segmented_lora``
-     (Pallas on TPU, jnp oracle on CPU), so each (block_t, d) tile multiplies
-     against exactly one adapter's (d, r) @ (r, out) — no per-request
-     (B, d, r) weight materialization.
-  4. task heads     — pooled features are split per task and each task's
-     decoder head is applied ONCE over its feature sub-array (batched), not
-     per request; heads that are not batch-aware fall back to per-row
-     application.
+  2. block metadata — ``PhysicalFM.run_batch_device`` flattens the sorted
+     batch token-major and builds the SGMV metadata ONCE per batch
+     composition on the host (memoized in ``PhysicalFM.seg_meta_cache``).
+  3. SGMV backbone  — one shared backbone pass; q/v LoRA deltas dispatch
+     through ``kernels.ops.segmented_lora`` (Pallas on TPU, jnp oracle on
+     CPU) — no per-request (B, d, r) weight materialization.
+  4. task heads     — pooled features STAY ON DEVICE; each task's decoder
+     head runs batched under one jit per task signature over its feature
+     sub-array. Heads that do not trace (impure / numpy-bound) fall back to
+     host-side batched or per-row application — verdicts are probed once and
+     cached per (task, head) pair.
+
+**Prefill+decode path** (``execute_generate`` — generative requests,
+``Request.max_new_tokens > 0``): requests stream through the FM's
+``DecodeEngine`` — admission prefill into a persistent int8 KV slot pool,
+then chunked segmented-LoRA decode with continuous batching: as slots
+retire, queued requests join between chunks, so one call serves a batch
+larger than the pool with zero recompiles.
 
 Batch shapes are bucketed (batch size AND adapter slot count), so steady-state
 serving reuses compiled executables — zero recompiles as tasks come and go
@@ -28,8 +35,10 @@ within slot capacity.
 """
 from __future__ import annotations
 
+import collections
 import time
 
+import jax
 import numpy as np
 
 from repro.core.physical import PhysicalFM
@@ -40,45 +49,77 @@ from repro.core.vfm import VFM
 class Executor:
     def __init__(self, fm: PhysicalFM):
         self.fm = fm
-        # task_id -> (head object, batch-aware verdict); the head is stored so
-        # a rebound task with a NEW head re-probes (id()-keyed caching would
-        # let a recycled id inherit a stale verdict on this persistent object)
-        self._batch_aware: dict[str, tuple[object, bool]] = {}
+        # task_id -> (head object, mode); the head is stored so a rebound task
+        # with a NEW head re-probes (id()-keyed caching would let a recycled
+        # id inherit a stale verdict on this persistent object). mode is
+        # "device" (jitted on-device), "batched" (host, vectorized) or "row".
+        self._head_mode: dict[str, tuple[object, str]] = {}
+        self._head_jit: dict[str, object] = {}      # task_id -> jitted head
 
-    def _apply_head(self, tid: str, head, feats: np.ndarray, idxs: list[int]):
-        """Apply one task's head over its feature sub-array — batched when the
-        head vectorizes over rows, per-row otherwise. The verdict is probed on
-        the head's first multi-row batch: its batched output must match
-        per-row application on the first row (a shape check alone is not
+    def _run_device_head(self, tid: str, feats_dev, idxs: list[int]):
+        import jax.numpy as jnp
+        y = self._head_jit[tid](feats_dev[jnp.asarray(np.asarray(idxs))])
+        return list(np.asarray(y))
+
+    def _apply_head(self, tid: str, head, feats_dev, feats_fn,
+                    idxs: list[int]):
+        """Apply one task's head over its feature sub-array — jitted on device
+        when the head traces, host-batched when it vectorizes, per-row
+        otherwise. ``feats_fn`` materializes the host copy of the features
+        lazily, so steady-state batches whose heads all run on device never
+        pull the feature array to the host. The verdict is probed on the
+        head's first multi-row batch: its batched output must match per-row
+        application on the first and last rows (a shape check alone is not
         enough — a head that reduces over its input, e.g. mean-centering,
-        returns the right shape with cross-row-contaminated values). The probe
-        costs one extra row-0 call; heads are assumed pure over features.
-        n_t == 1 always goes per-row (the conventions are indistinguishable
-        there)."""
+        returns the right shape with cross-row-contaminated values). The
+        probe costs two extra row calls; heads are assumed pure over
+        features. n_t == 1 always goes per-row (the conventions are
+        indistinguishable there)."""
         if len(idxs) <= 1:
-            return [head(feats[i]) for i in idxs]
-        cached = self._batch_aware.get(tid)
+            return [head(feats_fn()[i]) for i in idxs]
+        cached = self._head_mode.get(tid)
         if cached is not None and cached[0] is head:
-            if cached[1]:
-                return list(head(feats[idxs]))
-            return [head(feats[i]) for i in idxs]
+            mode = cached[1]
+            if mode == "device":
+                return self._run_device_head(tid, feats_dev, idxs)
+            if mode == "batched":
+                return list(head(feats_fn()[idxs]))
+            return [head(feats_fn()[i]) for i in idxs]
+        feats = feats_fn()                          # probing needs host rows
         if not np.ptp(feats[idxs], axis=0).any():
             # identical probe rows can't discriminate batched from reducing
             # heads (e.g. all-default zero payloads) — apply per-row and defer
             # the verdict to a batch with distinct rows
             return [head(feats[i]) for i in idxs]
+        row0 = head(feats[idxs[0]])
+        rowN = head(feats[idxs[-1]])          # catches row-position-dependent
+
+        def matches(y):
+            return (getattr(y, "shape", (None,))[0] == len(idxs)
+                    and np.asarray(y[0]).shape == np.asarray(row0).shape
+                    and np.allclose(np.asarray(y[0]), np.asarray(row0),
+                                    atol=1e-5)
+                    and np.asarray(y[-1]).shape == np.asarray(rowN).shape
+                    and np.allclose(np.asarray(y[-1]), np.asarray(rowN),
+                                    atol=1e-5))
+
+        # device first: one jitted executable per (task, head) signature
+        try:
+            fn = jax.jit(head)
+            import jax.numpy as jnp
+            y = np.asarray(fn(feats_dev[jnp.asarray(np.asarray(idxs))]))
+            if matches(y):
+                self._head_jit[tid] = fn
+                self._head_mode[tid] = (head, "device")
+                return list(y)
+        except Exception:
+            pass
         try:
             y = head(feats[idxs])
-            row0 = head(feats[idxs[0]])
-            rowN = head(feats[idxs[-1]])      # catches row-position-dependent
-            ok = (getattr(y, "shape", (None,))[0] == len(idxs)
-                  and np.asarray(y[0]).shape == np.asarray(row0).shape
-                  and np.allclose(np.asarray(y[0]), np.asarray(row0))
-                  and np.asarray(y[-1]).shape == np.asarray(rowN).shape
-                  and np.allclose(np.asarray(y[-1]), np.asarray(rowN)))
+            ok = matches(y)
         except Exception:
             y, ok = None, False
-        self._batch_aware[tid] = (head, ok)
+        self._head_mode[tid] = (head, "batched" if ok else "row")
         if ok:
             return list(y)                    # reuse the probed batched output
         return [head(feats[i]) for i in idxs]
@@ -98,7 +139,17 @@ class Executor:
                                  np.float32)
                 embeds.append(x)
                 aidx.append(ai)
-        feats = self.fm.run_batch(np.stack(embeds), np.asarray(aidx, np.int32))
+        feats_dev = self.fm.run_batch_device(np.stack(embeds),
+                                             np.asarray(aidx, np.int32))
+        # host copy, materialized lazily: only headless requests, probes, and
+        # fallback-mode heads need it — all-device-head batches never pull
+        feats_np: list = [None]
+
+        def feats_fn():
+            if feats_np[0] is None:
+                feats_np[0] = np.asarray(feats_dev)
+            return feats_np[0]
+
         # per-task batched head application over feature sub-arrays
         by_task: dict[str, list[int]] = {}
         for i, r in enumerate(order):
@@ -106,13 +157,51 @@ class Executor:
         out = {}
         for tid, idxs in by_task.items():
             head = self.fm.heads.get(tid)
-            ys = [feats[i] for i in idxs] if head is None \
-                else self._apply_head(tid, head, feats, idxs)
+            ys = [feats_fn()[i] for i in idxs] if head is None \
+                else self._apply_head(tid, head, feats_dev, feats_fn, idxs)
             for i, y in zip(idxs, ys):
                 out[order[i].rid] = y
         # evict verdicts of detached tasks (persistent executor: don't retain
         # dead head closures for the life of the server)
-        self._batch_aware = {t: v for t, v in self._batch_aware.items()
-                             if t in self.fm.heads}
+        self._head_mode = {t: v for t, v in self._head_mode.items()
+                           if t in self.fm.heads}
+        self._head_jit = {t: v for t, v in self._head_jit.items()
+                          if t in self.fm.heads}
+        self.last_exec_s = time.perf_counter() - t0
+        return out
+
+    def execute_generate(self, batch: Batch, vfms: dict[str, VFM],
+                         engine) -> dict[int, object]:
+        """Serve generative requests through the continuous-batching
+        ``DecodeEngine``: admit into free slots, advance chunked decode,
+        re-admit as slots retire. Returns {request id: generated token ids}.
+        Also stamps ``Request.first_token_time`` (TTFT) on each request."""
+        t0 = time.perf_counter()
+        pending = collections.deque(
+            r for _, reqs in batch.sub_batches for r in reqs)
+        by_rid = {r.rid: r for r in pending}
+        out: dict[int, object] = {}
+
+        def retire(slots):
+            now = time.perf_counter()
+            for s in slots:
+                r = by_rid.get(s.rid)
+                if r is not None:
+                    r.first_token_time = s.t_first
+                    # per-request completion: a short request co-batched with
+                    # a long one finishes at ITS retire chunk, not at the end
+                    # of the whole drain (keeps TPOT honest; on_complete
+                    # preserves an already-stamped finish_time)
+                    r.finish_time = now
+                out[s.rid] = np.asarray(s.tokens, np.int32)
+
+        while pending or engine.active_count():
+            while pending and engine.free_slots():
+                r = pending.popleft()
+                ext = vfms[r.task_id].extensions
+                engine.join(r.task_id, r.payload,
+                            adapter_id=ext.adapter_id,
+                            max_new_tokens=r.max_new_tokens, rid=r.rid)
+            retire(engine.step_chunk())
         self.last_exec_s = time.perf_counter() - t0
         return out

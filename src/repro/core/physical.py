@@ -27,11 +27,15 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.profile import FMProfile, profile_backbone
-from repro.kernels.segmented_lora import padded_tokens, segment_metadata
+from repro.kernels.segmented_lora import SegmentMetaCache, padded_tokens
 from repro.models import lm
 
 BUCKETS = (1, 2, 4, 8, 16, 32)
 SLOT_BUCKETS = (4, 8, 16, 32, 64)
+# adapter-id sentinel for rows that are padding / free decode slots; beyond
+# any real slot index AND any slot bucket, so both LoRA paths zero it out.
+# Shared with DecodeEngine so pad rows and free slots segment identically.
+PAD_SENTINEL = 10**6
 
 
 def bucket_for(n: int) -> int:
@@ -161,6 +165,7 @@ class PhysicalFM:
         self.adapters = AdapterStore(cfg, lora_rank)
         self.heads: dict[str, Callable] = {}        # task_id -> head fn
         self._jit_cache: dict[tuple[int, int], Callable] = {}
+        self.seg_meta_cache = SegmentMetaCache()    # per-composition host sort
         self.load_time_s = time.perf_counter() - t0
         self.profile: Optional[FMProfile] = None
 
@@ -211,10 +216,12 @@ class PhysicalFM:
             self._jit_cache[key] = run
         return self._jit_cache[key]
 
-    def _segment_meta(self, adapter_idx: np.ndarray, cap: int, seq_len: int):
-        """Per-batch SGMV metadata (host side, built once per co-batch).
+    def segment_meta(self, adapter_idx: np.ndarray, cap: int, seq_len: int):
+        """Per-batch SGMV metadata (host side, built once per co-batch
+        *composition* — ``seg_meta_cache`` memoizes repeats, so steady-state
+        serving and every step of a decode co-batch skip the host sort).
 
-        Shapes depend only on (batch bucket, slot bucket, input_len, block_t)
+        Shapes depend only on (batch bucket, slot bucket, seq_len, block_t)
         — all static per jit-cache key — so steady state never recompiles."""
         b = len(adapter_idx)
         bt = self.seg_block_t
@@ -222,18 +229,19 @@ class PhysicalFM:
         # adapter" == cap and batch padding) opens a block-padded segment
         max_segs = min(b, cap + 2)
         tp = padded_tokens(b * seq_len, max_segs, bt)
-        return segment_metadata(np.repeat(adapter_idx, seq_len), cap,
-                                block_t=bt, max_tokens=tp)
+        ids = np.repeat(np.asarray(adapter_idx, np.int32), seq_len) \
+            if seq_len != 1 else np.asarray(adapter_idx, np.int32)
+        return self.seg_meta_cache.get(ids, cap, bt, tp)
 
-    def run_batch(self, embeds: np.ndarray, adapter_idx: np.ndarray):
-        """embeds: (n, S, d); adapter_idx: (n,). Returns (n, d) features.
-        Pads to the next batch bucket (and the adapter stack to its slot
-        bucket) so steady-state serving never recompiles."""
+    def run_batch_device(self, embeds, adapter_idx: np.ndarray):
+        """Device-resident serve forward: like ``run_batch`` but returns the
+        pooled features as a jax array (no host pull) so per-task heads can
+        run on-device (see ``Executor``)."""
         n = embeds.shape[0]
         if n > BUCKETS[-1]:            # oversize co-batch: serve in chunks
             c = BUCKETS[-1]
-            return np.concatenate(
-                [self.run_batch(embeds[i:i + c], adapter_idx[i:i + c])
+            return jnp.concatenate(
+                [self.run_batch_device(embeds[i:i + c], adapter_idx[i:i + c])
                  for i in range(0, n, c)])
         b = bucket_for(n)
         pad = b - n
@@ -241,11 +249,11 @@ class PhysicalFM:
             embeds = np.concatenate([embeds, np.zeros((pad,) + embeds.shape[1:],
                                                       embeds.dtype)])
             adapter_idx = np.concatenate(
-                [adapter_idx, np.full((pad,), 10**6, np.int32)])
+                [adapter_idx, np.full((pad,), PAD_SENTINEL, np.int32)])
         stack = self.adapters.stacked()
         cap = self.adapters.capacity()
         if self.lora_impl == "segmented":
-            perm, inv, blocks = self._segment_meta(
+            perm, inv, blocks = self.segment_meta(
                 np.asarray(adapter_idx), cap, embeds.shape[1])
         else:   # gather path never reads the metadata; pass static dummies
             perm = inv = blocks = np.zeros((1,), np.int32)
@@ -253,7 +261,13 @@ class PhysicalFM:
             self.params, jnp.asarray(embeds), stack,
             jnp.asarray(adapter_idx, jnp.int32), jnp.asarray(perm),
             jnp.asarray(inv), jnp.asarray(blocks))
-        return np.asarray(out)[:n]
+        return out[:n]
+
+    def run_batch(self, embeds: np.ndarray, adapter_idx: np.ndarray):
+        """embeds: (n, S, d); adapter_idx: (n,). Returns (n, d) features.
+        Pads to the next batch bucket (and the adapter stack to its slot
+        bucket) so steady-state serving never recompiles."""
+        return np.asarray(self.run_batch_device(embeds, adapter_idx))
 
     def calibrate(self, sizes=(1, 2, 4, 8, 16)) -> FMProfile:
         d = self.cfg.d_model

@@ -19,6 +19,10 @@ class Request:
     arrival: float
     payload: Any = None                    # model input (real plane) or size hint
     tokens: float = 1.0                    # token-based FMs: work units (§4.2)
+    # generative serving: > 0 routes the request through the continuous-
+    # batching DecodeEngine (payload = prompt token ids); the budget counts
+    # the prefill-produced first token
+    max_new_tokens: int = 0
     slo: SLO = dataclasses.field(default_factory=SLO)
     rid: int = dataclasses.field(default_factory=lambda: next(_ids))
     # BFQ tags (assigned at enqueue)
@@ -27,6 +31,7 @@ class Request:
     v_at_arrival: float = 0.0
     # lifecycle timestamps
     dispatch_time: Optional[float] = None
+    first_token_time: Optional[float] = None   # decode path: TTFT endpoint
     finish_time: Optional[float] = None
     result: Any = None
 

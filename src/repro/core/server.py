@@ -13,7 +13,8 @@ from __future__ import annotations
 import time
 from typing import Optional
 
-from repro.core.bfq import SCHEDULERS, SchedulerBase
+from repro.core.bfq import SCHEDULERS, SchedulerBase, group_sub_batches
+from repro.core.decode_engine import DecodeEngine
 from repro.core.executor import Executor
 from repro.core.physical import PhysicalFM
 from repro.core.profile import FMProfile
@@ -26,6 +27,7 @@ class FMplexServer:
         self.server_id = server_id
         self.fms: dict[str, PhysicalFM] = {}          # physical FM instances
         self.executors: dict[str, Executor] = {}      # persistent, one per FM
+        self.engines: dict[str, DecodeEngine] = {}    # persistent decode pools
         self.profiles: dict[str, FMProfile] = {}
         self.schedulers: dict[str, SchedulerBase] = {}
         self.vfms: dict[str, VFM] = {}                # task_id -> vFM
@@ -45,8 +47,17 @@ class FMplexServer:
     def undeploy_fm(self, fm_id: str):
         self.fms.pop(fm_id, None)
         self.executors.pop(fm_id, None)
+        self.engines.pop(fm_id, None)
         self.profiles.pop(fm_id)
         self.schedulers.pop(fm_id)
+
+    def decode_engine(self, fm_id: str, **kwargs) -> DecodeEngine:
+        """The FM's persistent continuous-batching decode pool (created on
+        first use; ``kwargs`` configure it then — slots, chunk, max_new...)."""
+        eng = self.engines.get(fm_id)
+        if eng is None:
+            eng = self.engines[fm_id] = DecodeEngine(self.fms[fm_id], **kwargs)
+        return eng
 
     def bind_task(self, task_id: str, fm_id: str, *, weight: float = 1.0,
                   slo=None, extensions: Optional[TaskExtensions] = None) -> VFM:
@@ -121,7 +132,8 @@ class FMplexServer:
     def on_complete(self, fm_id: str, batch: Batch, now: float):
         sched = self.schedulers[fm_id]
         for r in batch.requests:
-            r.finish_time = now
+            if r.finish_time is None:     # decode path stamps per-request
+                r.finish_time = now       # completion at its retire chunk
             v = self.vfms.get(r.task_id)
             if v is not None:
                 v.acct.completed += 1
@@ -131,7 +143,12 @@ class FMplexServer:
 
     # ---- real-plane serving loop ----
     def step(self, fm_id: str) -> Optional[Batch]:
-        """Dispatch + execute one batch synchronously; returns it (or None)."""
+        """Dispatch + execute one batch synchronously; returns it (or None).
+
+        Pooled-feature requests run the shared forward (``Executor.execute``);
+        generative requests (``max_new_tokens > 0``) stream through the FM's
+        persistent ``DecodeEngine`` (admission prefill + chunked int8-KV
+        decode with continuous batching). One BFQ batch may carry both."""
         now = time.perf_counter()
         batch = self.next_batch(fm_id, now)
         if batch is None:
@@ -139,7 +156,16 @@ class FMplexServer:
         ex = self.executors.get(fm_id)
         if ex is None:       # FM deployed profile-only, then attached later
             ex = self.executors[fm_id] = Executor(self.fms[fm_id])
-        results = ex.execute(batch, self.vfms)
+        gen = [r for r in batch.requests if r.max_new_tokens > 0]
+        pooled = [r for r in batch.requests if r.max_new_tokens <= 0]
+        results = {}
+        if pooled:
+            pb = Batch(pooled, group_sub_batches(pooled, self.vfms))
+            results.update(ex.execute(pb, self.vfms))
+        if gen:
+            gb = Batch(gen, group_sub_batches(gen, self.vfms))
+            results.update(ex.execute_generate(gb, self.vfms,
+                                               self.decode_engine(fm_id)))
         self.on_complete(fm_id, batch, time.perf_counter())
         for r in batch.requests:
             r.result = results[r.rid]

@@ -14,6 +14,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.decode_attention_int8 import \
+    decode_attention_int8 as _decode_int8_pallas
+from repro.kernels.decode_attention_int8 import quantize_kv as _quantize_kv
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.segmented_lora import segmented_lora as _sgmv_pallas
 
@@ -51,6 +54,36 @@ def decode_attention(q, k_cache, v_cache, lengths, *, window: Optional[int] = No
                               window=window, interpret=interpret)
     from repro.models.attention import decode_attention as jnp_decode
     return jnp_decode(q, k_cache, v_cache, lengths, window=window)
+
+
+def quantize_kv(k, v):
+    """Symmetric per-(batch, kv-head) int8 KV quantization, model layout.
+
+    k, v: (B, S, KV, hd) float -> (k_q, v_q (B, S, KV, hd) int8,
+    k_scale, v_scale (B, KV) f32). Thin layout adapter over
+    ``kernels.decode_attention_int8.quantize_kv`` (head-major)."""
+    kq, vq, ks, vs = _quantize_kv(k.transpose(0, 2, 1, 3),
+                                  v.transpose(0, 2, 1, 3))
+    return kq.transpose(0, 2, 1, 3), vq.transpose(0, 2, 1, 3), ks, vs
+
+
+def decode_attention_int8(q, k_q, v_q, k_scale, v_scale, lengths, *,
+                          window: Optional[int] = None,
+                          backend: Optional[str] = None,
+                          interpret: bool = False):
+    """int8-KV decode attention, model layout.
+
+    q: (B, H, hd); k_q/v_q: (B, S, KV, hd) int8; k_scale/v_scale: (B, KV);
+    lengths: (B,) -> (B, H, hd). HBM only ever streams int8 on the Pallas
+    path; the CPU oracle dequantizes then reuses the f32 decode reference."""
+    b = _resolve(backend)
+    kh = k_q.transpose(0, 2, 1, 3)
+    vh = v_q.transpose(0, 2, 1, 3)
+    if b == "pallas":
+        return _decode_int8_pallas(q, kh, vh, k_scale, v_scale, lengths,
+                                   window=window, interpret=interpret)
+    return ref.decode_attention_int8_ref(q, kh, vh, k_scale, v_scale, lengths,
+                                         window=window)
 
 
 def segmented_lora(x, block_adapter, a_w, b_w, *, block_t: int = 128,

@@ -53,6 +53,17 @@ def decode_attention_ref(q, k, v, lengths, *, window: Optional[int] = None):
     return o.reshape(B, H, hd).astype(q.dtype)
 
 
+def decode_attention_int8_ref(q, k_q, v_q, k_scale, v_scale, lengths, *,
+                              window: Optional[int] = None):
+    """int8-KV decode oracle: dequantize then run the f32 decode reference.
+
+    q: (B, H, hd); k_q/v_q: (B, KV, S, hd) int8; k_scale/v_scale: (B, KV);
+    lengths: (B,). -> (B, H, hd)."""
+    k = k_q.astype(jnp.float32) * k_scale[:, :, None, None]
+    v = v_q.astype(jnp.float32) * v_scale[:, :, None, None]
+    return decode_attention_ref(q, k, v, lengths, window=window)
+
+
 def segmented_lora_ref(x, block_adapter, a_w, b_w, block_size: int):
     """Multi-adapter LoRA delta on an adapter-sorted batch.
 

@@ -83,28 +83,32 @@ def sort_by_adapter(adapter_ids, num_adapters: int, block_t: int = 128,
                     max_tokens: int | None = None):
     """Host-side helper: build (permutation, block_adapter, padded_T) so each
     ``block_t`` block maps to one adapter. Returns numpy arrays (executor use).
+
+    Fully vectorized (one stable argsort + one ``np.unique`` with counts) —
+    no O(segments × B) Python loop, so token-level co-batches with thousands
+    of rows stay cheap on the host hot path.
     """
     import numpy as np
 
     adapter_ids = np.asarray(adapter_ids)
+    n = len(adapter_ids)
     order = np.argsort(adapter_ids, kind="stable")
-    segs = []
-    blocks = []
-    for aid in np.unique(adapter_ids):
-        idx = order[adapter_ids[order] == aid]
-        pad = (-len(idx)) % block_t
-        segs.append((idx, pad, int(aid)))
-        blocks += [int(aid)] * ((len(idx) + pad) // block_t)
-    perm = []
-    for idx, pad, _ in segs:
-        perm += list(idx) + [-1] * pad
-    total = len(perm)
+    uniq, counts = np.unique(adapter_ids, return_counts=True)
+    padded = -(-counts // block_t) * block_t           # per-segment block pad
+    blocks = np.repeat(uniq, padded // block_t)
+    total = int(padded.sum())
+    # destination of each sorted row: its segment's start + rank within it
+    seg_starts = np.concatenate([[0], np.cumsum(padded)[:-1]])
+    src_starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    perm = np.full(total, -1, np.int64)
+    perm[np.repeat(seg_starts - src_starts, counts) + np.arange(n)] = order
     if max_tokens is not None:
         assert total <= max_tokens, (total, max_tokens)
-        blocks += [num_adapters] * ((max_tokens - total) // block_t)
-        perm += [-1] * (max_tokens - total)
+        blocks = np.concatenate(
+            [blocks, np.full((max_tokens - total) // block_t, num_adapters)])
+        perm = np.concatenate([perm, np.full(max_tokens - total, -1)])
         total = max_tokens
-    return (np.array(perm, np.int32), np.array(blocks, np.int32), total)
+    return (perm.astype(np.int32), blocks.astype(np.int32), total)
 
 
 def segment_metadata(adapter_ids, num_adapters: int, block_t: int = 128,
@@ -127,6 +131,38 @@ def segment_metadata(adapter_ids, num_adapters: int, block_t: int = 128,
     inv[raw_perm[real]] = np.nonzero(real)[0].astype(np.int32)
     perm = np.where(real, raw_perm, 0).astype(np.int32)
     return perm, inv, blocks
+
+
+class SegmentMetaCache:
+    """Memoizes ``segment_metadata`` per batch *composition*.
+
+    Steady-state serving (and every step of a decode co-batch) re-presents the
+    same adapter-id vector; the host-side sort only needs to run again when
+    slot occupancy or adapter assignment actually changes. Keyed on the raw id
+    bytes plus the static shape inputs; FIFO-evicted so a long-lived server
+    can't grow it unboundedly. ``builds`` counts cache misses — tests assert
+    it stays flat across steady-state decode."""
+
+    def __init__(self, maxsize: int = 128):
+        self._cache: dict = {}
+        self.maxsize = maxsize
+        self.builds = 0
+
+    def get(self, adapter_ids, num_adapters: int, block_t: int,
+            max_tokens: int | None):
+        import numpy as np
+
+        ids = np.ascontiguousarray(np.asarray(adapter_ids, np.int32))
+        key = (ids.tobytes(), num_adapters, block_t, max_tokens)
+        hit = self._cache.get(key)
+        if hit is None:
+            self.builds += 1
+            hit = segment_metadata(ids, num_adapters, block_t=block_t,
+                                   max_tokens=max_tokens)
+            if len(self._cache) >= self.maxsize:
+                self._cache.pop(next(iter(self._cache)))
+            self._cache[key] = hit
+        return hit
 
 
 def padded_tokens(n_tokens: int, max_segments: int, block_t: int) -> int:

@@ -190,15 +190,39 @@ def cross_attention(p, x, enc_kv, cfg, shard):
 def self_attention_decode(p, x, cache, cfg, shard, *, pos=None, pos3=None,
                           lora=None, adapter_idx=None, lora_impl="gather",
                           lora_seg=None):
-    """One-step decode. x: (B, 1, d); cache: dict(k, v, len). Returns (out, cache')."""
+    """One-step decode. x: (B, 1, d); cache: dict(k, v, len). Returns (out, cache').
+
+    When the cache carries ``k_scale``/``v_scale`` it is an int8 KV pool
+    (persistent decode serving, see ``core.decode_engine``): the new token's
+    K/V are quantized into the scales fixed at prefill admission and attention
+    runs through ``kernels.decode_attention_int8``, so the cache is only ever
+    streamed as int8.
+    """
     q, k, v = qkv_project(p, x, cfg, pos=pos, pos3=pos3, lora=lora,
                           adapter_idx=adapter_idx, lora_impl=lora_impl,
                           lora_seg=lora_seg)
     B = x.shape[0]
     idx = cache["len"]                                    # (B,) insert position
     bidx = jnp.arange(B)
-    k_cache = cache["k"].at[bidx, idx].set(k[:, 0].astype(cache["k"].dtype))
-    v_cache = cache["v"].at[bidx, idx].set(v[:, 0].astype(cache["v"].dtype))
-    o = decode_attention(q[:, 0], k_cache, v_cache, idx + 1, window=cfg.sliding_window)
+    if "k_scale" in cache:
+        from repro.kernels import ops
+        # scales are per (B, KV), fixed at prefill; epsilon-guard free slots
+        # whose scales were never written (their rows are masked out anyway)
+        ks = jnp.maximum(cache["k_scale"], 1e-8)
+        vs = jnp.maximum(cache["v_scale"], 1e-8)
+        kq = jnp.clip(jnp.round(k[:, 0].astype(jnp.float32) / ks[:, :, None]),
+                      -127, 127).astype(jnp.int8)
+        vq = jnp.clip(jnp.round(v[:, 0].astype(jnp.float32) / vs[:, :, None]),
+                      -127, 127).astype(jnp.int8)
+        k_cache = cache["k"].at[bidx, idx].set(kq)
+        v_cache = cache["v"].at[bidx, idx].set(vq)
+        o = ops.decode_attention_int8(q[:, 0], k_cache, v_cache, ks, vs,
+                                      idx + 1, window=cfg.sliding_window)
+        o = o.astype(x.dtype)
+    else:
+        k_cache = cache["k"].at[bidx, idx].set(k[:, 0].astype(cache["k"].dtype))
+        v_cache = cache["v"].at[bidx, idx].set(v[:, 0].astype(cache["v"].dtype))
+        o = decode_attention(q[:, 0], k_cache, v_cache, idx + 1,
+                             window=cfg.sliding_window)
     out = out_project(p, o[:, None], x.dtype)
     return out, {"k": k_cache, "v": v_cache, "len": idx + 1}

@@ -75,18 +75,29 @@ def sublayer_spec(cfg: ModelConfig, lay: SubLayer) -> dict:
 
 
 def sublayer_cache_spec(cfg: ModelConfig, lay: SubLayer, batch: int, s_max: int,
-                        enc_len: int = 0) -> Optional[dict]:
-    """Decode-time cache carried per sublayer (logical axes included)."""
+                        enc_len: int = 0, kv_quant: bool = False) -> Optional[dict]:
+    """Decode-time cache carried per sublayer (logical axes included).
+
+    ``kv_quant``: store self-attention K/V as int8 with per-(batch, kv-head)
+    symmetric scales (persistent serving pools — halves cache traffic; scales
+    are written at prefill admission). Cross-attention K/V stay bf16.
+    """
     kv, hd = cfg.num_kv_heads, cfg.head_dim
     dt = jnp.bfloat16
+    kv_dt = jnp.int8 if kv_quant else dt
     if lay.kind == ATTN:
         spec = {
             "k": ParamSpec((batch, s_max, kv, hd), ("batch", "cache_seq", "kv_heads", None),
-                           init="zeros", dtype=dt),
+                           init="zeros", dtype=kv_dt),
             "v": ParamSpec((batch, s_max, kv, hd), ("batch", "cache_seq", "kv_heads", None),
-                           init="zeros", dtype=dt),
+                           init="zeros", dtype=kv_dt),
             "len": ParamSpec((batch,), ("batch",), init="zeros", dtype=jnp.int32),
         }
+        if kv_quant:
+            spec["k_scale"] = ParamSpec((batch, kv), ("batch", "kv_heads"),
+                                        init="zeros", dtype=jnp.float32)
+            spec["v_scale"] = ParamSpec((batch, kv), ("batch", "kv_heads"),
+                                        init="zeros", dtype=jnp.float32)
         if lay.has_cross:
             spec["ck"] = ParamSpec((batch, enc_len, kv, hd),
                                    ("batch", "cache_seq", "kv_heads", None),
@@ -161,10 +172,20 @@ def sublayer_apply(p, x, cfg: ModelConfig, lay: SubLayer, shard, *,
             if cache is not None:  # prefill: fill the cache
                 S = x.shape[1]
                 new_cache = dict(cache)
-                new_cache["k"] = jnp.zeros_like(cache["k"]).at[:, :S].set(
-                    k.astype(cache["k"].dtype))
-                new_cache["v"] = jnp.zeros_like(cache["v"]).at[:, :S].set(
-                    v.astype(cache["v"].dtype))
+                if "k_scale" in cache:
+                    # int8 pool admission: quantize the prompt's K/V once and
+                    # fix the per-(batch, kv-head) scales for the decode steps
+                    from repro.kernels import ops
+                    kq, vq, ks, vs = ops.quantize_kv(k, v)
+                    new_cache["k"] = jnp.zeros_like(cache["k"]).at[:, :S].set(kq)
+                    new_cache["v"] = jnp.zeros_like(cache["v"]).at[:, :S].set(vq)
+                    new_cache["k_scale"] = ks
+                    new_cache["v_scale"] = vs
+                else:
+                    new_cache["k"] = jnp.zeros_like(cache["k"]).at[:, :S].set(
+                        k.astype(cache["k"].dtype))
+                    new_cache["v"] = jnp.zeros_like(cache["v"]).at[:, :S].set(
+                        v.astype(cache["v"].dtype))
                 new_cache["len"] = jnp.full_like(cache["len"], S)
         x = x + out
         if lay.has_cross:

@@ -52,18 +52,24 @@ def model_structs(cfg: ModelConfig, dtype=None):
     return shape_structs(model_spec(cfg), dtype=dtype)
 
 
-def cache_spec(cfg: ModelConfig, batch: int, s_max: int) -> list:
-    """Stacked per-period decode cache (list over sublayers)."""
+def cache_spec(cfg: ModelConfig, batch: int, s_max: int,
+               kv_quant: bool = False) -> list:
+    """Stacked per-period decode cache (list over sublayers).
+
+    ``kv_quant``: int8 self-attention K/V + per-(batch, kv-head) scales —
+    the persistent serving pool layout (see ``core.decode_engine``)."""
     plen = blk.period_len(cfg)
     nper = cfg.num_layers // plen
     layout = blk.period_layout(cfg, cross=cfg.is_encoder_decoder)
     enc_len = s_max if cfg.is_encoder_decoder else 0
-    return [stack_specs(blk.sublayer_cache_spec(cfg, lay, batch, s_max, enc_len), nper)
+    return [stack_specs(blk.sublayer_cache_spec(cfg, lay, batch, s_max, enc_len,
+                                                kv_quant=kv_quant), nper)
             for lay in layout]
 
 
-def init_cache(cfg: ModelConfig, batch: int, s_max: int):
-    return init_params(jax.random.PRNGKey(0), cache_spec(cfg, batch, s_max))
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, kv_quant: bool = False):
+    return init_params(jax.random.PRNGKey(0),
+                       cache_spec(cfg, batch, s_max, kv_quant=kv_quant))
 
 
 # ---------------- stack forward ----------------
@@ -224,11 +230,16 @@ def loss_fn(params, cfg: ModelConfig, batch: dict, shard=NO_SHARD,
 # ---------------- serving steps ----------------
 
 def prefill(params, cfg: ModelConfig, *, tokens=None, embeds=None, enc_embeds=None,
-            pos3=None, cache, shard=NO_SHARD):
-    """Fill the decode cache from a prompt. Returns (last_logits, cache)."""
+            pos3=None, cache, shard=NO_SHARD, lora=None, adapter_idx=None,
+            lora_impl: str = "gather", lora_seg=None):
+    """Fill the decode cache from a prompt. Returns (last_logits, cache).
+    ``lora``/``adapter_idx``: co-batched multi-task admission — the prompt
+    pass applies the same per-request adapters the decode steps will."""
     x, cache, _ = forward(params, cfg, tokens=tokens, embeds=embeds,
                           enc_embeds=enc_embeds, pos3=pos3, cache=cache,
-                          mode="full", shard=shard)
+                          mode="full", shard=shard, lora=lora,
+                          adapter_idx=adapter_idx, lora_impl=lora_impl,
+                          lora_seg=lora_seg)
     last = x[:, -1]
     if "head" in params and cfg.vocab_size > 0:
         logits = jnp.einsum("bd,dv->bv", last.astype(jnp.float32),

@@ -20,6 +20,29 @@ def poisson_trace(task_id: str, rps: float, horizon: float, *, seed: int = 0,
     return out
 
 
+def token_trace(task_id: str, rps: float, horizon: float, *, prompt_len: int,
+                vocab: int, max_new: int = 8, seed: int = 0,
+                slo_s: float | None = None, start: float = 0.0) -> list[Request]:
+    """Generative (prefill+decode) Poisson trace for the DecodeEngine path.
+
+    Each request carries a random prompt (``payload``: (prompt_len,) int32
+    token ids) and a sampled decode budget (``max_new_tokens`` uniform in
+    [1, max_new] — variable output lengths are what make continuous batching
+    bite). ``Request.tokens`` carries prompt + output work units so BFQ's
+    token-based accounting (§4.2) prices heavy requests proportionally."""
+    rng = np.random.RandomState(seed)
+    t, out = start, []
+    while True:
+        t += rng.exponential(1.0 / rps)
+        if t >= start + horizon:
+            break
+        new = int(rng.randint(1, max_new + 1))
+        out.append(Request(
+            task_id, t, payload=rng.randint(0, vocab, prompt_len).astype("int32"),
+            tokens=float(prompt_len + new), max_new_tokens=new, slo=SLO(slo_s)))
+    return out
+
+
 def burst_trace(task_id: str, base_rps: float, burst_rps: float,
                 burst_start: float, burst_len: float, horizon: float,
                 *, seed: int = 0, slo_s: float | None = None) -> list[Request]:

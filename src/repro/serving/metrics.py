@@ -23,6 +23,36 @@ def latency_stats(requests) -> dict:
     }
 
 
+def decode_stats(requests) -> dict:
+    """Token-level serving metrics for generative (prefill+decode) requests:
+    TTFT (arrival -> first generated token), TPOT (per-token decode interval
+    after the first token), and aggregate generated-token throughput."""
+    done = [r for r in requests
+            if r.finish_time is not None and r.max_new_tokens > 0]
+    if not done:
+        return {"n": 0}
+    ttft = [r.first_token_time - r.arrival for r in done
+            if r.first_token_time is not None]
+    tpot = []
+    total_tokens = 0
+    for r in done:
+        n = len(r.result) if r.result is not None else r.max_new_tokens
+        total_tokens += n
+        if r.first_token_time is not None and n > 1:
+            tpot.append((r.finish_time - r.first_token_time) / (n - 1))
+    span = (max(r.finish_time for r in done)
+            - min(r.arrival for r in done)) or 1e-9
+    return {
+        "n": len(done),
+        "tokens_out": total_tokens,
+        "tokens_per_s": total_tokens / span,
+        "ttft_p50_ms": 1e3 * percentile(ttft, 50),
+        "ttft_p99_ms": 1e3 * percentile(ttft, 99),
+        "tpot_p50_ms": 1e3 * percentile(tpot, 50),
+        "tpot_p99_ms": 1e3 * percentile(tpot, 99),
+    }
+
+
 def jain_fairness(shares: dict[str, float], weights: dict[str, float]) -> float:
     """Jain index over weight-normalized service shares (Elliott [16] style).
 

@@ -1,0 +1,288 @@
+"""Continuous-batching decode serving: segmented-vs-gather decode parity,
+int8-KV pool tolerance, zero-recompile (and zero-host-sort) steady state
+across request join/leave churn, vectorized SGMV host prep, and on-device
+per-task head application."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.decode_engine import DecodeEngine
+from repro.core.executor import Executor
+from repro.core.physical import PhysicalFM
+from repro.core.request import Batch, Request
+from repro.kernels import ops
+from repro.kernels.segmented_lora import padded_tokens, segment_metadata
+from repro.models import lm
+
+BT = 8
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduced(get_config("stablelm-1.6b"))
+
+
+def _randomized_adapter(fm, i):
+    tree = fm.adapters._mod.init_single_adapter(
+        jax.random.PRNGKey(i), fm.cfg, fm.adapters.rank)
+    leaves, tdef = jax.tree.flatten(tree)
+    ks = jax.random.split(jax.random.PRNGKey(100 + i), len(leaves))
+    return jax.tree.unflatten(tdef, [
+        jax.random.normal(k, l.shape, l.dtype) * 0.05
+        for k, l in zip(ks, leaves)])
+
+
+def _fm(cfg, impl="segmented", na=3):
+    fm = PhysicalFM(cfg, seed=0, input_len=8, lora_rank=4, lora_impl=impl,
+                    seg_block_t=BT)
+    for i in range(na):
+        fm.adapters.add(f"lora{i}", _randomized_adapter(fm, i))
+    return fm
+
+
+# ---------------- decode-path parity (lm level, teacher-forced) ----------------
+
+def test_decode_segmented_matches_gather_over_steps(cfg):
+    """≥ 8 decode steps, mixed adapters + base-model sentinel row; the S=1
+    segment metadata is built ONCE and reused every step (the engine's
+    steady-state contract) and must match the gather path step for step."""
+    fm = _fm(cfg)
+    params, stack = fm.params, fm.adapters.stacked()
+    cap = fm.adapters.capacity()
+    B, S, steps = 5, 8, 9
+    aidx = np.array([0, 2, cap, 1, 0], np.int32)        # cap == no adapter
+    toks = jax.random.randint(jax.random.PRNGKey(0), (B, S + steps), 0,
+                              cfg.vocab_size)
+    caches = {}
+    for impl in ("gather", "segmented"):
+        seg = None
+        if impl == "segmented":
+            perm, inv, blocks = fm.segment_meta(aidx, cap, 1)
+            seg = {"perm": jnp.asarray(perm), "inv": jnp.asarray(inv),
+                   "block_adapter": jnp.asarray(blocks), "block_t": BT}
+        cache = lm.init_cache(cfg, B, S + steps + 1)
+        _, cache = lm.prefill(params, cfg, tokens=toks[:, :S], cache=cache,
+                              lora=stack, adapter_idx=jnp.asarray(aidx),
+                              lora_impl="gather")
+        caches[impl] = (cache, seg)
+    for t in range(steps):                              # teacher-forced
+        outs = {}
+        for impl in ("gather", "segmented"):
+            cache, seg = caches[impl]
+            logits, cache = lm.decode_step(
+                params, cfg, tokens=toks[:, S + t], cache=cache, lora=stack,
+                adapter_idx=jnp.asarray(aidx), lora_impl=impl, lora_seg=seg)
+            caches[impl] = (cache, seg)
+            outs[impl] = np.asarray(logits)
+        np.testing.assert_allclose(outs["segmented"], outs["gather"],
+                                   atol=2e-2)
+
+
+# ---------------- int8 KV pool ----------------
+
+def test_quantize_kv_roundtrip_error_bound():
+    k = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 3, 8)) * 2.0
+    v = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 3, 8))
+    kq, vq, ks, vs = ops.quantize_kv(k, v)
+    assert kq.dtype == jnp.int8 and vq.dtype == jnp.int8
+    for x, xq, s in ((k, kq, ks), (v, vq, vs)):
+        deq = np.asarray(xq, np.float32) * np.asarray(s)[:, None, :, None]
+        # symmetric int8: per-element error bounded by scale/2
+        err = np.abs(deq - np.asarray(x, np.float32))
+        bound = np.asarray(s)[:, None, :, None] / 2 + 1e-6
+        assert (err <= bound).all()
+
+
+def test_int8_kv_decode_close_to_fp(cfg):
+    """Prefill + several decode steps on an int8-quantized KV pool stay
+    within quantization tolerance of the bf16-cache decode path."""
+    params = lm.init_model(jax.random.PRNGKey(0), cfg)
+    B, S, steps = 3, 8, 5
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S + steps), 0,
+                              cfg.vocab_size)
+    c_fp = lm.init_cache(cfg, B, S + steps + 1)
+    c_q8 = lm.init_cache(cfg, B, S + steps + 1, kv_quant=True)
+    assert jax.tree.leaves(c_q8)[0].dtype != jax.tree.leaves(c_fp)[0].dtype
+    lg_fp, c_fp = lm.prefill(params, cfg, tokens=toks[:, :S], cache=c_fp)
+    lg_q8, c_q8 = lm.prefill(params, cfg, tokens=toks[:, :S], cache=c_q8)
+    # prefill logits come from the forward pass, before the cache is read
+    np.testing.assert_allclose(np.asarray(lg_q8), np.asarray(lg_fp), atol=1e-5)
+    for t in range(steps):
+        lg_fp, c_fp = lm.decode_step(params, cfg, tokens=toks[:, S + t],
+                                     cache=c_fp)
+        lg_q8, c_q8 = lm.decode_step(params, cfg, tokens=toks[:, S + t],
+                                     cache=c_q8)
+        d, ref = np.asarray(lg_q8 - lg_fp), np.asarray(lg_fp)
+        assert np.abs(d).max() < 1.0                    # absolute ceiling
+        assert np.linalg.norm(d) / np.linalg.norm(ref) < 0.25
+
+
+# ---------------- the engine ----------------
+
+def test_engine_segmented_matches_gather_tokens(cfg):
+    """Greedy token streams agree between the segmented and gather decode
+    engines (both on the int8 pool — isolates the LoRA impl), with mixed
+    adapters and a base-model request."""
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, 8) for _ in range(4)]
+    adapters = ["lora0", "lora2", None, "lora1"]
+    outs = {}
+    for impl in ("segmented", "gather"):
+        eng = DecodeEngine(_fm(cfg, impl), num_slots=4, prompt_len=8,
+                           max_new=8, chunk=2)
+        for i, p in enumerate(prompts):
+            eng.join(f"t{i}", p, adapter_id=adapters[i], max_new_tokens=8,
+                     rid=i)
+        done = sorted(eng.drain(), key=lambda s: s.rid)
+        assert all(len(d.tokens) == 8 for d in done)
+        outs[impl] = [d.tokens for d in done]
+    assert outs["segmented"] == outs["gather"]
+
+
+def test_engine_zero_recompiles_and_sorts_across_churn(cfg):
+    """Requests joining/leaving slots between chunks (with changing adapter
+    assignments and variable lengths) must add ZERO jitted executables, and
+    a previously-seen batch composition must trigger ZERO host-side sorts."""
+    fm = _fm(cfg)
+    eng = DecodeEngine(fm, num_slots=4, prompt_len=8, max_new=8, chunk=2)
+    rng = np.random.RandomState(1)
+    prompts = rng.randint(0, cfg.vocab_size, (8, 8)).astype(np.int32)
+    names = ["lora0", "lora1", "lora2", None]
+    eng.join("warm", prompts[0], adapter_id="lora0", max_new_tokens=2, rid=-1)
+    eng.drain()                                     # compile all executables
+    compiles = eng.compile_count()
+    for i in range(4):          # variable lengths -> staggered retirement
+        eng.join(f"t{i}", prompts[i], adapter_id=names[i],
+                 max_new_tokens=3 + i, rid=i)
+    finished = []
+    while eng.active_count():
+        finished += eng.step_chunk()
+        # continuous batching: refill freed slots mid-flight
+        while eng.free_slots() and len(finished) + eng.active_count() < 6:
+            j = len(finished) + eng.active_count()
+            eng.join(f"t{j}", prompts[j], adapter_id=names[j % 4],
+                     max_new_tokens=4, rid=j)
+    assert len(finished) == 6
+    assert all(len(s.tokens) == s.max_new for s in finished)
+    assert eng.compile_count() == compiles          # zero recompiles in churn
+    # identical passes: uniform lengths so both traverse the same
+    # compositions; the second pass must trigger ZERO host-side sorts
+    for r in range(2):
+        if r == 1:
+            builds = fm.seg_meta_cache.builds
+        for i in range(4):
+            eng.join(f"p{r}-{i}", prompts[i], adapter_id=names[i],
+                     max_new_tokens=4, rid=100 + i)
+        eng.drain()
+    assert fm.seg_meta_cache.builds == builds       # zero host sorts
+    assert eng.compile_count() == compiles
+
+
+def test_engine_first_token_and_slot_reuse(cfg):
+    fm = _fm(cfg)
+    eng = DecodeEngine(fm, num_slots=2, prompt_len=8, max_new=4, chunk=2)
+    p = np.arange(8) % cfg.vocab_size
+    s0 = eng.join("a", p, adapter_id="lora0", max_new_tokens=1, rid=0)
+    assert eng.slots[s0].done                       # budget met at prefill
+    done = eng.step_chunk()                         # retires without decoding
+    assert [d.rid for d in done] == [0] and len(done[0].tokens) == 1
+    assert eng.free_slots() == [0, 1]
+    s1 = eng.join("b", p, adapter_id="lora1", max_new_tokens=4, rid=1)
+    assert s1 == 0                                  # slot recycled
+    (d,) = eng.drain()
+    assert len(d.tokens) == 4 and d.t_first <= d.t_join + 10
+
+
+# ---------------- vectorized host prep ----------------
+
+def test_sort_by_adapter_vectorized_matches_loop_reference():
+    from repro.kernels.segmented_lora import sort_by_adapter
+
+    def loop_reference(ids, num_adapters, block_t, max_tokens):
+        ids = np.asarray(ids)
+        order = np.argsort(ids, kind="stable")
+        segs, blocks = [], []
+        for aid in np.unique(ids):
+            idx = order[ids[order] == aid]
+            pad = (-len(idx)) % block_t
+            segs.append((idx, pad))
+            blocks += [int(aid)] * ((len(idx) + pad) // block_t)
+        perm = []
+        for idx, pad in segs:
+            perm += list(idx) + [-1] * pad
+        total = len(perm)
+        if max_tokens is not None:
+            blocks += [num_adapters] * ((max_tokens - total) // block_t)
+            perm += [-1] * (max_tokens - total)
+            total = max_tokens
+        return np.array(perm, np.int32), np.array(blocks, np.int32), total
+
+    rng = np.random.RandomState(0)
+    for trial in range(20):
+        n = rng.randint(1, 200)
+        na = rng.randint(1, 9)
+        bt = int(rng.choice([4, 8, 16]))
+        ids = rng.randint(0, na + 1, n)             # includes the sentinel
+        tp = padded_tokens(n, min(n, na + 2), bt)
+        for mt in (None, tp):
+            got = sort_by_adapter(ids, na, block_t=bt, max_tokens=mt)
+            want = loop_reference(ids, na, bt, mt)
+            np.testing.assert_array_equal(got[0], want[0])
+            np.testing.assert_array_equal(got[1], want[1])
+            assert got[2] == want[2]
+
+
+def test_segment_meta_cache_memoizes():
+    fm_cache = __import__("repro.kernels.segmented_lora",
+                          fromlist=["SegmentMetaCache"]).SegmentMetaCache()
+    ids = np.array([0, 1, 0, 2], np.int32)
+    a = fm_cache.get(ids, 3, 8, 64)
+    b = fm_cache.get(ids.copy(), 3, 8, 64)
+    assert fm_cache.builds == 1 and a is b
+    fm_cache.get(np.array([1, 1, 0, 2], np.int32), 3, 8, 64)
+    assert fm_cache.builds == 2
+
+
+# ---------------- on-device per-task heads ----------------
+
+def _pooled_batch(fm, n, task_id="t0"):
+    rng = np.random.RandomState(3)
+    reqs = [Request(task_id, 0.0,
+                    payload=rng.randn(fm.input_len,
+                                      fm.cfg.d_model).astype(np.float32))
+            for _ in range(n)]
+    return Batch(reqs, [(None, reqs)])
+
+
+def test_executor_runs_traceable_head_on_device():
+    cfg = reduced(get_config("moment-large"))
+    fm = PhysicalFM(cfg, seed=0, input_len=8, lora_rank=4)
+    w = np.random.RandomState(0).randn(cfg.d_model, 3).astype(np.float32) * 0.1
+    fm.attach_head("t0", lambda f: f @ w)
+    ex = Executor(fm)
+    batch = _pooled_batch(fm, 3)
+    out = ex.execute(batch, {})
+    assert ex._head_mode["t0"][1] == "device" and "t0" in ex._head_jit
+    feats = fm.run_batch(np.stack([r.payload for r in batch.requests]),
+                         np.full(3, fm.adapters.capacity(), np.int32))
+    for i, r in enumerate(batch.requests):
+        np.testing.assert_allclose(np.asarray(out[r.rid]), feats[i] @ w,
+                                   atol=1e-4)
+
+
+def test_executor_untraceable_head_falls_back():
+    cfg = reduced(get_config("moment-large"))
+    fm = PhysicalFM(cfg, seed=0, input_len=8, lora_rank=4)
+    w = np.random.RandomState(0).randn(cfg.d_model, 2).astype(np.float32)
+
+    def head(f):                # jit-hostile: forces concrete numpy values
+        return np.ascontiguousarray(f) @ w
+
+    fm.attach_head("t0", head)
+    ex = Executor(fm)
+    out = ex.execute(_pooled_batch(fm, 3), {})
+    assert ex._head_mode["t0"][1] in ("batched", "row")
+    assert "t0" not in ex._head_jit
+    assert all(np.asarray(v).shape == (2,) for v in out.values())
