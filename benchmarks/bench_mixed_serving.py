@@ -1,0 +1,208 @@
+"""Mixed-load serving benchmark: pooled latency under a concurrent decode
+stream — event-loop plane vs the drain-synchronous baseline.
+
+The scenario the paper's headline numbers are about: latency-sensitive pooled
+tasks colocated with long generative streams on ONE backbone. Three modes
+over the same workload shape:
+
+  * ``pooled_solo``  — the pooled burst alone through the event loop
+    (the no-interference floor);
+  * ``mixed_loop``   — pooled burst + concurrent 64-step decode streams
+    through ``ServeLoop``: BFQ picks per tick between a pooled sub-batch, a
+    prefill admission, and one decode chunk, so pooled batches interleave
+    BETWEEN chunks and arrivals join the pool mid-flight;
+  * ``mixed_drain``  — the same workload through the legacy synchronous
+    ``FMplexServer.step`` contract (PR 2 semantics): a generative batch
+    drains to completion before the next dispatch, so pooled arrivals wait
+    out whole decode streams.
+
+Reported: pooled p50/p99 per mode, decode TTFT/TPOT under the loop, the
+drain→loop pooled-p50 improvement ratio, and the steady-state invariants
+(zero recompiles across prompt-length buckets + join/leave churn). Results
+land under the "mixed" section of ``BENCH_serving.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from common import write_serving_section
+from repro.configs import get_config, reduced
+from repro.core.physical import PhysicalFM
+from repro.core.request import Request
+from repro.core.server import FMplexServer
+from repro.core.vfm import TaskExtensions
+from repro.serving.loadgen import feature_trace
+from repro.serving.metrics import decode_stats, latency_stats
+
+PROMPT_LEN = 16
+DECODE_STEPS = 64             # the acceptance scenario: long streams
+POOLED_RPS = 60.0
+STREAM_EVERY = 0.1            # stream arrival rate per gen task: high enough
+HORIZON = 2.0                 # that decode pressure spans the whole horizon
+N_GEN_TASKS = 2
+
+
+def build(seed: int = 0):
+    cfg = reduced(get_config("stablelm-1.6b"))
+    fm = PhysicalFM(cfg, seed=seed, input_len=PROMPT_LEN, lora_rank=4)
+    fm.calibrate(sizes=(1, 2, 4, 8))
+    srv = FMplexServer("s0")
+    srv.deploy_fm("fm0", fm, scheduler="bfq")
+    rng = np.random.RandomState(seed)
+    w = rng.randn(cfg.d_model, 4).astype(np.float32) * 0.1
+    srv.bind_task("pooled", "fm0", weight=2.0,
+                  extensions=TaskExtensions(decoder=lambda f: f @ w))
+    for i in range(N_GEN_TASKS):
+        fm.adapters.new(f"lora{i}", seed=i)
+        srv.bind_task(f"gen{i}", "fm0", weight=1.0,
+                      extensions=TaskExtensions(adapter_id=f"lora{i}"))
+    # create the pool eagerly with the scenario's shape: a later implicit
+    # default-kwargs creation would cap max_new at 32 and clamp the streams
+    srv.decode_engine("fm0", num_slots=4, prompt_len=PROMPT_LEN,
+                      max_new=DECODE_STEPS, chunk=4)
+    loop = srv.serve_loop("fm0")
+    return srv, cfg, loop
+
+
+def pooled_trace(cfg, horizon, rps, seed=0, start=0.05):
+    """Pooled burst starting AFTER the decode streams are in flight: the
+    measured quantity is pooled latency under CONCURRENT decode, so the
+    generative plane must already hold the device when these arrive."""
+    return feature_trace("pooled", rps, horizon, input_len=PROMPT_LEN,
+                         d_model=cfg.d_model, seed=seed, start=start)
+
+
+def gen_trace(cfg, horizon, steps, seed=0):
+    """Decode streams from t=0 (head start over the pooled burst): the
+    drain-synchronous baseline grabs these first and drains them to
+    completion; the event loop interleaves."""
+    rng = np.random.RandomState(100 + seed)
+    out = []
+    for i in range(N_GEN_TASKS):
+        t = 0.0
+        while t < horizon:
+            plen = int(rng.randint(max(1, PROMPT_LEN // 4), PROMPT_LEN + 1))
+            out.append(Request(
+                f"gen{i}", t,
+                payload=rng.randint(0, cfg.vocab_size, plen).astype("int32"),
+                tokens=float(plen + steps), max_new_tokens=steps))
+            t += STREAM_EVERY
+    return out
+
+
+def run_loop(loop, trace, max_wall):
+    served = loop.run([_clone(r) for r in trace], max_wall=max_wall)
+    return served
+
+
+def run_drain(srv, trace, max_wall):
+    """PR 2 semantics: replay arrivals against the wall clock; each step()
+    drains its batch (generative members to completion) before returning."""
+    trace = sorted([_clone(r) for r in trace], key=lambda r: r.arrival)
+    t0 = time.perf_counter()
+    i, served = 0, []
+    while True:
+        now = time.perf_counter()
+        if now - t0 > max_wall:
+            break
+        while i < len(trace) and trace[i].arrival <= now - t0:
+            r = trace[i]
+            r.arrival = t0 + r.arrival
+            srv.on_arrival(r, now)
+            i += 1
+        batch = srv.step("fm0")
+        if batch is not None:
+            served += batch.requests
+        elif i >= len(trace):
+            break
+        else:
+            time.sleep(2e-4)
+    return served
+
+
+def _clone(r: Request) -> Request:
+    return Request(r.task_id, r.arrival, payload=r.payload, tokens=r.tokens,
+                   max_new_tokens=r.max_new_tokens)
+
+
+def run_all(out_path: str = None, smoke: bool = False):
+    global DECODE_STEPS, HORIZON, POOLED_RPS
+    if smoke:
+        DECODE_STEPS, HORIZON, POOLED_RPS = 16, 0.6, 30.0
+    srv, cfg, loop = build()
+    eng = srv.decode_engine("fm0")
+    fm = srv.fms["fm0"]
+    max_wall = 60.0 if smoke else 300.0
+
+    loop.warmup(pooled_task="pooled", gen_task="gen0", pooled_n=8)
+    compiles = eng.compile_count() + fm.compile_count()
+
+    pooled = pooled_trace(cfg, HORIZON, POOLED_RPS)
+    gen = gen_trace(cfg, HORIZON, DECODE_STEPS)
+
+    def fresh_sched():
+        # comparable virtual-tag state per mode: scheduler state from one
+        # mode's (token-heavy) run must not leak into the next mode's tags
+        srv.deploy_fm("fm0", profile=srv.profiles["fm0"], scheduler="bfq")
+
+    fresh_sched()
+    solo = run_loop(loop, pooled, max_wall)
+    solo_stats = latency_stats([r for r in solo if r.max_new_tokens <= 0])
+
+    fresh_sched()
+    loop.ticks.clear()         # report the MIXED run's interleaving only
+    mixed = run_loop(loop, pooled + gen, max_wall)
+    loop_pooled = latency_stats([r for r in mixed if r.max_new_tokens <= 0])
+    loop_decode = decode_stats([r for r in mixed if r.max_new_tokens > 0])
+    loop_gen_lat = latency_stats([r for r in mixed if r.max_new_tokens > 0])
+    loop_recompiles = eng.compile_count() + fm.compile_count() - compiles
+
+    fresh_sched()
+    drained = run_drain(srv, pooled + gen, max_wall)
+    drain_pooled = latency_stats([r for r in drained
+                                  if r.max_new_tokens <= 0])
+    drain_decode = decode_stats([r for r in drained if r.max_new_tokens > 0])
+    drain_gen_lat = latency_stats([r for r in drained
+                                   if r.max_new_tokens > 0])
+
+    improvement = drain_pooled.get("p50_ms", float("nan")) / \
+        max(loop_pooled.get("p50_ms", float("nan")), 1e-9)
+    out = {
+        "config": cfg.name,
+        "prompt_len": PROMPT_LEN,
+        "decode_steps": DECODE_STEPS,
+        "pooled_rps": POOLED_RPS,
+        "gen_tasks": N_GEN_TASKS,
+        "horizon_s": HORIZON,
+        "pooled_solo": solo_stats,
+        "mixed_loop": {"pooled": loop_pooled, "decode": loop_decode,
+                       "decode_latency": loop_gen_lat,
+                       "ticks": dict(loop.ticks)},
+        "mixed_drain": {"pooled": drain_pooled, "decode": drain_decode,
+                        "decode_latency": drain_gen_lat},
+        "pooled_p50_improvement_drain_over_loop": round(improvement, 2),
+        "loop_beats_drain_pooled_p50": bool(improvement > 1.0),
+        "steady_state_recompiles_mixed_churn": loop_recompiles,
+        "prompt_buckets": list(eng.prompt_buckets),
+    }
+    print(f"pooled p50: solo={solo_stats.get('p50_ms', float('nan')):.1f}ms "
+          f"loop={loop_pooled.get('p50_ms', float('nan')):.1f}ms "
+          f"drain={drain_pooled.get('p50_ms', float('nan')):.1f}ms "
+          f"(drain/loop x{improvement:.2f})")
+    print(f"decode (loop): {loop_decode}")
+    print(f"steady-state recompiles across mixed churn: {loop_recompiles}")
+    assert loop_recompiles == 0, "mixed churn must not recompile"
+    write_serving_section("mixed", out, out_path)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: short horizon, 16-step decodes")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    run_all(out_path=args.out, smoke=args.smoke)

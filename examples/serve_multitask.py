@@ -2,7 +2,7 @@
 with one shared JAX backbone and several vFMs (LoRA adapters + decoder heads),
 replay batched Poisson traffic through BFQ, and report latency + fairness.
 
-Two workload planes:
+Three workload planes:
 
   * pooled features (default) — every request is one shared forward; per-task
     decoder heads run on-device over the pooled features;
@@ -10,10 +10,16 @@ Two workload planes:
     and stream through the continuous-batching ``DecodeEngine``: admission
     prefill into a persistent int8 KV slot pool, then chunked segmented-LoRA
     greedy decode with requests joining/leaving slots between chunks. Reports
-    token-level metrics (TTFT / TPOT / tokens-per-second).
+    token-level metrics (TTFT / TPOT / tokens-per-second);
+  * mixed (``--mixed``) — pooled AND generative traffic through ONE event
+    loop (``ServeLoop``): each tick BFQ picks the smallest-virtual-tag unit
+    of work — a pooled sub-batch, a variable-length prefill admission, or a
+    decode chunk — so pooled batches interleave between chunks and streams
+    join the pool mid-flight. Reports both planes side by side.
 
   PYTHONPATH=src python examples/serve_multitask.py --tasks 4 --rps 40 --seconds 8
   PYTHONPATH=src python examples/serve_multitask.py --decode --tasks 4 --rps 10
+  PYTHONPATH=src python examples/serve_multitask.py --mixed --tasks 4 --rps 30
 """
 import argparse
 
@@ -80,6 +86,48 @@ def decode_main(args):
           f"{srv.fms['fm0'].seg_meta_cache.builds} host-side segment sorts")
 
 
+def mixed_main(args):
+    """Pooled + generative colocation through one event loop: half the tasks
+    send pooled feature bursts, half stream variable-length prompts with
+    token budgets; BFQ interleaves both planes at token granularity."""
+    from repro.serving.loadgen import feature_trace, merge, token_trace
+    from repro.serving.metrics import mixed_stats
+
+    srv, cfg = build_server(args.tasks, arch="stablelm-1.6b",
+                            input_len=args.prompt_len, scheduler="bfq")
+    eng = srv.decode_engine("fm0", num_slots=8, prompt_len=args.prompt_len,
+                            max_new=args.max_new, chunk=4)
+    loop = srv.serve_loop("fm0")
+    n_gen = max(1, args.tasks // 2)
+    # warm the executables so the measured run reflects steady state
+    loop.warmup(pooled_task=f"task{args.tasks - 1}", gen_task="task0")
+    loop.ticks.clear()
+    traces = [feature_trace(f"task{i}", args.rps / args.tasks, args.seconds,
+                            input_len=args.prompt_len, d_model=cfg.d_model,
+                            seed=i) for i in range(n_gen, args.tasks)]
+    traces += [token_trace(f"task{i}", args.rps / args.tasks / 4,
+                           args.seconds, prompt_len=args.prompt_len,
+                           min_prompt_len=2, vocab=cfg.vocab_size,
+                           max_new=args.max_new, seed=i)
+               for i in range(n_gen)]
+    served = loop.run(merge(traces))
+    s = mixed_stats(served)
+    eng = srv.engines["fm0"]
+    print(f"mixed: {len(served)} served, ticks={dict(loop.ticks)}")
+    p, d = s["pooled"], s["decode"]
+    if p.get("n"):
+        print(f"  pooled: n={p['n']} p50={p['p50_ms']:.1f}ms "
+              f"p99={p['p99_ms']:.1f}ms")
+    if d.get("n"):
+        print(f"  decode: n={d['n']} {d['tokens_out']} tokens "
+              f"({d['tokens_per_s']:.1f} tok/s) "
+              f"ttft p50={d['ttft_p50_ms']:.1f}ms "
+              f"tpot p50={d['tpot_p50_ms']:.2f}ms")
+    print(f"  engine: buckets={eng.prompt_buckets}, {eng.steps} decode "
+          f"steps, {eng.compile_count()} jitted executables (flat under "
+          f"churn), {srv.fms['fm0'].seg_meta_cache.builds} host-side sorts")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--tasks", type=int, default=4)
@@ -87,10 +135,14 @@ def main():
     ap.add_argument("--seconds", type=float, default=8.0)
     ap.add_argument("--decode", action="store_true",
                     help="generative serving via the DecodeEngine")
+    ap.add_argument("--mixed", action="store_true",
+                    help="pooled + generative traffic through one event loop")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     args = ap.parse_args()
-    if args.decode:
+    if args.mixed:
+        mixed_main(args)
+    elif args.decode:
         decode_main(args)
     else:
         pooled_main(args)

@@ -15,6 +15,17 @@ formation:
               tasks with the batch-dependent service time
               F_i^j = S_i^j + l_i(b) / w_i                                (3)
 
+Token-level plane (event-loop serving, ``core.serve_loop``): generative
+streams consume service in decode chunks, not whole requests, so the loop
+charges each participating task ``charge_tokens`` work units per unit of
+device time — a decode chunk charges ``chunk × active_slots(task)`` tokens,
+a prefill admission charges the true prompt length. Charges advance the
+task's virtual finish time by ``l(1) · tokens / w_i`` (the same per-token
+price arrival tags use), so weighted max-min sharing holds across the pooled
+and generative planes at token granularity: the loop dispatches whichever
+unit of work — pooled sub-batch, admission, or decode chunk — carries the
+smallest virtual tag.
+
 All schedulers are event-driven and time-source-agnostic: the same code runs
 under the discrete-event simulator and the real-execution server.
 """
@@ -40,6 +51,10 @@ def group_sub_batches(requests: list[Request], vfms: dict[str, VFM]):
 
 class SchedulerBase:
     name = "base"
+    # True when charge_tokens/task_vtime maintain a real token-level virtual
+    # clock; schedulers without one (STFQ, FIFO) need the event loop to
+    # alternate planes instead of comparing their meaningless decode tags
+    token_accounting = False
 
     def __init__(self, profile: FMProfile):
         self.profile = profile
@@ -47,7 +62,9 @@ class SchedulerBase:
     def on_arrival(self, vfm: VFM, req: Request, now: float):
         vfm.enqueue(req)
 
-    def next_batch(self, vfms: dict[str, VFM], now: float) -> Optional[Batch]:
+    def next_batch(self, vfms: dict[str, VFM], now: float, *, pred=None,
+                   limit: Optional[int] = None,
+                   defer_charge: bool = False) -> Optional[Batch]:
         raise NotImplementedError
 
     def exec_time(self, batch: Batch) -> float:
@@ -56,6 +73,25 @@ class SchedulerBase:
 
     def on_complete(self, batch: Batch, vfms: dict[str, VFM], now: float):
         pass
+
+    # ---- token-level plane (event-loop serving) ----
+    def charge_tokens(self, vfms: dict[str, VFM],
+                      tokens_by_task: dict[str, float], now: float):
+        """Charge mid-request service (decode chunks, prefill admissions) to
+        each task's virtual time. No-op for schedulers without virtual time —
+        the event loop then degrades to its tie-break order."""
+
+    def task_vtime(self, task_id: str) -> float:
+        """Virtual start tag of the task's NEXT unit of in-flight work (its
+        decode stream's next chunk). 0.0 when the scheduler has no notion."""
+        return 0.0
+
+    def peek_tag(self, vfms: dict[str, VFM], pred=None) -> float:
+        """Smallest start tag among queued requests matching ``pred``
+        (inf when none) — what the event loop compares plane tags against."""
+        tags = [r.start_tag for v in vfms.values() for r in v.queue
+                if pred is None or pred(r)]
+        return min(tags) if tags else float("inf")
 
     @staticmethod
     def _pop(vfms, selected):
@@ -66,6 +102,7 @@ class SchedulerBase:
 class BFQ(SchedulerBase):
     """Batch-aware fair queueing (work-conserving, weighted)."""
     name = "bfq"
+    token_accounting = True
 
     def __init__(self, profile: FMProfile):
         super().__init__(profile)
@@ -86,11 +123,27 @@ class BFQ(SchedulerBase):
         self._tail[vfm.task_id] = req.finish_tag
         vfm.enqueue(req)
 
-    def next_batch(self, vfms: dict[str, VFM], now: float) -> Optional[Batch]:
-        queued = [r for v in vfms.values() for r in v.queue]
+    def next_batch(self, vfms: dict[str, VFM], now: float, *, pred=None,
+                   limit: Optional[int] = None,
+                   defer_charge: bool = False) -> Optional[Batch]:
+        """Form one batch in start-tag order. ``pred`` restricts formation to
+        matching requests (the event loop separates pooled and generative
+        work units); ``limit`` caps the batch below B_max (e.g. at the decode
+        pool's free slot count).
+
+        ``defer_charge``: dispatch bookkeeping advances the task's virtual
+        time only to the request's START tag, not its finish tag — for
+        streams whose service is charged incrementally via ``charge_tokens``
+        (admission prefill + per-chunk). Without this the stream would be
+        double-priced: once by the arrival finish tag's full prompt+budget
+        estimate, again by the actual per-token charges."""
+        queued = [r for v in vfms.values() for r in v.queue
+                  if pred is None or pred(r)]
         if not queued:
             return None
         queued.sort(key=lambda r: (r.start_tag, r.rid))
+        b_cap = self.profile.b_max if limit is None \
+            else min(self.profile.b_max, limit)
         selected: list[Request] = []
         # incremental formation state (O(B_max) per dispatch instead of
         # O(B_max^2)): adapter-size counter and the tightest deadline among
@@ -99,7 +152,7 @@ class BFQ(SchedulerBase):
         l1 = self.profile.l(1)
         min_deadline = float("inf")
         for r in queued:
-            if len(selected) >= self.profile.b_max:
+            if len(selected) >= b_cap:
                 break
             aid = vfms[r.task_id].extensions.adapter_id
             sizes[aid] += 1
@@ -120,8 +173,9 @@ class BFQ(SchedulerBase):
         batch = Batch(selected, group_sub_batches(selected, vfms))
         # dispatch bookkeeping: v = max_i F_i^last over dispatched requests
         for r in selected:
+            tag = r.start_tag if defer_charge else r.finish_tag
             self._last_dispatched[r.task_id] = max(
-                self._last_dispatched.get(r.task_id, 0.0), r.finish_tag)
+                self._last_dispatched.get(r.task_id, 0.0), tag)
             r.dispatch_time = now
         self.v = max([self.v] + list(self._last_dispatched.values()))
         return batch
@@ -150,6 +204,44 @@ class BFQ(SchedulerBase):
             self._tail[tid] = prev if vfm.queue else f_last
         self.v = max([self.v] + list(self._last_dispatched.values()))
 
+    def charge_tokens(self, vfms: dict[str, VFM],
+                      tokens_by_task: dict[str, float], now: float):
+        """Token-level virtual-time accounting (event-loop plane).
+
+        Each charged task's virtual finish advances by ``l(1)·tokens/w``
+        chained TASK-LOCALLY from its last finish — the same way a backlogged
+        task's queued requests chain off its tail — so a lighter-weight
+        stream falls behind proportionally and weighted shares hold at token
+        granularity (chaining from the global ``v`` instead would reset the
+        stream's lag every chunk and collapse sharing to 1:1). A stream
+        cannot bank credit by idling: its slots only exist between an
+        admission (whose arrival tag was clamped to ``v``) and its retire.
+        The task's QUEUED requests are re-chained off the new finish (Eq. 3
+        style): without this, requests enqueued before a long decode chunk
+        would keep stale, too-early tags and jump the fair order at their
+        next admission."""
+        l1 = self.profile.l(1)
+        for tid, toks in tokens_by_task.items():
+            if toks <= 0:
+                continue
+            vfm = vfms.get(tid)
+            w = vfm.weight if vfm is not None else 1.0
+            start = self._last_dispatched.get(tid, self.v)
+            f = start + l1 * toks / w
+            self._last_dispatched[tid] = f
+            if vfm is not None:
+                prev = f
+                for r in vfm.queue:
+                    r.start_tag = max(prev, r.v_at_arrival)
+                    r.finish_tag = r.start_tag + \
+                        l1 * max(r.tokens, 1e-9) / w
+                    prev = r.finish_tag
+                self._tail[tid] = prev if vfm.queue else f
+        self.v = max([self.v] + list(self._last_dispatched.values()))
+
+    def task_vtime(self, task_id: str) -> float:
+        return self._last_dispatched.get(task_id, 0.0)
+
 
 class STFQ(SchedulerBase):
     """Classical start-time fair queueing (S-STFQ baseline): fair tags, but
@@ -168,8 +260,10 @@ class STFQ(SchedulerBase):
         self._tail[vfm.task_id] = req.finish_tag
         vfm.enqueue(req)
 
-    def next_batch(self, vfms, now):
-        queued = [r for v in vfms.values() for r in v.queue]
+    def next_batch(self, vfms, now, *, pred=None, limit=None,
+                   defer_charge=False):
+        queued = [r for v in vfms.values() for r in v.queue
+                  if pred is None or pred(r)]
         if not queued:
             return None
         r = min(queued, key=lambda r: (r.start_tag, r.rid))
@@ -183,12 +277,16 @@ class FIFOBatch(SchedulerBase):
     """S-BE baseline: arrival-order batching up to B_max, no fairness."""
     name = "s-be"
 
-    def next_batch(self, vfms, now):
-        queued = [r for v in vfms.values() for r in v.queue]
+    def next_batch(self, vfms, now, *, pred=None, limit=None,
+                   defer_charge=False):
+        queued = [r for v in vfms.values() for r in v.queue
+                  if pred is None or pred(r)]
         if not queued:
             return None
         queued.sort(key=lambda r: (r.arrival, r.rid))
-        selected = queued[: self.profile.b_max]
+        b_cap = self.profile.b_max if limit is None \
+            else min(self.profile.b_max, limit)
+        selected = queued[: b_cap]
         self._pop(vfms, selected)
         for r in selected:
             r.dispatch_time = now

@@ -12,10 +12,20 @@ per-step cost of multi-task isolation must be ~zero. The engine owns:
     cache traffic; every decode step streams int8 only;
   * **admission prefill** — a joining request's prompt runs a single jitted
     prefill (LoRA applied, K/V quantized in-graph) and is scattered into its
-    slot with one ``dynamic_update_slice`` per cache leaf;
+    slot with one ``dynamic_update_slice`` per cache leaf. Admission is
+    **variable-length**: prompts are right-padded to the smallest of 2-3
+    *prompt-length buckets* (a static jit-cache key), while the TRUE length
+    rides along as a traced operand — pad keys are masked out of attention
+    (``lm.prefill(seq_lens=...)``), the cache ``len`` is per-row exact, and
+    the first token comes from the last REAL prompt position. Any prompt
+    length within the largest bucket therefore reuses one of at most
+    ``len(prompt_buckets)`` compiled executables;
   * **chunked decode** — ``step_chunk`` advances ALL occupied slots ``chunk``
-    greedy tokens under one jitted ``lax.scan`` (device-resident sampling:
-    one dispatch and one host sync per chunk, not per token);
+    tokens under one jitted ``lax.scan`` (device-resident sampling: one
+    dispatch and one host sync per chunk, not per token). Sampling is greedy
+    by default; ``temperature > 0`` switches to temperature/top-k sampling
+    with **per-slot PRNG key state threaded through the scan carry**, so
+    streams stay reproducible and independent across slot churn;
   * **cached SGMV metadata** — segment metadata for the S=1 token co-batch is
     built once per batch *composition* (slot occupancy + adapter assignment)
     and reused every step; steady-state decode performs zero host-side sorts
@@ -27,11 +37,27 @@ Requests join and leave slots between chunks without recompilation: all
 traced shapes depend only on the bucketed quantities above. Free slots keep
 stepping (static shapes) — their rows are per-slot isolated garbage that the
 next admission's prefill overwrites.
+
+int8 KV scale drift: the per-(slot, kv-head) quantization scales are fixed
+ONCE at prefill admission. Decode-era K/V whose magnitude outgrows the
+prompt-era range are clipped to ±127·scale — the engine never rescales a
+live slot (that would re-quantize the whole row mid-stream). The divergence
+this introduces is bounded and grows slowly with decode length: empirically
+(``tests/test_decode_engine.py::test_int8_scale_drift_bounded``) a decode
+tail 3× longer than the prompt whose K/V magnitude drifts to 3× the
+admission-scale range keeps attention-output relative divergence under ~0.8
+(vs ~0.06 with no drift), and at the model level a decode 4× the prompt
+length keeps logit relative divergence under 0.5
+(``test_int8_long_decode_divergence_bounded``). Decodes far beyond a
+``max_new`` of a few hundred tokens, or adapters that systematically grow
+activation magnitude, should either re-admit (prefill on the generated
+prefix refreshes scales) or allocate the pool with ``kv_quant=False``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Optional
 
 import jax
@@ -42,6 +68,38 @@ from repro.core.physical import PAD_SENTINEL, PhysicalFM, bucket_for
 from repro.models import lm
 
 FREE = PAD_SENTINEL   # free-slot adapter sentinel (same as run_batch padding)
+
+
+def default_prompt_buckets(prompt_len: int) -> tuple[int, ...]:
+    """2-3 admission buckets: quarter, half and full ``prompt_len`` (deduped,
+    ascending). Small enough that every bucket's prefill executable warms
+    quickly; coarse enough that steady state never recompiles."""
+    return tuple(sorted({max(1, prompt_len // 4),
+                         max(1, prompt_len // 2), prompt_len}))
+
+
+def make_sampler(temperature: float, top_k: int):
+    """Token sampler used inside the jitted prefill/decode graphs.
+
+    ``sample(logits (B, V), keys (B, 2) uint32) -> (tokens (B,), keys')``.
+    Greedy when ``temperature <= 0`` (keys pass through untouched); otherwise
+    temperature-scaled categorical over the top-k logits, one PRNG key per
+    row so co-batched streams sample independently."""
+    if temperature <= 0:
+        def sample(logits, keys):
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), keys
+        return sample
+
+    def sample(logits, keys):
+        split = jax.vmap(lambda k: jax.random.split(k, 2))(keys)   # (B, 2, 2)
+        next_keys, use_keys = split[:, 0], split[:, 1]
+        l = logits.astype(jnp.float32) / temperature
+        if top_k > 0:
+            kth = jax.lax.top_k(l, top_k)[0][:, -1]
+            l = jnp.where(l >= kth[:, None], l, -1e30)
+        toks = jax.vmap(jax.random.categorical)(use_keys, l)
+        return toks.astype(jnp.int32), next_keys
+    return sample
 
 
 @dataclasses.dataclass
@@ -55,6 +113,7 @@ class DecodeSlot:
     tokens: list          # generated token ids (first one from prefill)
     t_join: float
     t_first: float        # wall time of the first generated token (TTFT end)
+    prompt_tokens: int = 0   # TRUE (post-truncation) admitted prompt length
     done: bool = False
 
 
@@ -64,7 +123,10 @@ class DecodeEngine:
     def __init__(self, fm: PhysicalFM, *, num_slots: int = 8,
                  prompt_len: Optional[int] = None, max_new: int = 32,
                  chunk: int = 4, kv_quant: bool = True,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 prompt_buckets: Optional[tuple] = None,
+                 temperature: float = 0.0, top_k: int = 0,
+                 sample_seed: int = 0):
         cfg = fm.cfg
         assert cfg.vocab_size > 0 and not cfg.is_representation, \
             "DecodeEngine serves generative decoder LMs (vocab head required)"
@@ -74,10 +136,27 @@ class DecodeEngine:
         self.cfg = cfg
         self.num_slots = bucket_for(num_slots)
         self.prompt_len = prompt_len or fm.input_len
+        # variable-length admission masks pads out of ATTENTION; recurrent
+        # blocks (mamba/xLSTM) would still scan right-pad tokens into their
+        # state, so hybrid stacks keep the single full-length bucket with
+        # the legacy left-pad (pads attended, positionally before the prompt)
+        from repro.configs.base import ATTN
+        self.var_len = all(b == ATTN for b in cfg.blocks)
+        if prompt_buckets is None:
+            prompt_buckets = default_prompt_buckets(self.prompt_len) \
+                if self.var_len else (self.prompt_len,)
+        self.prompt_buckets = tuple(sorted(set(int(b) for b in prompt_buckets)))
+        self.prompt_len = self.prompt_buckets[-1]   # largest bucket is the cap
         self.max_new = max_new
         self.chunk = chunk
         self.kv_quant = kv_quant
         self.eos_id = eos_id
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self._sample = make_sampler(self.temperature, self.top_k)
+        # per-slot PRNG key state; threaded through the decode scan carry
+        self._keys = jax.random.split(jax.random.PRNGKey(sample_seed),
+                                      self.num_slots)
         self.s_max = self.prompt_len + max_new + 1
         # the persistent pool: allocated once, updated in place (donated)
         self.pool = lm.init_cache(cfg, self.num_slots, self.s_max,
@@ -114,14 +193,18 @@ class DecodeEngine:
     def _donate(*argnums):
         return argnums if jax.default_backend() != "cpu" else ()
 
-    def _prefill_fn(self, cap: int):
-        key = (cap,)
+    def _prefill_fn(self, cap: int, plen: int):
+        """Admission prefill for one prompt-length bucket. The bucket length
+        is a static jit key; the TRUE prompt length is a traced operand, so
+        every length within the bucket reuses the executable."""
+        key = (cap, plen)
         if key not in self._jit_prefill:
             cfg, impl, bt = self.cfg, self.fm.lora_impl, self.fm.seg_block_t
-            s_max, kvq = self.s_max, self.kv_quant
+            s_max, kvq, sample = self.s_max, self.kv_quant, self._sample
 
             @jax.jit
-            def run(params, tokens, lora_stack, adapter_idx, perm, inv, blocks):
+            def run(params, tokens, true_len, rng_key, lora_stack,
+                    adapter_idx, perm, inv, blocks):
                 seg = None
                 if impl == "segmented":
                     seg = {"perm": perm, "inv": inv, "block_adapter": blocks,
@@ -129,8 +212,10 @@ class DecodeEngine:
                 cache = lm.init_cache(cfg, 1, s_max, kv_quant=kvq)
                 logits, cache = lm.prefill(
                     params, cfg, tokens=tokens, cache=cache, lora=lora_stack,
-                    adapter_idx=adapter_idx, lora_impl=impl, lora_seg=seg)
-                return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+                    adapter_idx=adapter_idx, lora_impl=impl, lora_seg=seg,
+                    seq_lens=true_len)
+                first, rng_key = sample(logits, rng_key)
+                return first, rng_key, cache
 
             self._jit_prefill[key] = run
         return self._jit_prefill[key]
@@ -155,24 +240,26 @@ class DecodeEngine:
             cfg, impl, bt = self.cfg, self.fm.lora_impl, self.fm.seg_block_t
             donate = self._donate(1)
 
-            def run(params, pool, tokens, lora_stack, adapter_idx, perm, inv,
-                    blocks):
+            sample = self._sample
+
+            def run(params, pool, tokens, keys, lora_stack, adapter_idx,
+                    perm, inv, blocks):
                 seg = None
                 if impl == "segmented":
                     seg = {"perm": perm, "inv": inv, "block_adapter": blocks,
                            "block_t": bt}
 
                 def body(carry, _):
-                    pool, tok = carry
+                    pool, tok, keys = carry
                     logits, pool = lm.decode_step(
                         params, cfg, tokens=tok, cache=pool, lora=lora_stack,
                         adapter_idx=adapter_idx, lora_impl=impl, lora_seg=seg)
-                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                    return (pool, nxt), nxt
+                    nxt, keys = sample(logits, keys)
+                    return (pool, nxt, keys), nxt
 
-                (pool, tok), out = jax.lax.scan(body, (pool, tokens), None,
-                                                length=chunk)
-                return pool, tok, out.T                      # (slots, chunk)
+                (pool, tok, keys), out = jax.lax.scan(
+                    body, (pool, tokens, keys), None, length=chunk)
+                return pool, tok, keys, out.T                # (slots, chunk)
 
             self._jit_decode[key] = jax.jit(run, donate_argnums=donate)
         return self._jit_decode[key]
@@ -187,10 +274,17 @@ class DecodeEngine:
             self._seg_key = key
         return self._seg_dev
 
-    def _prefill_segments(self, adapter_slot: int, cap: int):
-        ids = np.full((self.prompt_len,), adapter_slot, np.int32)
+    def _prefill_segments(self, adapter_slot: int, cap: int, plen: int):
+        ids = np.full((plen,), adapter_slot, np.int32)
         perm, inv, blocks = self.fm.segment_meta(ids, cap, 1)
         return jnp.asarray(perm), jnp.asarray(inv), jnp.asarray(blocks)
+
+    def bucket_for_prompt(self, n: int) -> int:
+        """Smallest admission bucket holding an n-token prompt."""
+        for b in self.prompt_buckets:
+            if n <= b:
+                return b
+        return self.prompt_buckets[-1]
 
     # ---- serving surface ----
     def join(self, task_id: str, prompt: np.ndarray, *,
@@ -200,29 +294,48 @@ class DecodeEngine:
         quantized in-graph), scatter it into a free slot, produce the first
         token. Returns the slot index; raises if the pool is full.
 
-        Admission is fixed-shape (the prefill executable is compiled for
-        ``prompt_len``), so mismatched requests degrade gracefully instead of
-        wedging the serving step: short prompts are left-padded with token 0
-        (attended, but positionally before the real prompt), long prompts
-        keep their LAST ``prompt_len`` tokens, and the decode budget clamps
+        Admission is variable-length: the prompt is right-padded to the
+        smallest prompt-length bucket that holds it (a static jit key —
+        at most ``len(prompt_buckets)`` prefill executables ever compile)
+        while the true length is a traced operand masking the pads out of
+        attention and the KV cache. Prompts longer than the largest bucket
+        keep their LAST ``prompt_len`` tokens (causal LM: the suffix
+        matters) — that loses context, so it WARNS; the decode budget clamps
         to the pool's ``max_new`` capacity."""
         free = self.free_slots()
         if not free:
             raise RuntimeError("no free decode slots; step_chunk() first")
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if len(prompt) > self.prompt_len:
+            warnings.warn(
+                f"prompt of {len(prompt)} tokens exceeds the engine's largest "
+                f"admission bucket ({self.prompt_len}); left-truncating to "
+                f"the last {self.prompt_len} tokens (context is lost — size "
+                f"prompt_buckets to the workload)", RuntimeWarning,
+                stacklevel=2)
             prompt = prompt[-self.prompt_len:]     # causal LM: suffix matters
-        elif len(prompt) < self.prompt_len:
-            prompt = np.concatenate(
-                [np.zeros(self.prompt_len - len(prompt), np.int32), prompt])
+        if self.var_len:
+            true_len = max(1, len(prompt))
+            plen = self.bucket_for_prompt(true_len)
+            if len(prompt) < plen:                 # right-pad to the bucket
+                prompt = np.concatenate(
+                    [prompt, np.zeros(plen - len(prompt), np.int32)])
+        else:                                      # hybrid stack: legacy pad
+            plen = true_len = self.prompt_len
+            if len(prompt) < plen:
+                prompt = np.concatenate(
+                    [np.zeros(plen - len(prompt), np.int32), prompt])
         max_new_tokens = max(1, min(max_new_tokens, self.max_new))
         slot = free[0]
         cap = self.fm.adapters.capacity()
         aslot = self.fm.adapters.index(adapter_id)
-        perm, inv, blocks = self._prefill_segments(aslot, cap)
-        first, cache = self._prefill_fn(cap)(
-            self.fm.params, jnp.asarray(prompt[None]), self.fm.adapters.stacked(),
-            jnp.full((1,), aslot, jnp.int32), perm, inv, blocks)
+        perm, inv, blocks = self._prefill_segments(aslot, cap, plen)
+        first, key, cache = self._prefill_fn(cap, plen)(
+            self.fm.params, jnp.asarray(prompt[None]),
+            jnp.full((1,), true_len, jnp.int32), self._keys[slot][None],
+            self.fm.adapters.stacked(), jnp.full((1,), aslot, jnp.int32),
+            perm, inv, blocks)
+        self._keys = self._keys.at[slot].set(key[0])
         self.pool = self._write_fn()(self.pool, cache, slot)
         self._tokens = self._tokens.at[slot].set(first[0])
         now = time.perf_counter()
@@ -231,7 +344,7 @@ class DecodeEngine:
         self.slots[slot] = DecodeSlot(
             rid=rid, task_id=task_id, adapter_slot=aslot,
             max_new=max_new_tokens, eos_id=eos,
-            tokens=[tok0], t_join=now, t_first=now,
+            tokens=[tok0], t_join=now, t_first=now, prompt_tokens=true_len,
             done=(max_new_tokens == 1 or (eos is not None and tok0 == eos)))
         self._slot_adapters[slot] = aslot
         self._seg_key = None                    # composition changed
@@ -261,10 +374,11 @@ class DecodeEngine:
         if live:
             cap = self.fm.adapters.capacity()
             perm, inv, blocks = self._segments(cap)
-            self.pool, self._tokens, out = self._decode_fn(cap, self.chunk)(
-                self.fm.params, self.pool, self._tokens,
-                self.fm.adapters.stacked(),
-                jnp.asarray(self._slot_adapters), perm, inv, blocks)
+            self.pool, self._tokens, self._keys, out = \
+                self._decode_fn(cap, self.chunk)(
+                    self.fm.params, self.pool, self._tokens, self._keys,
+                    self.fm.adapters.stacked(),
+                    jnp.asarray(self._slot_adapters), perm, inv, blocks)
             out = np.asarray(out)               # one host sync per chunk
             self.steps += self.chunk
             now = time.perf_counter()

@@ -22,12 +22,18 @@ segmented-LoRA formulation), split by workload:
      host-side batched or per-row application — verdicts are probed once and
      cached per (task, head) pair.
 
-**Prefill+decode path** (``execute_generate`` — generative requests,
-``Request.max_new_tokens > 0``): requests stream through the FM's
-``DecodeEngine`` — admission prefill into a persistent int8 KV slot pool,
-then chunked segmented-LoRA decode with continuous batching: as slots
-retire, queued requests join between chunks, so one call serves a batch
-larger than the pool with zero recompiles.
+**Double-buffered dispatch** (``execute_async``): the pooled path splits into
+host prep + device dispatch (returns immediately) and a deferred ``resolve``
+(head application + host sync). The event loop (``core.serve_loop``) dispatches
+tick N+1 — whose ``np.stack`` co-batch assembly runs on the host while the
+device still executes tick N — BEFORE resolving tick N, so host prep and
+device compute overlap. ``execute`` keeps the synchronous contract
+(``execute_async(...).resolve()``).
+
+Generative requests (``Request.max_new_tokens > 0``) are served by the event
+loop directly: admission prefill into the FM's persistent ``DecodeEngine``
+slot pool, then chunked decode interleaved with pooled batches (see
+``core.serve_loop.ServeLoop``).
 
 Batch shapes are bucketed (batch size AND adapter slot count), so steady-state
 serving reuses compiled executables — zero recompiles as tasks come and go
@@ -35,7 +41,6 @@ within slot capacity.
 """
 from __future__ import annotations
 
-import collections
 import time
 
 import jax
@@ -44,6 +49,27 @@ import numpy as np
 from repro.core.physical import PhysicalFM
 from repro.core.request import Batch
 from repro.core.vfm import VFM
+
+
+class PendingBatch:
+    """An in-flight pooled batch: host prep + device dispatch have happened,
+    head application and the host sync are deferred to ``resolve()``. Holding
+    one of these while assembling the next co-batch is what overlaps tick
+    N+1's host prep with tick N's device step (double buffering)."""
+
+    def __init__(self, executor: "Executor", batch: Batch, order, feats_dev):
+        self._executor = executor
+        self.batch = batch
+        self._order = order
+        self._feats_dev = feats_dev
+        self._out = None
+
+    def resolve(self) -> dict[int, object]:
+        """Block on the device step, apply per-task heads, return
+        {request id: task output}. Idempotent."""
+        if self._out is None:
+            self._out = self._executor._finish(self._order, self._feats_dev)
+        return self._out
 
 
 class Executor:
@@ -56,10 +82,23 @@ class Executor:
         self._head_mode: dict[str, tuple[object, str]] = {}
         self._head_jit: dict[str, object] = {}      # task_id -> jitted head
 
-    def _run_device_head(self, tid: str, feats_dev, idxs: list[int]):
+    @staticmethod
+    def _bucketed_rows(feats_dev, idxs: list[int]):
+        """Gather a task's feature rows padded to the batch bucket (row 0
+        repeated): the head jit then sees one shape per bucket instead of
+        one per exact sub-batch size — the event loop produces arbitrary
+        sizes every tick, and an unbucketed head retrace costs more than the
+        batch it serves."""
         import jax.numpy as jnp
-        y = self._head_jit[tid](feats_dev[jnp.asarray(np.asarray(idxs))])
-        return list(np.asarray(y))
+
+        from repro.core.physical import bucket_for
+        pad = bucket_for(len(idxs)) - len(idxs)
+        rows = np.asarray(idxs + [idxs[0]] * pad)
+        return feats_dev[jnp.asarray(rows)]
+
+    def _run_device_head(self, tid: str, feats_dev, idxs: list[int]):
+        y = self._head_jit[tid](self._bucketed_rows(feats_dev, idxs))
+        return list(np.asarray(y)[:len(idxs)])
 
     def _apply_head(self, tid: str, head, feats_dev, feats_fn,
                     idxs: list[int]):
@@ -103,11 +142,10 @@ class Executor:
                     and np.allclose(np.asarray(y[-1]), np.asarray(rowN),
                                     atol=1e-5))
 
-        # device first: one jitted executable per (task, head) signature
+        # device first: one jitted executable per (task, head, bucket)
         try:
             fn = jax.jit(head)
-            import jax.numpy as jnp
-            y = np.asarray(fn(feats_dev[jnp.asarray(np.asarray(idxs))]))
+            y = np.asarray(fn(self._bucketed_rows(feats_dev, idxs)))[:len(idxs)]
             if matches(y):
                 self._head_jit[tid] = fn
                 self._head_mode[tid] = (head, "device")
@@ -124,9 +162,11 @@ class Executor:
             return list(y)                    # reuse the probed batched output
         return [head(feats[i]) for i in idxs]
 
-    def execute(self, batch: Batch, vfms: dict[str, VFM]) -> dict[int, object]:
-        """Returns {request id: task output}. Measures wall time on the batch."""
-        t0 = time.perf_counter()
+    def execute_async(self, batch: Batch, vfms: dict[str, VFM]) -> PendingBatch:
+        """Host prep + device dispatch, NO host sync: returns a
+        ``PendingBatch`` whose ``resolve()`` applies heads and syncs. JAX
+        dispatch is asynchronous, so the device works through the backbone
+        pass while the caller assembles the next batch."""
         # adapter-sorted layout: concatenate sub-batches (one adapter each)
         order, embeds, aidx = [], [], []
         for adapter_id, reqs in batch.sub_batches:
@@ -141,6 +181,21 @@ class Executor:
                 aidx.append(ai)
         feats_dev = self.fm.run_batch_device(np.stack(embeds),
                                              np.asarray(aidx, np.int32))
+        return PendingBatch(self, batch, order, feats_dev)
+
+    def execute(self, batch: Batch, vfms: dict[str, VFM]) -> dict[int, object]:
+        """Synchronous contract: dispatch + resolve in one call.
+        ``last_exec_s`` covers this whole call; it is only stamped here —
+        for async batches the dispatch→resolve span includes whatever
+        interleaved work ran in between, which is not an executor cost."""
+        t0 = time.perf_counter()
+        out = self.execute_async(batch, vfms).resolve()
+        self.last_exec_s = time.perf_counter() - t0
+        return out
+
+    def _finish(self, order, feats_dev) -> dict[int, object]:
+        """Deferred half of ``execute_async``: per-task heads over the device
+        features + host sync."""
         # host copy, materialized lazily: only headless requests, probes, and
         # fallback-mode heads need it — all-device-head batches never pull
         feats_np: list = [None]
@@ -167,41 +222,4 @@ class Executor:
                            if t in self.fm.heads}
         self._head_jit = {t: v for t, v in self._head_jit.items()
                           if t in self.fm.heads}
-        self.last_exec_s = time.perf_counter() - t0
-        return out
-
-    def execute_generate(self, batch: Batch, vfms: dict[str, VFM],
-                         engine) -> dict[int, object]:
-        """Serve generative requests through the continuous-batching
-        ``DecodeEngine``: admit into free slots, advance chunked decode,
-        re-admit as slots retire. Returns {request id: generated token ids}.
-        Also stamps ``Request.first_token_time`` (TTFT) on each request."""
-        t0 = time.perf_counter()
-        pending = collections.deque(
-            r for _, reqs in batch.sub_batches for r in reqs)
-        by_rid = {r.rid: r for r in pending}
-        out: dict[int, object] = {}
-
-        def retire(slots):
-            now = time.perf_counter()
-            for s in slots:
-                r = by_rid.get(s.rid)
-                if r is not None:
-                    r.first_token_time = s.t_first
-                    # per-request completion: a short request co-batched with
-                    # a long one finishes at ITS retire chunk, not at the end
-                    # of the whole drain (keeps TPOT honest; on_complete
-                    # preserves an already-stamped finish_time)
-                    r.finish_time = now
-                out[s.rid] = np.asarray(s.tokens, np.int32)
-
-        while pending or engine.active_count():
-            while pending and engine.free_slots():
-                r = pending.popleft()
-                ext = vfms[r.task_id].extensions
-                engine.join(r.task_id, r.payload,
-                            adapter_id=ext.adapter_id,
-                            max_new_tokens=r.max_new_tokens, rid=r.rid)
-            retire(engine.step_chunk())
-        self.last_exec_s = time.perf_counter() - t0
         return out

@@ -1,0 +1,382 @@
+"""Unified event-loop serving plane: one clock, three kinds of work.
+
+Before this subsystem the server ran two disjoint planes: pooled batches
+dispatched synchronously while generative batches drained the decode engine
+to completion — a long decode stream starved pooled tasks for its whole
+lifetime, and BFQ's virtual time never saw per-token work. The event loop
+owns ONE clock: each ``tick`` the scheduler picks the next *unit of work* by
+virtual tag —
+
+  * a **pooled sub-batch** (tag = smallest queued pooled start tag), executed
+    through the double-buffered ``Executor.execute_async`` path: the co-batch
+    for tick N+1 is assembled on the host and dispatched while the device is
+    still executing tick N, whose heads/host-sync resolve afterwards;
+  * a **prefill admission** (tag = smallest queued generative start tag,
+    available while the decode pool has free slots): arrivals join the
+    ``DecodeEngine`` mid-flight between chunks, charged their TRUE prompt
+    length in tokens;
+  * a **decode chunk** (tag = the most-behind active stream's virtual time):
+    every occupied slot advances ``chunk`` tokens; each participating task is
+    charged ``chunk × its active slots`` tokens.
+
+Charges advance task virtual time through ``SchedulerBase.charge_tokens``
+(BFQ: ``l(1)·tokens/weight``, the same per-token price arrival tags use), so
+weighted max-min sharing holds across both planes at token granularity: a
+pooled batch interleaves between decode chunks exactly when its tag falls
+below the decode stream's, and vice versa.
+
+``run`` replays an arrival trace against the wall clock; ``step_batch``
+preserves the old synchronous one-BFQ-batch contract (``FMplexServer.step``)
+on top of the same machinery.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.bfq import group_sub_batches
+from repro.core.request import Batch, Request
+
+
+def is_generative(r: Request) -> bool:
+    return r.max_new_tokens > 0
+
+
+def is_pooled(r: Request) -> bool:
+    return r.max_new_tokens <= 0
+
+
+class ServeLoop:
+    """Event-loop serving plane bound to one (server, physical FM) pair."""
+
+    def __init__(self, server, fm_id: str, *, engine_kwargs: Optional[dict] = None,
+                 idle_sleep: float = 2e-4):
+        self.srv = server
+        self.fm_id = fm_id
+        self.engine_kwargs = engine_kwargs or {}
+        self.idle_sleep = idle_sleep
+        self._pending = None                    # double-buffered pooled batch
+        self._inflight: dict[int, Request] = {}  # rid -> loop-admitted request
+        self.served: list[Request] = []
+        self.ticks = collections.Counter()      # work-kind -> tick count
+        self._tie_last = "decode"               # alternation state (see tick)
+
+    # ---- plumbing ----
+    @property
+    def sched(self):
+        return self.srv.schedulers[self.fm_id]
+
+    def _vfms(self):
+        return self.srv.vfms_on(self.fm_id)
+
+    def _executor(self):
+        ex = self.srv.executors.get(self.fm_id)
+        if ex is None:       # FM deployed profile-only, then attached later
+            from repro.core.executor import Executor
+            ex = self.srv.executors[self.fm_id] = Executor(
+                self.srv.fms[self.fm_id])
+        return ex
+
+    def _engine(self, create: bool = False):
+        eng = self.srv.engines.get(self.fm_id)
+        if eng is None and create:
+            eng = self.srv.decode_engine(self.fm_id, **self.engine_kwargs)
+        return eng
+
+    def submit(self, req: Request, now: Optional[float] = None):
+        self.srv.on_arrival(req, time.perf_counter() if now is None else now)
+
+    # ---- the clock ----
+    def tick(self, now: Optional[float] = None) -> str:
+        """One scheduling decision: dispatch the smallest-tag unit of work.
+        Returns the kind dispatched ('pooled' | 'admit' | 'decode' | 'idle')."""
+        now = time.perf_counter() if now is None else now
+        sched, vfms = self.sched, self._vfms()
+        eng = self._engine()
+        candidates = []
+        pooled_tag = sched.peek_tag(vfms, is_pooled)
+        if pooled_tag != float("inf"):
+            candidates.append((pooled_tag, 0, "pooled"))
+        gen_tag = sched.peek_tag(vfms, is_generative)
+        if gen_tag != float("inf") and (eng is None or eng.free_slots()):
+            # ties: admit before pooled/decode — filling slots lets the next
+            # decode chunk amortize over more streams
+            candidates.append((gen_tag, -1, "admit"))
+        if eng is not None and eng.active_count():
+            decode_tag = min(sched.task_vtime(s.task_id)
+                             for s in eng.slots if s is not None)
+            if not sched.token_accounting:
+                # no token clock (STFQ/FIFO): the decode tag is meaningless
+                # against real queue tags — force a tie with the best queued
+                # tag so admission (tie priority -1) refills free slots
+                # mid-flight and the pooled/decode alternation below shares
+                # the device between the planes
+                queued_tag = min(pooled_tag, gen_tag)
+                if queued_tag != float("inf"):
+                    decode_tag = queued_tag
+            candidates.append((decode_tag, 1, "decode"))
+        if not candidates:
+            self._flush()
+            self.ticks["idle"] += 1
+            return "idle"
+        best = min(candidates)
+        kind = best[2]
+        # exact pooled/decode tag ties alternate: without a token clock the
+        # planes are forced into a tie above, and a fixed preference would
+        # starve one of them under sustained load on the other; under BFQ
+        # exact ties are transient and alternation is still fair
+        if kind in ("pooled", "decode"):
+            other = "decode" if kind == "pooled" else "pooled"
+            tie = next((c for c in candidates
+                        if c[2] == other and c[0] == best[0]), None)
+            if tie is not None and self._tie_last == kind:
+                kind = other
+            self._tie_last = kind
+        if kind == "pooled":
+            self._tick_pooled(sched, vfms, now)
+        elif kind == "admit":
+            self._tick_admit(sched, vfms, now)
+        else:
+            self._tick_decode(sched, vfms, now)
+        self.ticks[kind] += 1
+        return kind
+
+    def _tick_pooled(self, sched, vfms, now):
+        batch = sched.next_batch(vfms, now, pred=is_pooled)
+        if batch is None:
+            return
+        # dispatch N+1 BEFORE resolving N: the np.stack co-batch assembly in
+        # execute_async runs on the host while the device still executes the
+        # pending batch (double-buffered host prep)
+        new = self._executor().execute_async(batch, vfms)
+        self._flush()
+        self._pending = new
+
+    def _flush(self):
+        """Resolve the in-flight pooled batch: heads + host sync + completion
+        bookkeeping (Eq. 3 retro-correction via ``on_complete``)."""
+        if self._pending is None:
+            return
+        out = self._pending.resolve()
+        batch = self._pending.batch
+        self._pending = None
+        self.srv.on_complete(self.fm_id, batch, time.perf_counter())
+        for r in batch.requests:
+            r.result = out[r.rid]
+        self.served += batch.requests
+
+    def _admit_one(self, eng, vfms, r: Request) -> float:
+        """Join one generative request into the pool; returns the TRUE
+        (post-truncation) prompt length — the prefill's token charge."""
+        ext = vfms[r.task_id].extensions
+        prompt = np.asarray(r.payload).reshape(-1)
+        eng.join(r.task_id, prompt, adapter_id=ext.adapter_id,
+                 max_new_tokens=r.max_new_tokens, rid=r.rid)
+        return min(len(prompt), eng.prompt_len)
+
+    def _tick_admit(self, sched, vfms, now):
+        # the double buffer only spans pooled→pooled ticks: an engine tick
+        # syncs the device anyway, so resolve the pending pooled batch first
+        # (its requests must not outlive work dispatched after them)
+        self._flush()
+        eng = self._engine(create=True)
+        free = len(eng.free_slots())
+        # defer_charge: dispatch advances the stream's virtual time only to
+        # its start tag; the ACTUAL work is charged incrementally below and
+        # per decode chunk (double-pricing would halve the gen share)
+        batch = sched.next_batch(vfms, now, pred=is_generative, limit=free,
+                                 defer_charge=True)
+        if batch is None:
+            return
+        charges: dict[str, float] = collections.Counter()
+        for r in batch.requests:
+            charges[r.task_id] += self._admit_one(eng, vfms, r)
+            self._inflight[r.rid] = r
+        sched.charge_tokens(vfms, charges, now)
+
+    def _tick_decode(self, sched, vfms, now):
+        self._flush()                 # see _tick_admit: pooled results first
+        eng = self._engine()
+        # decode chunks charge chunk × active_slots tokens per task: that is
+        # the device work the chunk performs for the task, whether or not a
+        # stream hits its budget mid-chunk
+        active = collections.Counter(
+            s.task_id for s in eng.slots if s is not None and not s.done)
+        retired = eng.step_chunk()
+        sched.charge_tokens(
+            vfms, {t: n * eng.chunk for t, n in active.items()}, now)
+        done_t = time.perf_counter()
+        for s in retired:
+            self._retire(s, vfms, done_t)
+
+    def _retire(self, slot, vfms, now):
+        """Stamp a loop-admitted stream's request at ITS retire chunk (keeps
+        TTFT/TPOT honest for short streams co-batched with long ones)."""
+        r = self._inflight.pop(slot.rid, None)
+        if r is None:
+            return                    # admitted by step_batch; handled there
+        r.first_token_time = slot.t_first
+        r.finish_time = now
+        r.result = np.asarray(slot.tokens, np.int32)
+        v = vfms.get(r.task_id)
+        if v is not None:
+            v.acct.completed += 1
+            # token-level service accounting: l(1) per token of device work,
+            # prompt (admission prefill) included — mirrors what
+            # charge_tokens billed to the task's virtual time
+            v.acct.service_time += self.sched.profile.l(1) * \
+                (slot.prompt_tokens + len(slot.tokens))
+        self.served.append(r)
+
+    # ---- drivers ----
+    def warmup(self, *, pooled_task: Optional[str] = None,
+               gen_task: Optional[str] = None, pooled_n: int = 4):
+        """Compile every executable the loop can dispatch before measuring:
+        a pooled co-batch (plus a single), one admission prefill per
+        prompt-length bucket, the decode chunk, and the pool write. Shared
+        by the benchmarks and examples so the warm set can't drift from the
+        jit-key set. Generative warmup is skipped for FMs the engine cannot
+        serve (no vocab head / enc-dec)."""
+        import numpy as np
+        fm = self.srv.fms[self.fm_id]
+        cfg = fm.cfg
+        vfms = self._vfms()
+        if not vfms:
+            return
+        tids = sorted(vfms)
+        pooled_task = pooled_task or tids[0]
+        gen_task = gen_task or tids[-1]
+        rng = np.random.RandomState(0)
+        trace = [Request(pooled_task, 0.0,
+                         payload=rng.randn(fm.input_len,
+                                           cfg.d_model).astype(np.float32))
+                 for _ in range(pooled_n)]
+        trace.append(Request(pooled_task, 0.02,
+                             payload=trace[0].payload))     # size-1 bucket
+        if cfg.vocab_size > 0 and not cfg.is_representation \
+                and not cfg.is_encoder_decoder:
+            eng = self._engine(create=True)
+            for plen in eng.prompt_buckets:
+                trace.append(Request(
+                    gen_task, 0.0,
+                    payload=rng.randint(0, cfg.vocab_size,
+                                        plen).astype("int32"),
+                    tokens=float(plen + 2), max_new_tokens=2))
+        self.run(trace)
+
+    def _work_left(self) -> bool:
+        eng = self._engine()
+        return (self._pending is not None or bool(self._inflight)
+                or (eng is not None and eng.active_count() > 0)
+                or any(v.queue for v in self._vfms().values()))
+
+    def run(self, trace, *, drain: bool = True,
+            max_wall: Optional[float] = None) -> list[Request]:
+        """Replay a trace (``Request.arrival`` = offset seconds from start)
+        against the wall clock: requests are submitted when their arrival
+        time passes (rebased to ``perf_counter`` so latency stats line up)
+        and the loop ticks between arrivals. Returns the requests served by
+        THIS call (``self.served`` accumulates across calls)."""
+        trace = sorted(trace, key=lambda r: r.arrival)
+        t0 = time.perf_counter()
+        n0 = len(self.served)
+        i = 0
+        while True:
+            now = time.perf_counter()
+            if max_wall is not None and now - t0 > max_wall:
+                break
+            rel = now - t0
+            while i < len(trace) and trace[i].arrival <= rel:
+                r = trace[i]
+                r.arrival = t0 + r.arrival          # rebase to wall clock
+                self.submit(r, now)
+                i += 1
+            kind = self.tick(now)
+            if kind == "idle":
+                if i >= len(trace):
+                    if not drain or not self._work_left():
+                        break
+                else:
+                    wait = t0 + trace[i].arrival - time.perf_counter()
+                    time.sleep(max(0.0, min(self.idle_sleep, wait)))
+        self._flush()
+        return self.served[n0:]
+
+    # ---- legacy synchronous contract (FMplexServer.step) ----
+    def step_batch(self) -> Optional[Batch]:
+        """Dispatch + execute ONE mixed BFQ batch synchronously and return it
+        (or None). Pooled members run the double-buffered path; generative
+        members stream through the decode engine (mid-flight admission into
+        free slots, chunked decode, token-level charging) until all of THIS
+        batch's streams retire. Loop-admitted streams sharing the pool retire
+        normally along the way."""
+        # a still-pending pooled batch from a prior tick() must resolve
+        # before this path serves anything newer (its requests are already
+        # off the queues and executed — leaving them unstamped while step()
+        # keeps returning batches would wedge callers polling finish_time)
+        self._flush()
+        now = time.perf_counter()
+        batch = self.srv.next_batch(self.fm_id, now)
+        if batch is None:
+            return None
+        sched, vfms = self.sched, self._vfms()
+        pooled = [r for r in batch.requests if is_pooled(r)]
+        gen = [r for r in batch.requests if is_generative(r)]
+        results: dict[int, object] = {}
+        pend = None
+        if pooled:
+            pb = Batch(pooled, group_sub_batches(pooled, vfms))
+            pend = self._executor().execute_async(pb, vfms)
+        if gen:
+            results.update(self._drain_gen(gen, sched, vfms))
+        if pend is not None:
+            results.update(pend.resolve())
+        self.srv.on_complete(self.fm_id, batch, time.perf_counter())
+        for r in batch.requests:
+            r.result = results[r.rid]
+        return batch
+
+    def _drain_gen(self, reqs, sched, vfms) -> dict[int, object]:
+        """Serve this batch's generative requests to completion (the old
+        drain-synchronous contract). No token charges here: this path's
+        requests were dispatched at their FULL arrival price and are
+        retro-corrected by ``on_complete`` in ``step_batch`` — charging
+        chunks on top would double-price them."""
+        eng = self._engine(create=True)
+        pending = collections.deque(reqs)
+        mine = {r.rid: r for r in reqs}
+        out: dict[int, object] = {}
+
+        def mine_active():
+            return any(s is not None and s.rid in mine for s in eng.slots)
+
+        while pending or mine_active():
+            now = time.perf_counter()
+            while pending and eng.free_slots():
+                self._admit_one(eng, vfms, pending.popleft())
+            # loop-admitted streams sharing the pool WERE dispatched at
+            # deferred charge — their chunks still bill token-level
+            loop_active = collections.Counter(
+                s.task_id for s in eng.slots
+                if s is not None and not s.done and s.rid in self._inflight)
+            retired = eng.step_chunk()
+            if loop_active:
+                sched.charge_tokens(
+                    vfms, {t: n * eng.chunk for t, n in loop_active.items()},
+                    now)
+            done_t = time.perf_counter()
+            for s in retired:
+                r = mine.get(s.rid)
+                if r is None:         # a loop-admitted stream retired too
+                    self._retire(s, vfms, done_t)
+                    continue
+                r.first_token_time = s.t_first
+                # per-request completion: a short request co-batched with a
+                # long one finishes at ITS retire chunk (on_complete keeps an
+                # already-stamped finish_time)
+                r.finish_time = done_t
+                out[s.rid] = np.asarray(s.tokens, np.int32)
+        return out

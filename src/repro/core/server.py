@@ -3,22 +3,24 @@
 Maintains the local vFM registry, task queues, scheduler state, and bindings
 from vFMs to physical FM instances. The same object serves both planes:
 
-  * real plane  — ``serve_forever``/``step`` execute batches on a PhysicalFM
-    via the Executor (tiny configs on CPU);
+  * real plane  — the event-loop serving plane (``core.serve_loop``): one
+    clock per FM under which pooled sub-batches, prefill admissions, and
+    decode chunks interleave by BFQ virtual tag (``serve_loop(fm_id)``);
+    ``step`` keeps the legacy synchronous one-batch contract on top of it;
   * sim plane   — the discrete-event simulator drives ``on_arrival`` /
     ``next_batch`` / ``on_complete`` with virtual time.
 """
 from __future__ import annotations
 
-import time
 from typing import Optional
 
-from repro.core.bfq import SCHEDULERS, SchedulerBase, group_sub_batches
+from repro.core.bfq import SCHEDULERS, SchedulerBase
 from repro.core.decode_engine import DecodeEngine
 from repro.core.executor import Executor
 from repro.core.physical import PhysicalFM
 from repro.core.profile import FMProfile
 from repro.core.request import Batch, Request
+from repro.core.serve_loop import ServeLoop
 from repro.core.vfm import VFM, TaskExtensions
 
 
@@ -28,6 +30,7 @@ class FMplexServer:
         self.fms: dict[str, PhysicalFM] = {}          # physical FM instances
         self.executors: dict[str, Executor] = {}      # persistent, one per FM
         self.engines: dict[str, DecodeEngine] = {}    # persistent decode pools
+        self.loops: dict[str, ServeLoop] = {}         # event-loop plane per FM
         self.profiles: dict[str, FMProfile] = {}
         self.schedulers: dict[str, SchedulerBase] = {}
         self.vfms: dict[str, VFM] = {}                # task_id -> vFM
@@ -48,16 +51,38 @@ class FMplexServer:
         self.fms.pop(fm_id, None)
         self.executors.pop(fm_id, None)
         self.engines.pop(fm_id, None)
+        self.loops.pop(fm_id, None)
         self.profiles.pop(fm_id)
         self.schedulers.pop(fm_id)
 
     def decode_engine(self, fm_id: str, **kwargs) -> DecodeEngine:
         """The FM's persistent continuous-batching decode pool (created on
-        first use; ``kwargs`` configure it then — slots, chunk, max_new...)."""
+        first use; ``kwargs`` configure it then — slots, chunk, max_new...).
+        Passing kwargs once the pool exists raises: silently ignoring them
+        (e.g. a ``max_new`` larger than the allocated pool, which ``join``
+        would quietly clamp to) has bitten before."""
         eng = self.engines.get(fm_id)
         if eng is None:
             eng = self.engines[fm_id] = DecodeEngine(self.fms[fm_id], **kwargs)
+        elif kwargs:
+            raise ValueError(
+                f"decode engine for {fm_id!r} already exists; it cannot be "
+                f"reconfigured with {sorted(kwargs)} (undeploy_fm first)")
         return eng
+
+    def serve_loop(self, fm_id: str, **kwargs) -> ServeLoop:
+        """The FM's persistent event-loop serving plane (created on first
+        use; ``kwargs`` configure it then — e.g. ``engine_kwargs`` for the
+        decode pool it admits into). Like ``decode_engine``, kwargs against
+        an existing loop raise instead of being silently dropped."""
+        loop = self.loops.get(fm_id)
+        if loop is None:
+            loop = self.loops[fm_id] = ServeLoop(self, fm_id, **kwargs)
+        elif kwargs:
+            raise ValueError(
+                f"serve loop for {fm_id!r} already exists; it cannot be "
+                f"reconfigured with {sorted(kwargs)} (undeploy_fm first)")
+        return loop
 
     def bind_task(self, task_id: str, fm_id: str, *, weight: float = 1.0,
                   slo=None, extensions: Optional[TaskExtensions] = None) -> VFM:
@@ -141,32 +166,14 @@ class FMplexServer:
                     sched.profile.effective_per_request(batch.size)
         sched.on_complete(batch, self.vfms_on(fm_id), now)
 
-    # ---- real-plane serving loop ----
+    # ---- real-plane serving (event-loop plane) ----
     def step(self, fm_id: str) -> Optional[Batch]:
         """Dispatch + execute one batch synchronously; returns it (or None).
 
-        Pooled-feature requests run the shared forward (``Executor.execute``);
-        generative requests (``max_new_tokens > 0``) stream through the FM's
-        persistent ``DecodeEngine`` (admission prefill + chunked int8-KV
-        decode with continuous batching). One BFQ batch may carry both."""
-        now = time.perf_counter()
-        batch = self.next_batch(fm_id, now)
-        if batch is None:
-            return None
-        ex = self.executors.get(fm_id)
-        if ex is None:       # FM deployed profile-only, then attached later
-            ex = self.executors[fm_id] = Executor(self.fms[fm_id])
-        gen = [r for r in batch.requests if r.max_new_tokens > 0]
-        pooled = [r for r in batch.requests if r.max_new_tokens <= 0]
-        results = {}
-        if pooled:
-            pb = Batch(pooled, group_sub_batches(pooled, self.vfms))
-            results.update(ex.execute(pb, self.vfms))
-        if gen:
-            gb = Batch(gen, group_sub_batches(gen, self.vfms))
-            results.update(ex.execute_generate(gb, self.vfms,
-                                               self.decode_engine(fm_id)))
-        self.on_complete(fm_id, batch, time.perf_counter())
-        for r in batch.requests:
-            r.result = results[r.rid]
-        return batch
+        Legacy contract kept on top of the event-loop plane: one mixed BFQ
+        batch — pooled members through the double-buffered executor path,
+        generative members through the FM's persistent ``DecodeEngine`` with
+        mid-flight admission and token-level fair-share charging. For
+        interleaved serving (pooled batches BETWEEN decode chunks), drive
+        ``serve_loop(fm_id)`` directly instead."""
+        return self.serve_loop(fm_id).step_batch()

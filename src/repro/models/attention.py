@@ -48,12 +48,17 @@ def _chunk(n: int, target: int) -> int:
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "q_chunk", "kv_chunk"))
 def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
-                    q_chunk: int = 1024, kv_chunk: int = 1024):
+                    q_chunk: int = 1024, kv_chunk: int = 1024, kv_len=None):
     """Online-softmax attention.
 
     q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with H % KV == 0 (GQA).
     Returns (B, Sq, H, hd). Q/K positions are aligned at the end (standard
     causal self-attention when Sq == Sk; for Sq < Sk, q is the suffix).
+
+    ``kv_len``: optional (B,) per-row valid key count — key positions at or
+    beyond a row's length are masked out (right-padded variable-length
+    prefill). Query rows past the length still see a non-empty causal
+    window, so their (discarded) outputs stay finite.
     """
     B, Sq, H, hd = q.shape
     _, Sk, KV, _ = k.shape
@@ -85,7 +90,11 @@ def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = Non
                 mask &= q_pos[:, None] >= k_pos[None, :]
             if window is not None:
                 mask &= (q_pos[:, None] - k_pos[None, :]) < window
-            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            mask = mask[None, None, None]                 # (1, 1, 1, qc, kc)
+            if kv_len is not None:
+                vmask = k_pos[None] < kv_len[:, None]     # (B, kc)
+                mask = mask & vmask[:, None, None, None]
+            s = jnp.where(mask, s, NEG_INF)
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
@@ -167,15 +176,19 @@ def out_project(p, attn_out, dtype):
 
 def self_attention(p, x, cfg, shard, *, causal=True, pos=None, pos3=None,
                    lora=None, adapter_idx=None, lora_impl="gather",
-                   lora_seg=None):
-    """Full-sequence self attention (train / prefill). Returns (out, (k, v))."""
+                   lora_seg=None, seq_lens=None):
+    """Full-sequence self attention (train / prefill). Returns (out, (k, v)).
+
+    ``seq_lens``: (B,) true lengths of right-padded rows — pad key positions
+    are masked out of the attention (variable-length prefill admission)."""
     q, k, v = qkv_project(p, x, cfg, pos=pos, pos3=pos3, lora=lora,
                           adapter_idx=adapter_idx, lora_impl=lora_impl,
                           lora_seg=lora_seg)
     q = shard(q, ("batch", None, "heads", None))
     k = shard(k, ("batch", None, "kv_heads", None))
     v = shard(v, ("batch", None, "kv_heads", None))
-    o = flash_attention(q, k, v, causal=causal, window=cfg.sliding_window)
+    o = flash_attention(q, k, v, causal=causal, window=cfg.sliding_window,
+                        kv_len=seq_lens)
     return out_project(p, o, x.dtype), (k, v)
 
 

@@ -143,11 +143,16 @@ def _ffn_apply(p, x, cfg, lay, shard):
 def sublayer_apply(p, x, cfg: ModelConfig, lay: SubLayer, shard, *,
                    mode: str, cache=None, pos=None, pos3=None, causal=True,
                    enc_out=None, lora=None, adapter_idx=None,
-                   lora_impl: str = "gather", lora_seg=None):
+                   lora_impl: str = "gather", lora_seg=None, seq_lens=None):
     """Apply one sublayer. mode: 'full' (train/prefill) or 'decode'.
 
     Returns (x, cache', aux_loss). cache' is None unless a cache was provided
     (prefill fills it; decode updates it).
+
+    ``seq_lens``: (B,) per-row true lengths for right-padded variable-length
+    prefill — pad keys are masked out of attention, pad K/V are zeroed before
+    the cache write (so int8 admission scales see only real tokens), and the
+    cache ``len`` is set per row instead of to the padded S.
     """
     aux = 0.0
     h = rmsnorm(p["ln1"], x, cfg.norm_eps)
@@ -167,11 +172,18 @@ def sublayer_apply(p, x, cfg: ModelConfig, lay: SubLayer, shard, *,
             out, (k, v) = attn.self_attention(
                 p["attn"], h, cfg, shard, causal=causal, pos=pos, pos3=pos3,
                 lora=lora, adapter_idx=adapter_idx, lora_impl=lora_impl,
-                lora_seg=lora_seg)
+                lora_seg=lora_seg, seq_lens=seq_lens)
             new_cache = None
             if cache is not None:  # prefill: fill the cache
                 S = x.shape[1]
                 new_cache = dict(cache)
+                if seq_lens is not None:
+                    # zero the pad positions' K/V: decode masks them via the
+                    # per-row len anyway, but the int8 admission scales below
+                    # are computed over the whole S axis
+                    valid = (jnp.arange(S)[None] < seq_lens[:, None])
+                    k = k * valid[..., None, None].astype(k.dtype)
+                    v = v * valid[..., None, None].astype(v.dtype)
                 if "k_scale" in cache:
                     # int8 pool admission: quantize the prompt's K/V once and
                     # fix the per-(batch, kv-head) scales for the decode steps
@@ -186,7 +198,9 @@ def sublayer_apply(p, x, cfg: ModelConfig, lay: SubLayer, shard, *,
                         k.astype(cache["k"].dtype))
                     new_cache["v"] = jnp.zeros_like(cache["v"]).at[:, :S].set(
                         v.astype(cache["v"].dtype))
-                new_cache["len"] = jnp.full_like(cache["len"], S)
+                new_cache["len"] = jnp.full_like(cache["len"], S) \
+                    if seq_lens is None \
+                    else seq_lens.astype(cache["len"].dtype)
         x = x + out
         if lay.has_cross:
             hx = rmsnorm(p["ln_x"], x, cfg.norm_eps)

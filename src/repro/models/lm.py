@@ -76,7 +76,7 @@ def init_cache(cfg: ModelConfig, batch: int, s_max: int, kv_quant: bool = False)
 
 def _stack_forward(layers_p, layout, x, cfg, shard, *, mode, cache, pos, pos3,
                    causal, enc_out, remat, lora=None, adapter_idx=None,
-                   lora_impl="gather", lora_seg=None):
+                   lora_impl="gather", lora_seg=None, seq_lens=None):
     """Scan over periods. Returns (x, new_cache, aux_sum)."""
     with_cache = cache is not None
     with_lora = lora is not None
@@ -93,7 +93,7 @@ def _stack_forward(layers_p, layout, x, cfg, shard, *, mode, cache, pos, pos3,
                 p_layers[i], x, cfg, lay, shard, mode=mode, cache=cache_layers[i],
                 pos=pos, pos3=pos3, causal=causal, enc_out=enc_out,
                 lora=(lora_layers[i] or None), adapter_idx=adapter_idx,
-                lora_impl=lora_impl, lora_seg=lora_seg)
+                lora_impl=lora_impl, lora_seg=lora_seg, seq_lens=seq_lens)
             new_caches.append(nc)
             aux = aux + a
         # residual-stream boundary constraint: under sequence parallelism the
@@ -121,7 +121,7 @@ def _stack_forward(layers_p, layout, x, cfg, shard, *, mode, cache, pos, pos3,
 def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None, cache=None,
             mode: str = "full", pos=None, pos3=None, enc_embeds=None,
             shard=NO_SHARD, remat: bool = False, lora=None, adapter_idx=None,
-            lora_impl: str = "gather", lora_seg=None):
+            lora_impl: str = "gather", lora_seg=None, seq_lens=None):
     """Backbone forward. Returns (hidden (B,S,d), new_cache, aux_loss).
 
     Inputs: ``tokens`` (B,S) int32 or ``embeds`` (B,S,d) (stub frontends);
@@ -130,6 +130,10 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None, cache=None,
     ``lora_impl``: "gather" (per-request gather-einsum; train/dry-run) or
     "segmented" (SGMV serve path — requires ``lora_seg`` metadata built once
     per adapter-sorted co-batch, see ``kernels.segmented_lora``).
+
+    ``seq_lens``: (B,) per-row true lengths for right-padded variable-length
+    batches (serving admission) — pad key positions are masked out of every
+    attention sublayer and excluded from the prefill cache.
     """
     enc_out = None
     if cfg.is_encoder_decoder:
@@ -157,7 +161,8 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None, cache=None,
     x, new_cache, aux = _stack_forward(
         params["layers"], layout, x, cfg, shard, mode=mode, cache=cache, pos=pos,
         pos3=pos3, causal=causal, enc_out=enc_out, remat=remat, lora=lora,
-        adapter_idx=adapter_idx, lora_impl=lora_impl, lora_seg=lora_seg)
+        adapter_idx=adapter_idx, lora_impl=lora_impl, lora_seg=lora_seg,
+        seq_lens=seq_lens)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     return x, new_cache, aux
 
@@ -231,16 +236,22 @@ def loss_fn(params, cfg: ModelConfig, batch: dict, shard=NO_SHARD,
 
 def prefill(params, cfg: ModelConfig, *, tokens=None, embeds=None, enc_embeds=None,
             pos3=None, cache, shard=NO_SHARD, lora=None, adapter_idx=None,
-            lora_impl: str = "gather", lora_seg=None):
+            lora_impl: str = "gather", lora_seg=None, seq_lens=None):
     """Fill the decode cache from a prompt. Returns (last_logits, cache).
     ``lora``/``adapter_idx``: co-batched multi-task admission — the prompt
-    pass applies the same per-request adapters the decode steps will."""
+    pass applies the same per-request adapters the decode steps will.
+    ``seq_lens``: (B,) true prompt lengths for right-padded variable-length
+    admission — pads are masked from attention and the cache, and the "last"
+    logits come from each row's final REAL token."""
     x, cache, _ = forward(params, cfg, tokens=tokens, embeds=embeds,
                           enc_embeds=enc_embeds, pos3=pos3, cache=cache,
                           mode="full", shard=shard, lora=lora,
                           adapter_idx=adapter_idx, lora_impl=lora_impl,
-                          lora_seg=lora_seg)
-    last = x[:, -1]
+                          lora_seg=lora_seg, seq_lens=seq_lens)
+    if seq_lens is None:
+        last = x[:, -1]
+    else:
+        last = x[jnp.arange(x.shape[0]), jnp.maximum(seq_lens, 1) - 1]
     if "head" in params and cfg.vocab_size > 0:
         logits = jnp.einsum("bd,dv->bv", last.astype(jnp.float32),
                             params["head"].astype(jnp.float32))

@@ -22,24 +22,51 @@ def poisson_trace(task_id: str, rps: float, horizon: float, *, seed: int = 0,
 
 def token_trace(task_id: str, rps: float, horizon: float, *, prompt_len: int,
                 vocab: int, max_new: int = 8, seed: int = 0,
-                slo_s: float | None = None, start: float = 0.0) -> list[Request]:
+                slo_s: float | None = None, start: float = 0.0,
+                min_prompt_len: int | None = None) -> list[Request]:
     """Generative (prefill+decode) Poisson trace for the DecodeEngine path.
 
-    Each request carries a random prompt (``payload``: (prompt_len,) int32
-    token ids) and a sampled decode budget (``max_new_tokens`` uniform in
-    [1, max_new] — variable output lengths are what make continuous batching
-    bite). ``Request.tokens`` carries prompt + output work units so BFQ's
+    Each request carries a random prompt (``payload``: int32 token ids) and a
+    sampled decode budget (``max_new_tokens`` uniform in [1, max_new] —
+    variable output lengths are what make continuous batching bite).
+    ``min_prompt_len`` < ``prompt_len`` samples VARIABLE prompt lengths
+    uniformly in [min, max] (exercising the engine's bucketed variable-length
+    admission); by default all prompts are ``prompt_len`` long.
+    ``Request.tokens`` carries prompt + output work units so BFQ's
     token-based accounting (§4.2) prices heavy requests proportionally."""
     rng = np.random.RandomState(seed)
+    lo = prompt_len if min_prompt_len is None else max(1, min_prompt_len)
     t, out = start, []
     while True:
         t += rng.exponential(1.0 / rps)
         if t >= start + horizon:
             break
         new = int(rng.randint(1, max_new + 1))
+        plen = int(rng.randint(lo, prompt_len + 1))
         out.append(Request(
-            task_id, t, payload=rng.randint(0, vocab, prompt_len).astype("int32"),
-            tokens=float(prompt_len + new), max_new_tokens=new, slo=SLO(slo_s)))
+            task_id, t, payload=rng.randint(0, vocab, plen).astype("int32"),
+            tokens=float(plen + new), max_new_tokens=new, slo=SLO(slo_s)))
+    return out
+
+
+def feature_trace(task_id: str, rps: float, horizon: float, *, input_len: int,
+                  d_model: int, seed: int = 0, slo_s: float | None = None,
+                  start: float = 0.0) -> list[Request]:
+    """Pooled-feature Poisson trace: each request carries a random
+    ``(input_len, d_model)`` feature payload for the shared-forward path
+    (distinct rows, so executor head probing can discriminate batched from
+    reducing heads). Combine with ``token_trace`` via ``merge`` for the
+    mixed pooled + generative workloads the event-loop plane serves."""
+    rng = np.random.RandomState(seed)
+    t, out = start, []
+    while True:
+        t += rng.exponential(1.0 / rps)
+        if t >= start + horizon:
+            break
+        out.append(Request(
+            task_id, t,
+            payload=rng.randn(input_len, d_model).astype("float32"),
+            slo=SLO(slo_s)))
     return out
 
 

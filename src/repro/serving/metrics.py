@@ -53,6 +53,15 @@ def decode_stats(requests) -> dict:
     }
 
 
+def mixed_stats(requests) -> dict:
+    """Split per-plane report for mixed pooled + generative serving (the
+    event-loop plane): request-level latency for the pooled side, token-level
+    TTFT/TPOT/throughput for the generative side."""
+    pooled = [r for r in requests if r.max_new_tokens <= 0]
+    gen = [r for r in requests if r.max_new_tokens > 0]
+    return {"pooled": latency_stats(pooled), "decode": decode_stats(gen)}
+
+
 def jain_fairness(shares: dict[str, float], weights: dict[str, float]) -> float:
     """Jain index over weight-normalized service shares (Elliott [16] style).
 

@@ -1,5 +1,7 @@
 """BFQ unit tests: tag math (paper Eqs. 1-3), batch formation, SLO-aware
-admission, adapter sub-batching, work conservation, retro-correction."""
+admission, adapter sub-batching, work conservation, retro-correction,
+token-level accounting for the event-loop plane, and pooled-vs-generative
+colocation fairness on the real plane."""
 import pytest
 
 from repro.core.bfq import BFQ, FIFOBatch, STFQ
@@ -138,6 +140,89 @@ def test_fifo_batches_arrival_order():
     assert [r.rid for r in b.requests] == [r.rid for r in rs[:3]]
 
 
+def test_next_batch_pred_and_limit():
+    """Event-loop formation: ``pred`` restricts the plane, ``limit`` caps
+    below B_max (admission is bounded by free decode slots)."""
+    sched, vfms = make(b_max=8)
+    for i in range(6):
+        sched.on_arrival(vfms["A"], Request("A", 0.0), 0.0)
+        sched.on_arrival(vfms["B"], Request("B", 0.0, max_new_tokens=4), 0.0)
+    gen = sched.next_batch(vfms, 0.0, pred=lambda r: r.max_new_tokens > 0,
+                           limit=2)
+    assert gen.size == 2 and all(r.max_new_tokens > 0 for r in gen.requests)
+    pooled = sched.next_batch(vfms, 0.0,
+                              pred=lambda r: r.max_new_tokens <= 0)
+    assert pooled.size == 6 and all(r.max_new_tokens <= 0
+                                    for r in pooled.requests)
+    assert len(vfms["B"].queue) == 4              # the rest stayed queued
+
+
+def test_defer_charge_dispatch_uses_start_tag():
+    """Event-loop admission: the dispatched stream's virtual time advances
+    only to its START tag; per-token charges bill the actual work (a full
+    finish-tag advance would double-price the stream: estimate + charges)."""
+    sched, vfms = make()
+    r = Request("A", 0.0, tokens=20.0, max_new_tokens=16)
+    sched.on_arrival(vfms["A"], r, 0.0)
+    sched.next_batch(vfms, 0.0, defer_charge=True)
+    assert sched.task_vtime("A") == pytest.approx(r.start_tag)
+    sched.charge_tokens(vfms, {"A": 4.0}, 0.0)
+    assert sched.task_vtime("A") == pytest.approx(
+        r.start_tag + sched.profile.l(1) * 4.0)
+
+
+def test_charge_tokens_advances_vtime_and_rechains():
+    """Token-level plane: a decode chunk charge advances the task's virtual
+    finish by l(1)·tokens/w and re-chains its queued requests behind it."""
+    sched, vfms = make(weight_a=2.0)
+    l1 = sched.profile.l(1)
+    r = Request("A", 0.0, tokens=4.0)
+    sched.on_arrival(vfms["A"], r, 0.0)
+    sched.charge_tokens(vfms, {"A": 10.0}, 0.0)
+    assert sched.task_vtime("A") == pytest.approx(l1 * 10.0 / 2.0)
+    assert sched.v >= sched.task_vtime("A")
+    # the queued request was re-chained behind the charged work
+    assert r.start_tag == pytest.approx(sched.task_vtime("A"))
+    assert r.finish_tag == pytest.approx(r.start_tag + l1 * 4.0 / 2.0)
+    # baselines: no virtual time, charge is a no-op
+    from repro.core.bfq import FIFOBatch
+    fifo = FIFOBatch(sched.profile)
+    fifo.charge_tokens(vfms, {"A": 100.0}, 0.0)
+    assert fifo.task_vtime("A") == 0.0
+
+
+def test_weighted_shares_hold_at_token_granularity():
+    """Mixed-plane colocation, scheduler level: task A streams decode chunks
+    (charged via charge_tokens), task B holds a pooled backlog. Replaying
+    the event loop's pick-min-tag rule must hand A ~weight_A:weight_B of the
+    tokens — weighted max-min across planes at token granularity."""
+    prof = FMProfile("fm", alpha=1e-3, beta=1e-3, b_max=1)
+    sched = BFQ(prof)
+    va, vb = VFM("A", weight=3.0), VFM("B", weight=1.0)
+    vfms = {"A": va, "B": vb}
+    chunk_tokens = 4.0
+    for _ in range(400):
+        sched.on_arrival(vb, Request("B", 0.0, tokens=chunk_tokens), 0.0)
+    # seed A's stream the way admission does: one request dispatched at
+    # deferred charge (actual work billed per chunk below)
+    sched.on_arrival(va, Request("A", 0.0, tokens=chunk_tokens), 0.0)
+    sched.next_batch(vfms, 0.0, pred=lambda r: r.task_id == "A",
+                     defer_charge=True)
+    tokens = {"A": 0.0, "B": 0.0}
+    for _ in range(200):
+        decode_tag = sched.task_vtime("A")
+        pooled_tag = sched.peek_tag(vfms)
+        if decode_tag <= pooled_tag:              # the loop's decision rule
+            sched.charge_tokens(vfms, {"A": chunk_tokens}, 0.0)
+            tokens["A"] += chunk_tokens
+        else:
+            b = sched.next_batch(vfms, 0.0)
+            tokens["B"] += sum(r.tokens for r in b.requests)
+            sched.on_complete(b, vfms, 0.0)
+    ratio = tokens["A"] / tokens["B"]
+    assert 2.5 < ratio < 3.6, ratio               # ~3:1 by weight
+
+
 def test_token_level_accounting():
     """Paper §4.2, token-based FMs: with equal weights, a task sending
     10x-token requests receives ~1/10th the REQUEST rate (equal token rate)."""
@@ -159,3 +244,81 @@ def test_token_level_accounting():
     # token shares ~equal; request shares ~1:10
     assert abs(tokens["A"] - tokens["B"]) / max(tokens.values()) < 0.15
     assert served["B"] > 5 * served["A"]
+
+
+# ---------------- real plane: pooled vs generative colocation ----------------
+
+def test_pooled_latency_bounded_under_decode_colocation():
+    """A pooled task co-located with a long (64-step) generative stream on
+    one backbone, served by the event loop: pooled batches interleave
+    BETWEEN decode chunks, so (a) every pooled request completes while the
+    stream is still decoding — the drain-synchronous plane made them wait
+    for the whole stream — and (b) pooled p50 stays within ~2x of the
+    pooled-only baseline (asserted at 3x for CI-machine headroom)."""
+    import time
+
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.core.physical import PhysicalFM
+    from repro.core.request import Request
+    from repro.core.server import FMplexServer
+    from repro.core.vfm import TaskExtensions
+    from repro.serving.metrics import percentile
+
+    cfg = reduced(get_config("stablelm-1.6b"))
+    fm = PhysicalFM(cfg, seed=0, input_len=8, lora_rank=4)
+    fm.calibrate(sizes=(1, 2, 4))
+    srv = FMplexServer("s0")
+    srv.deploy_fm("fm0", fm, scheduler="bfq")
+    srv.bind_task("pooled", "fm0", weight=2.0, extensions=TaskExtensions())
+    srv.bind_task("gen", "fm0", weight=1.0, extensions=TaskExtensions())
+    loop = srv.serve_loop("fm0", engine_kwargs=dict(
+        num_slots=2, prompt_len=8, max_new=64, chunk=2))
+    rng = np.random.RandomState(0)
+
+    def pooled_req():
+        return Request("pooled", time.perf_counter(),
+                       payload=rng.randn(8, cfg.d_model).astype(np.float32))
+
+    def gen_req(steps):
+        return Request("gen", time.perf_counter(),
+                       payload=rng.randint(0, cfg.vocab_size, 8).astype("int32"),
+                       tokens=float(8 + steps), max_new_tokens=steps)
+
+    def serve(reqs):
+        for r in reqs:
+            loop.submit(r)
+        while any(r.finish_time is None for r in reqs):
+            loop.tick()
+        loop._flush()
+        return reqs
+
+    # warm every executable (pooled bucket, admission, decode chunk)
+    serve([pooled_req(), gen_req(2)])
+
+    # baseline: pooled only
+    solo = serve([pooled_req() for _ in range(6)])
+    p50_solo = percentile([r.latency for r in solo], 50)
+
+    # colocated: admit a 64-step stream, then the same pooled burst
+    stream = gen_req(64)
+    loop.submit(stream)
+    while not srv.engines["fm0"].active_count():
+        loop.tick()                                   # admission prefill
+    colo = [pooled_req() for _ in range(6)]
+    for r in colo:
+        loop.submit(r)
+    while any(r.finish_time is None for r in colo):
+        loop.tick()
+        assert loop.ticks is not None
+    loop._flush()
+    p50_colo = percentile([r.latency for r in colo], 50)
+    # (a) interleaving: all pooled done while the stream still decodes
+    assert stream.finish_time is None
+    while stream.finish_time is None:
+        loop.tick()
+    assert max(r.finish_time for r in colo) < stream.finish_time
+    assert len(stream.result) == 64
+    # (b) bounded degradation (~2x, asserted with headroom for CI noise)
+    assert p50_colo < 3.0 * max(p50_solo, 1e-3), (p50_colo, p50_solo)

@@ -1,7 +1,8 @@
 """Continuous-batching decode serving: segmented-vs-gather decode parity,
 int8-KV pool tolerance, zero-recompile (and zero-host-sort) steady state
-across request join/leave churn, vectorized SGMV host prep, and on-device
-per-task head application."""
+across request join/leave churn, variable-length bucketed admission,
+temperature/top-k sampling, int8 scale-drift bounds, vectorized SGMV host
+prep, and on-device per-task head application."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -193,6 +194,184 @@ def test_engine_first_token_and_slot_reuse(cfg):
     assert s1 == 0                                  # slot recycled
     (d,) = eng.drain()
     assert len(d.tokens) == 4 and d.t_first <= d.t_join + 10
+
+
+# ---------------- variable-length bucketed admission ----------------
+
+def _greedy_reference(fm, prompt, steps, s_max):
+    """Exact-length (unpadded) prefill + greedy decode on an int8 cache —
+    the oracle a bucketed right-padded admission must match token-for-token."""
+    cfg = fm.cfg
+    cap = fm.adapters.capacity()
+    ai = jnp.full((1,), cap, jnp.int32)
+    cache = lm.init_cache(cfg, 1, s_max, kv_quant=True)
+    lg, cache = lm.prefill(fm.params, cfg, tokens=jnp.asarray(prompt[None]),
+                           cache=cache, lora=fm.adapters.stacked(),
+                           adapter_idx=ai, lora_impl="gather")
+    toks = [int(jnp.argmax(lg, -1)[0])]
+    for _ in range(steps - 1):
+        lg, cache = lm.decode_step(
+            fm.params, cfg, tokens=jnp.asarray([toks[-1]], jnp.int32),
+            cache=cache, lora=fm.adapters.stacked(), adapter_idx=ai,
+            lora_impl="gather")
+        toks.append(int(jnp.argmax(lg, -1)[0]))
+    return toks
+
+
+def test_variable_length_admission_matches_exact_prefill(cfg):
+    """A short prompt admitted into a larger bucket (right-padded, true
+    length masked) must produce the SAME token stream as an exact-length
+    unpadded prefill: pads are invisible to attention, the cache len, the
+    rope positions, and the int8 admission scales."""
+    fm = _fm(cfg, na=1)
+    eng = DecodeEngine(fm, num_slots=2, prompt_len=16, max_new=8, chunk=2)
+    assert eng.prompt_buckets == (4, 8, 16)
+    rng = np.random.RandomState(7)
+    for plen in (3, 5, 11):                     # buckets 4, 8, 16
+        p = rng.randint(0, cfg.vocab_size, plen).astype(np.int32)
+        eng.join("t", p, max_new_tokens=6, rid=0)
+        (d,) = eng.drain()
+        assert d.tokens == _greedy_reference(fm, p, 6, eng.s_max)
+
+
+def test_prompt_buckets_zero_recompiles_across_lengths(cfg):
+    """After one warm join per bucket, admission of ANY prompt length within
+    the largest bucket — across join/leave churn — adds zero executables:
+    the true length is a traced operand, only the bucket is a jit key."""
+    fm = _fm(cfg)
+    eng = DecodeEngine(fm, num_slots=4, prompt_len=16, max_new=6, chunk=2,
+                       prompt_buckets=(4, 16))
+    rng = np.random.RandomState(3)
+    for plen in (4, 16):                        # warm each bucket once
+        eng.join("w", rng.randint(0, cfg.vocab_size, plen),
+                 adapter_id="lora0", max_new_tokens=2, rid=-1)
+    eng.drain()
+    compiles = eng.compile_count()
+    names = ["lora0", "lora1", None, "lora2"]
+    for i, plen in enumerate((1, 3, 7, 9, 13, 16, 2, 11)):
+        eng.join(f"t{i}", rng.randint(0, cfg.vocab_size, plen),
+                 adapter_id=names[i % 4], max_new_tokens=2 + i % 3, rid=i)
+        if not eng.free_slots():
+            eng.step_chunk()
+    done = eng.drain()
+    assert eng.compile_count() == compiles
+    assert len(eng._jit_prefill) == 2           # one executable per bucket
+
+
+def test_join_warns_on_truncation(cfg):
+    """Prompts longer than the largest admission bucket lose context;
+    that must be loud (satellite: fix the silent left-truncation)."""
+    fm = _fm(cfg, na=1)
+    eng = DecodeEngine(fm, num_slots=2, prompt_len=8, max_new=4, chunk=2)
+    rng = np.random.RandomState(0)
+    long = rng.randint(0, cfg.vocab_size, 23).astype(np.int32)
+    with pytest.warns(RuntimeWarning, match="left-truncating"):
+        eng.join("t", long, max_new_tokens=3, rid=0)
+    (d,) = eng.drain()
+    # suffix semantics: same stream as admitting the last prompt_len tokens
+    eng.join("t", long[-8:], max_new_tokens=3, rid=1)
+    (d2,) = eng.drain()
+    assert d.tokens == d2.tokens
+
+
+# ---------------- temperature / top-k sampling ----------------
+
+def test_sampling_topk1_is_greedy_and_seed_reproducible(cfg):
+    """top_k=1 at any temperature must reproduce the greedy stream (the
+    categorical collapses to the argmax); equal seeds reproduce, different
+    seeds explore."""
+    fm = _fm(cfg, na=1)
+    rng = np.random.RandomState(11)
+    p = rng.randint(0, cfg.vocab_size, 8).astype(np.int32)
+
+    def stream(**kw):
+        eng = DecodeEngine(fm, num_slots=2, prompt_len=8, max_new=8, chunk=4,
+                           **kw)
+        eng.join("t", p, adapter_id="lora0", max_new_tokens=8, rid=0)
+        (d,) = eng.drain()
+        return d.tokens
+
+    greedy = stream()
+    assert stream(temperature=0.7, top_k=1) == greedy
+    s1 = stream(temperature=1.5, top_k=8, sample_seed=1)
+    s2 = stream(temperature=1.5, top_k=8, sample_seed=1)
+    s3 = stream(temperature=1.5, top_k=8, sample_seed=2)
+    assert s1 == s2                             # per-slot PRNG state is exact
+    assert s1 != greedy or s3 != greedy         # temperature actually samples
+
+
+def test_sampling_streams_independent_across_slots(cfg):
+    """Co-batched sampled streams use per-slot keys: the same prompt in two
+    slots of one chunked scan must not produce correlated tokens."""
+    fm = _fm(cfg, na=1)
+    eng = DecodeEngine(fm, num_slots=2, prompt_len=8, max_new=12, chunk=4,
+                       temperature=2.0, top_k=16, sample_seed=5)
+    p = np.arange(8).astype(np.int32) % cfg.vocab_size
+    eng.join("a", p, max_new_tokens=12, rid=0)
+    eng.join("b", p, max_new_tokens=12, rid=1)
+    a, b = sorted(eng.drain(), key=lambda s: s.rid)
+    assert a.tokens != b.tokens
+
+
+# ---------------- int8 KV scale drift ----------------
+
+def test_int8_scale_drift_bounded():
+    """Scales are FIXED at prefill admission; decode-era K/V outside the
+    prompt-era range get clipped. Drive the decode tail to 3x the admission
+    magnitude and assert the attention output's divergence from the fp path
+    stays bounded (the limit documented in ``core.decode_engine``)."""
+    from repro.kernels import ops
+    from repro.models.attention import decode_attention
+    rng = np.random.RandomState(0)
+    B, S_p, S_d, KV, hd = 2, 16, 48, 2, 8
+    S = S_p + S_d
+    k_p = rng.randn(B, S_p, KV, hd).astype(np.float32)
+    v_p = rng.randn(B, S_p, KV, hd).astype(np.float32)
+    kq, vq, ks, vs = ops.quantize_kv(jnp.asarray(k_p), jnp.asarray(v_p))
+    ks, vs = np.asarray(ks), np.asarray(vs)
+    for drift, bound in ((1.0, 0.06), (3.0, 0.85)):
+        # decode-era tail at drift× the prompt magnitude, quantized with the
+        # ADMISSION-ERA scales exactly as self_attention_decode does
+        k_d = rng.randn(B, S_d, KV, hd).astype(np.float32) * drift
+        v_d = rng.randn(B, S_d, KV, hd).astype(np.float32) * drift
+        kq_d = np.clip(np.round(k_d / ks[:, None, :, None]), -127, 127)
+        vq_d = np.clip(np.round(v_d / vs[:, None, :, None]), -127, 127)
+        k_all = np.concatenate([np.asarray(kq), kq_d], 1).astype(np.int8)
+        v_all = np.concatenate([np.asarray(vq), vq_d], 1).astype(np.int8)
+        q = rng.randn(B, 4, hd).astype(np.float32)
+        lens = np.full((B,), S, np.int32)
+        o_q8 = np.asarray(ops.decode_attention_int8(
+            jnp.asarray(q), jnp.asarray(k_all), jnp.asarray(v_all),
+            jnp.asarray(ks), jnp.asarray(vs), jnp.asarray(lens)))
+        o_fp = np.asarray(decode_attention(
+            jnp.asarray(q), jnp.asarray(np.concatenate([k_p, k_d], 1)),
+            jnp.asarray(np.concatenate([v_p, v_d], 1)), jnp.asarray(lens)))
+        rel = np.linalg.norm(o_q8 - o_fp) / np.linalg.norm(o_fp)
+        assert rel < bound, (drift, rel)
+
+
+def test_int8_long_decode_divergence_bounded(cfg):
+    """Model-level guard: a decode 4x longer than the prompt on the int8
+    pool stays within bounded relative divergence of the fp-cache path
+    (scales never refresh — the engine's documented limit)."""
+    params = lm.init_model(jax.random.PRNGKey(0), cfg)
+    B, S, steps = 2, 8, 32
+    toks = jax.random.randint(jax.random.PRNGKey(4), (B, S), 0,
+                              cfg.vocab_size)
+    c_fp = lm.init_cache(cfg, B, S + steps + 1)
+    c_q8 = lm.init_cache(cfg, B, S + steps + 1, kv_quant=True)
+    lg_fp, c_fp = lm.prefill(params, cfg, tokens=toks, cache=c_fp)
+    lg_q8, c_q8 = lm.prefill(params, cfg, tokens=toks, cache=c_q8)
+    t_fp = t_q8 = jnp.argmax(lg_fp, -1).astype(jnp.int32)
+    worst = 0.0
+    for _ in range(steps):                      # teacher-force on the fp path
+        lg_fp, c_fp = lm.decode_step(params, cfg, tokens=t_fp, cache=c_fp)
+        lg_q8, c_q8 = lm.decode_step(params, cfg, tokens=t_fp, cache=c_q8)
+        t_fp = jnp.argmax(lg_fp, -1).astype(jnp.int32)
+        d = np.asarray(lg_q8 - lg_fp)
+        worst = max(worst, float(np.linalg.norm(d) /
+                                 np.linalg.norm(np.asarray(lg_fp))))
+    assert worst < 0.5, worst                   # documented drift ceiling
 
 
 # ---------------- vectorized host prep ----------------
