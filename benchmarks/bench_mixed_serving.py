@@ -35,7 +35,8 @@ from repro.core.request import Request
 from repro.core.server import FMplexServer
 from repro.core.vfm import TaskExtensions
 from repro.serving.loadgen import feature_trace
-from repro.serving.metrics import decode_stats, latency_stats
+from repro.serving.metrics import (decode_stats, latency_stats, mixed_stats,
+                                   page_gauges)
 
 PROMPT_LEN = 16
 DECODE_STEPS = 64             # the acceptance scenario: long streams
@@ -60,9 +61,12 @@ def build(seed: int = 0):
         srv.bind_task(f"gen{i}", "fm0", weight=1.0,
                       extensions=TaskExtensions(adapter_id=f"lora{i}"))
     # create the pool eagerly with the scenario's shape: a later implicit
-    # default-kwargs creation would cap max_new at 32 and clamp the streams
+    # default-kwargs creation would cap max_new at 32 and clamp the streams.
+    # PAGED pool: long-tail decode budgets make stream lengths ragged, so
+    # page recycling and the loop's memory-aware admission gate both run
     srv.decode_engine("fm0", num_slots=4, prompt_len=PROMPT_LEN,
-                      max_new=DECODE_STEPS, chunk=4)
+                      max_new=DECODE_STEPS, chunk=4, paged=True,
+                      page_size=16)
     loop = srv.serve_loop("fm0")
     return srv, cfg, loop
 
@@ -78,17 +82,23 @@ def pooled_trace(cfg, horizon, rps, seed=0, start=0.05):
 def gen_trace(cfg, horizon, steps, seed=0):
     """Decode streams from t=0 (head start over the pooled burst): the
     drain-synchronous baseline grabs these first and drains them to
-    completion; the event loop interleaves."""
+    completion; the event loop interleaves. Budgets are LONG-TAIL
+    (log-uniform in [8, steps], the ``loadgen.long_tail_token_trace`` mix)
+    so short streams retire and recycle KV pages under the tail's
+    pressure — the workload the paged pool exists for."""
     rng = np.random.RandomState(100 + seed)
     out = []
     for i in range(N_GEN_TASKS):
         t = 0.0
         while t < horizon:
             plen = int(rng.randint(max(1, PROMPT_LEN // 4), PROMPT_LEN + 1))
+            new = int(round(np.exp(rng.uniform(np.log(8),
+                                               np.log(steps + 1)))))
+            new = max(8, min(new, steps))
             out.append(Request(
                 f"gen{i}", t,
                 payload=rng.randint(0, cfg.vocab_size, plen).astype("int32"),
-                tokens=float(plen + steps), max_new_tokens=steps))
+                tokens=float(plen + new), max_new_tokens=new))
             t += STREAM_EVERY
     return out
 
@@ -154,9 +164,11 @@ def run_all(out_path: str = None, smoke: bool = False):
 
     fresh_sched()
     loop.ticks.clear()         # report the MIXED run's interleaving only
+    loop.page_samples.clear()  # occupancy of the measured run only
     mixed = run_loop(loop, pooled + gen, max_wall)
-    loop_pooled = latency_stats([r for r in mixed if r.max_new_tokens <= 0])
-    loop_decode = decode_stats([r for r in mixed if r.max_new_tokens > 0])
+    ms = mixed_stats(mixed, page_samples=loop.page_samples)
+    loop_pooled, loop_decode = ms["pooled"], ms["decode"]
+    loop_kv_pages = ms.get("kv_pages", {})
     loop_gen_lat = latency_stats([r for r in mixed if r.max_new_tokens > 0])
     loop_recompiles = eng.compile_count() + fm.compile_count() - compiles
 
@@ -180,7 +192,9 @@ def run_all(out_path: str = None, smoke: bool = False):
         "pooled_solo": solo_stats,
         "mixed_loop": {"pooled": loop_pooled, "decode": loop_decode,
                        "decode_latency": loop_gen_lat,
+                       "kv_pages": loop_kv_pages,
                        "ticks": dict(loop.ticks)},
+        "engine_pages": page_gauges(eng),
         "mixed_drain": {"pooled": drain_pooled, "decode": drain_decode,
                         "decode_latency": drain_gen_lat},
         "pooled_p50_improvement_drain_over_loop": round(improvement, 2),
@@ -193,6 +207,7 @@ def run_all(out_path: str = None, smoke: bool = False):
           f"drain={drain_pooled.get('p50_ms', float('nan')):.1f}ms "
           f"(drain/loop x{improvement:.2f})")
     print(f"decode (loop): {loop_decode}")
+    print(f"kv pages (loop): {loop_kv_pages} | {page_gauges(eng)}")
     print(f"steady-state recompiles across mixed churn: {loop_recompiles}")
     assert loop_recompiles == 0, "mixed churn must not recompile"
     write_serving_section("mixed", out, out_path)

@@ -1,0 +1,237 @@
+"""Paged vs dense int8 KV pool benchmark (the PR's acceptance numbers).
+
+Two claims, measured on the same reduced decoder backbone:
+
+  * **capacity** — at FIXED KV memory (equal token capacity), the paged pool
+    sustains >= 2x more concurrent streams than the dense pool on a
+    mixed-length workload (log-uniform decode budgets: most streams short,
+    a heavy tail long). The dense pool reserves ``s_max`` tokens per slot,
+    so its concurrency is its slot count regardless of what streams actually
+    use; the paged pool hands out pages on demand and recycles them at
+    retire, so short streams stop paying for the tail's worst case.
+  * **step-time parity** — at EQUAL occupancy (same number of live streams,
+    same slot bucket), chunked decode through the paged arena stays within
+    ~10% of the dense int8 path: the page gather rides the same
+    online-softmax stream (index-map gather on TPU, jnp gather on the CPU
+    oracle), so paging buys memory without a hot-path regression.
+
+Plus the steady-state invariant: churn with page allocation/recycling and
+deferred admissions adds ZERO jitted executables.
+
+Results land under the "paged" section of ``BENCH_serving.json`` with the
+same warmup / median-of-repeats / backend + jax-version stamping as the
+other serving sections.
+"""
+from __future__ import annotations
+
+import argparse
+import statistics
+import time
+
+import jax
+import numpy as np
+
+from common import write_serving_section
+from repro.configs import get_config, reduced
+from repro.core.decode_engine import DecodeEngine
+from repro.core.physical import PhysicalFM
+
+PROMPT_LEN = 16
+MAX_NEW = 128                 # the dense pool reserves for this worst case
+PAGE_SIZE = 16
+DENSE_SLOTS = 4               # fixes the KV memory budget
+PAGED_SLOTS = 32
+N_STREAMS = 32
+PARITY_SLOTS = 8
+PARITY_STEPS = 64
+CHUNK = 8
+WARMUP = 1
+REPEATS = 5
+
+
+def _fm(cfg, num_adapters: int = 4) -> PhysicalFM:
+    fm = PhysicalFM(cfg, seed=0, input_len=PROMPT_LEN, lora_rank=8,
+                    lora_impl="segmented", seg_block_t=16)
+    for i in range(num_adapters):
+        tree = fm.adapters._mod.init_single_adapter(
+            jax.random.PRNGKey(i), fm.cfg, fm.adapters.rank)
+        leaves, tdef = jax.tree.flatten(tree)
+        ks = jax.random.split(jax.random.PRNGKey(1000 + i), len(leaves))
+        fm.adapters.add(f"lora{i}", jax.tree.unflatten(tdef, [
+            jax.random.normal(k, l.shape, l.dtype) * 0.05
+            for k, l in zip(ks, leaves)]))
+    return fm
+
+
+def mixed_length_workload(cfg, n: int, max_new: int, seed: int = 0):
+    """(prompt, budget) pairs with log-uniform budgets in [8, max_new] and
+    ragged prompts — the trace shape that makes dense reservation wasteful."""
+    rng = np.random.RandomState(seed)
+    out = []
+    for i in range(n):
+        plen = int(rng.randint(max(1, PROMPT_LEN // 4), PROMPT_LEN + 1))
+        new = int(round(np.exp(rng.uniform(np.log(8), np.log(max_new + 1)))))
+        out.append((rng.randint(0, cfg.vocab_size, plen).astype(np.int32),
+                    max(8, min(new, max_new))))
+    return out
+
+
+def drive_capacity(eng: DecodeEngine, work, names) -> dict:
+    """Burst-admit the whole workload, then drain; the engine's admission
+    policy (dense: slot-gated; paged: page-gated with deferral) decides how
+    many streams actually run concurrently."""
+    t0 = time.perf_counter()
+    done = []
+    for i, (prompt, new) in enumerate(work):
+        if not eng.paged:
+            while not eng.free_slots():
+                done += eng.step_chunk()
+        eng.join(f"t{i}", prompt, adapter_id=names[i % len(names)],
+                 max_new_tokens=new, rid=i)
+    peak = eng.active_count()
+    peak_pages = eng.used_page_count()
+    while eng.active_count() or eng.pending_count():
+        done += eng.step_chunk()
+        peak = max(peak, eng.active_count())
+        peak_pages = max(peak_pages, eng.used_page_count())
+    wall = time.perf_counter() - t0
+    toks = sum(len(d.tokens) for d in done)
+    assert len(done) == len(work), (len(done), len(work))
+    return {"streams_served": len(done), "peak_concurrent_streams": peak,
+            "peak_used_pages": peak_pages, "tokens_out": toks,
+            "tokens_per_s": round(toks / wall, 1),
+            "wall_s": round(wall, 3)}
+
+
+def parity_step_time(fm, cfg, *, paged: bool, steps: int, repeats: int,
+                     seed: int = 7) -> list[float]:
+    """Median-of-chunks decode ms/step at FULL occupancy (all slots live)."""
+    kw = dict(num_slots=PARITY_SLOTS, prompt_len=PROMPT_LEN, max_new=steps,
+              chunk=CHUNK)
+    if paged:
+        kw.update(paged=True, page_size=PAGE_SIZE)   # dense-equivalent pages
+    eng = DecodeEngine(fm, **kw)
+    rng = np.random.RandomState(seed)
+    prompts = rng.randint(0, cfg.vocab_size,
+                          (PARITY_SLOTS, PROMPT_LEN)).astype(np.int32)
+    names = [f"lora{i % 4}" for i in range(PARITY_SLOTS)]
+    per_rep = []
+    for rep in range(WARMUP + repeats):
+        for i in range(PARITY_SLOTS):
+            eng.join(f"t{i}", prompts[i], adapter_id=names[i],
+                     max_new_tokens=steps, rid=i)
+        jax.block_until_ready(eng.pool)
+        chunk_s = []
+        while eng.active_count():
+            t0 = time.perf_counter()
+            eng.step_chunk()
+            chunk_s.append(time.perf_counter() - t0)
+        if rep >= WARMUP:
+            # drop the retire chunk (host bookkeeping, not steady decode)
+            steady = chunk_s[:-1] if len(chunk_s) > 1 else chunk_s
+            per_rep.append(1e3 * statistics.median(steady) / CHUNK)
+    return per_rep
+
+
+def run_all(out_path: str = None, smoke: bool = False):
+    global MAX_NEW, N_STREAMS, PARITY_STEPS, REPEATS
+    if smoke:
+        MAX_NEW, N_STREAMS, PARITY_STEPS, REPEATS = 32, 12, 16, 1
+    cfg = reduced(get_config("stablelm-1.6b"))
+    fm = _fm(cfg)
+    names = [f"lora{i}" for i in range(4)]
+
+    # ---- capacity at fixed KV memory ----
+    s_max = PROMPT_LEN + MAX_NEW + 1
+    budget_tokens = DENSE_SLOTS * s_max              # the dense reservation
+    total_pages = 1 + budget_tokens // PAGE_SIZE     # +1: reserved trash page
+    work = mixed_length_workload(cfg, N_STREAMS, MAX_NEW)
+    dense = DecodeEngine(fm, num_slots=DENSE_SLOTS, prompt_len=PROMPT_LEN,
+                         max_new=MAX_NEW, chunk=CHUNK)
+    cap_dense = drive_capacity(dense, work, names)
+    paged = DecodeEngine(fm, num_slots=PAGED_SLOTS, prompt_len=PROMPT_LEN,
+                         max_new=MAX_NEW, chunk=CHUNK, paged=True,
+                         page_size=PAGE_SIZE, total_pages=total_pages)
+    cap_paged = drive_capacity(paged, work, names)
+    ratio = cap_paged["peak_concurrent_streams"] / \
+        max(cap_dense["peak_concurrent_streams"], 1)
+    print(f"capacity @ {budget_tokens} KV tokens: dense peak "
+          f"{cap_dense['peak_concurrent_streams']} streams, paged peak "
+          f"{cap_paged['peak_concurrent_streams']} streams (x{ratio:.1f}), "
+          f"paged deferrals={paged.deferrals} preemptions={paged.preemptions}")
+
+    # ---- decode step time at equal occupancy ----
+    d_ms = parity_step_time(fm, cfg, paged=False, steps=PARITY_STEPS,
+                            repeats=REPEATS)
+    p_ms = parity_step_time(fm, cfg, paged=True, steps=PARITY_STEPS,
+                            repeats=REPEATS)
+    dense_ms = statistics.median(d_ms)
+    paged_ms = statistics.median(p_ms)
+    overhead = paged_ms / max(dense_ms, 1e-9)
+    print(f"decode @ occupancy {PARITY_SLOTS}: dense {dense_ms:.2f}ms/step, "
+          f"paged {paged_ms:.2f}ms/step (x{overhead:.2f})")
+
+    # ---- steady state: churn + page alloc must not recompile ----
+    eng = DecodeEngine(fm, num_slots=4, prompt_len=PROMPT_LEN, max_new=16,
+                       chunk=4, paged=True, page_size=PAGE_SIZE)
+    rng = np.random.RandomState(0)
+    prompts = rng.randint(0, cfg.vocab_size, (8, PROMPT_LEN)).astype(np.int32)
+    for i in range(4):
+        eng.join(f"t{i}", prompts[i][:4 + 3 * i], adapter_id=names[i % 2],
+                 max_new_tokens=6 + i, rid=i)
+    eng.drain()                                     # warm all executables
+    compiles_before = eng.compile_count()
+    for i in range(4, 8):                           # churn: new compositions
+        eng.join(f"t{i}", prompts[i][:3 + 3 * (i % 4)],
+                 adapter_id=names[(i + 1) % 2], max_new_tokens=5 + i % 3,
+                 rid=i)
+    eng.drain()
+    steady = {
+        "recompiles_after_churn": eng.compile_count() - compiles_before,
+        "free_pages_after_drain": eng.free_page_count(),
+        "total_usable_pages": eng.total_pages - 1,
+    }
+    print("steady state:", steady)
+    assert steady["recompiles_after_churn"] == 0, steady
+    assert steady["free_pages_after_drain"] == steady["total_usable_pages"]
+
+    out = {
+        "config": cfg.name,
+        "prompt_len": PROMPT_LEN,
+        "max_new": MAX_NEW,
+        "page_size": PAGE_SIZE,
+        "chunk": CHUNK,
+        "warmup": WARMUP,
+        "repeats": REPEATS,
+        "stat": "median",
+        "capacity": {
+            "kv_budget_tokens": budget_tokens,
+            "total_pages": total_pages,
+            "workload_streams": N_STREAMS,
+            "dense": cap_dense,
+            "paged": dict(cap_paged, deferrals=paged.deferrals,
+                          preemptions=paged.preemptions),
+            "concurrency_ratio": round(ratio, 2),
+        },
+        "step_parity": {
+            "occupancy": PARITY_SLOTS,
+            "decode_steps": PARITY_STEPS,
+            "dense_ms_per_step": round(dense_ms, 3),
+            "paged_ms_per_step": round(paged_ms, 3),
+            "paged_over_dense": round(overhead, 3),
+        },
+        "steady_state": steady,
+        "paged_2x_streams_at_fixed_memory": bool(ratio >= 2.0),
+        "paged_step_within_10pct": bool(overhead <= 1.10),
+    }
+    write_serving_section("paged", out, out_path)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: small workload, 1 repeat")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    run_all(out_path=args.out, smoke=args.smoke)

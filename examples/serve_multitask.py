@@ -17,9 +17,14 @@ Three workload planes:
     decode chunk — so pooled batches interleave between chunks and streams
     join the pool mid-flight. Reports both planes side by side.
 
+``--paged`` switches the decode pool to the block-paged int8 KV layout
+(pages allocated on demand, recycled at retire, memory-aware admission that
+defers instead of crashing on bursts) and reports the free/used page gauges.
+
   PYTHONPATH=src python examples/serve_multitask.py --tasks 4 --rps 40 --seconds 8
   PYTHONPATH=src python examples/serve_multitask.py --decode --tasks 4 --rps 10
-  PYTHONPATH=src python examples/serve_multitask.py --mixed --tasks 4 --rps 30
+  PYTHONPATH=src python examples/serve_multitask.py --decode --paged --tasks 4 --rps 10
+  PYTHONPATH=src python examples/serve_multitask.py --mixed --paged --tasks 4 --rps 30
 """
 import argparse
 
@@ -56,7 +61,8 @@ def decode_main(args):
     srv, cfg = build_server(args.tasks, arch="stablelm-1.6b",
                             input_len=args.prompt_len, scheduler="bfq")
     eng = srv.decode_engine("fm0", num_slots=8, prompt_len=args.prompt_len,
-                            max_new=args.max_new, chunk=4)
+                            max_new=args.max_new, chunk=4,
+                            **_paged_kwargs(args))
     traces = merge([token_trace(f"task{i}", args.rps / args.tasks,
                                 args.seconds, prompt_len=args.prompt_len,
                                 vocab=cfg.vocab_size, max_new=args.max_new,
@@ -84,6 +90,9 @@ def decode_main(args):
     print(f"engine: {eng.steps} decode steps, "
           f"{eng.compile_count()} jitted executables (flat under churn), "
           f"{srv.fms['fm0'].seg_meta_cache.builds} host-side segment sorts")
+    if args.paged:
+        from repro.serving.metrics import page_gauges
+        print(f"kv pages: {page_gauges(eng)}")
 
 
 def mixed_main(args):
@@ -96,7 +105,8 @@ def mixed_main(args):
     srv, cfg = build_server(args.tasks, arch="stablelm-1.6b",
                             input_len=args.prompt_len, scheduler="bfq")
     eng = srv.decode_engine("fm0", num_slots=8, prompt_len=args.prompt_len,
-                            max_new=args.max_new, chunk=4)
+                            max_new=args.max_new, chunk=4,
+                            **_paged_kwargs(args))
     loop = srv.serve_loop("fm0")
     n_gen = max(1, args.tasks // 2)
     # warm the executables so the measured run reflects steady state
@@ -111,7 +121,7 @@ def mixed_main(args):
                            max_new=args.max_new, seed=i)
                for i in range(n_gen)]
     served = loop.run(merge(traces))
-    s = mixed_stats(served)
+    s = mixed_stats(served, page_samples=loop.page_samples)
     eng = srv.engines["fm0"]
     print(f"mixed: {len(served)} served, ticks={dict(loop.ticks)}")
     p, d = s["pooled"], s["decode"]
@@ -126,6 +136,20 @@ def mixed_main(args):
     print(f"  engine: buckets={eng.prompt_buckets}, {eng.steps} decode "
           f"steps, {eng.compile_count()} jitted executables (flat under "
           f"churn), {srv.fms['fm0'].seg_meta_cache.builds} host-side sorts")
+    if args.paged:
+        from repro.serving.metrics import page_gauges
+        kv = s.get("kv_pages", {})
+        print(f"  kv pages: occupancy p50={kv.get('occupancy_p50')} "
+              f"p95={kv.get('occupancy_p95')} | {page_gauges(eng)}")
+
+
+def _paged_kwargs(args) -> dict:
+    if not args.paged:
+        return {}
+    kw = dict(paged=True, page_size=args.page_size)
+    if args.total_pages:
+        kw["total_pages"] = args.total_pages
+    return kw
 
 
 def main():
@@ -137,6 +161,12 @@ def main():
                     help="generative serving via the DecodeEngine")
     ap.add_argument("--mixed", action="store_true",
                     help="pooled + generative traffic through one event loop")
+    ap.add_argument("--paged", action="store_true",
+                    help="block-paged int8 KV pool (pages on demand, "
+                         "memory-aware admission) instead of dense slots")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--total-pages", type=int, default=0,
+                    help="KV arena size in pages (default: dense-equivalent)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     args = ap.parse_args()

@@ -93,6 +93,21 @@ class SchedulerBase:
                 if pred is None or pred(r)]
         return min(tags) if tags else float("inf")
 
+    def peek_request(self, vfms: dict[str, VFM], pred=None):
+        """The queued request the next dispatch would serve (smallest start
+        tag, rid tie-break), WITHOUT popping it — the event loop inspects it
+        (e.g. its prompt length) to decide whether the decode pool can admit
+        it yet (memory-aware admission)."""
+        best = None
+        for v in vfms.values():
+            for r in v.queue:
+                if pred is not None and not pred(r):
+                    continue
+                if best is None or (r.start_tag, r.rid) < (best.start_tag,
+                                                           best.rid):
+                    best = r
+        return best
+
     @staticmethod
     def _pop(vfms, selected):
         for r in selected:

@@ -1,60 +1,83 @@
 """Continuous-batching decode engine: segmented-LoRA token serving over a
-persistent int8 KV-cache pool.
+persistent int8 KV pool — dense slot-contiguous or block-paged.
 
 Autoregressive serving is where FMplex's co-location wins compound: every
 decode step re-uses the shared backbone across all co-resident tasks, so the
 per-step cost of multi-task isolation must be ~zero. The engine owns:
 
   * a **slot pool** — a fixed, bucketed number of decode slots backed by one
-    persistent KV cache allocated ONCE (``lm.init_cache(kv_quant=True)``):
-    self-attention K/V live as int8 with per-(slot, kv-head) scales fixed at
-    prefill admission (``kernels.decode_attention_int8.quantize_kv``), halving
-    cache traffic; every decode step streams int8 only;
+    persistent KV cache allocated ONCE. Two layouts:
+
+      - *dense* (``paged=False``): ``lm.init_cache(kv_quant=True)`` — one
+        contiguous ``(num_slots, s_max)`` int8 region per slot with
+        per-(slot, kv-head) scales fixed at prefill admission
+        (``kernels.decode_attention_int8``). Every stream RESERVES its
+        worst-case length, so the slot count — not memory — caps colocation.
+      - *paged* (``paged=True``): one global arena of ``total_pages``
+        fixed-size pages (int8 K/V + per-(page, kv-head) scales,
+        ``page_size`` tokens each) shared by every slot, addressed through a
+        device-resident per-slot page table. Admission prefill scatters the
+        prompt into freshly allocated pages, decode appends a page on demand
+        (the host allocator tops slots up to ``len + chunk`` tokens before
+        each chunk), and retire returns pages to the free list — so
+        concurrency is bounded by TOTAL TOKENS IN FLIGHT, not
+        ``num_slots × s_max``. Attention gathers K/V through the page table
+        inside the Pallas kernel grid (``kernels.paged_decode_attention``;
+        jnp gather oracle on CPU). Page 0 is the reserved trash page: free
+        slots keep stepping (static shapes) and their garbage writes land
+        there, never in a live stream's pages.
+
   * **admission prefill** — a joining request's prompt runs a single jitted
     prefill (LoRA applied, K/V quantized in-graph) and is scattered into its
-    slot with one ``dynamic_update_slice`` per cache leaf. Admission is
-    **variable-length**: prompts are right-padded to the smallest of 2-3
-    *prompt-length buckets* (a static jit-cache key), while the TRUE length
-    rides along as a traced operand — pad keys are masked out of attention
-    (``lm.prefill(seq_lens=...)``), the cache ``len`` is per-row exact, and
-    the first token comes from the last REAL prompt position. Any prompt
-    length within the largest bucket therefore reuses one of at most
-    ``len(prompt_buckets)`` compiled executables;
+    slot (dense: one ``dynamic_update_slice`` per cache leaf; paged: a page
+    scatter into the allocated page ids). Admission is **variable-length**:
+    prompts are right-padded to the smallest of 2-3 *prompt-length buckets*
+    (a static jit-cache key), while the TRUE length rides along as a traced
+    operand — pad keys are masked out of attention, the cache ``len`` is
+    per-row exact, and the first token comes from the last REAL prompt
+    position. On a full pool, a paged ``join`` **defers** (FIFO pending
+    queue drained as slots and pages free up) instead of raising — a burst
+    of admissions beyond capacity queues and drains across chunks; the
+    dense layout keeps the historical raise.
+
   * **chunked decode** — ``step_chunk`` advances ALL occupied slots ``chunk``
     tokens under one jitted ``lax.scan`` (device-resident sampling: one
-    dispatch and one host sync per chunk, not per token). Sampling is greedy
-    by default; ``temperature > 0`` switches to temperature/top-k sampling
-    with **per-slot PRNG key state threaded through the scan carry**, so
-    streams stay reproducible and independent across slot churn;
+    dispatch and one host sync per chunk, not per token), greedy by default
+    with per-slot PRNG key state for temperature/top-k sampling. If the free
+    list cannot cover a live stream's next chunk, the youngest live stream is
+    **preempted**: its pages return to the pool and it re-queues with its
+    generated prefix folded into the prompt (re-admission also refreshes its
+    int8 scales). Memory-aware loop admission (``ServeLoop``) keeps a chunk
+    of decode headroom per admit precisely so this path stays rare.
+
   * **cached SGMV metadata** — segment metadata for the S=1 token co-batch is
-    built once per batch *composition* (slot occupancy + adapter assignment)
-    and reused every step; steady-state decode performs zero host-side sorts
-    (``PhysicalFM.seg_meta_cache`` memoizes, this class caches the
-    device-uploaded arrays) and zero recompiles (jit keyed on
-    (slot bucket, adapter slot bucket, chunk), like ``run_batch``).
+    built once per batch *composition* and reused every step; steady-state
+    decode performs zero host-side sorts and zero recompiles: jits stay keyed
+    on (slot bucket, adapter slot bucket, chunk) and
+    (adapter slot bucket, prompt bucket) — page tables, true lengths and page
+    ids are all TRACED operands, so join/leave churn and page allocation
+    never retrace. The LoRA path per jit key follows
+    ``PhysicalFM.resolve_lora_impl`` (gather vs segmented crossover;
+    ``lora_impl="auto"`` is the server default).
 
-Requests join and leave slots between chunks without recompilation: all
-traced shapes depend only on the bucketed quantities above. Free slots keep
-stepping (static shapes) — their rows are per-slot isolated garbage that the
-next admission's prefill overwrites.
-
-int8 KV scale drift: the per-(slot, kv-head) quantization scales are fixed
-ONCE at prefill admission. Decode-era K/V whose magnitude outgrows the
-prompt-era range are clipped to ±127·scale — the engine never rescales a
-live slot (that would re-quantize the whole row mid-stream). The divergence
-this introduces is bounded and grows slowly with decode length: empirically
+int8 KV scale drift: quantization scales are fixed ONCE at prefill admission
+(paged: stamped per page from the slot's admission scales). Decode-era K/V
+whose magnitude outgrows the prompt-era range are clipped to ±127·scale — the
+engine never rescales a live slot. The divergence this introduces is bounded
+and grows slowly with decode length: empirically
 (``tests/test_decode_engine.py::test_int8_scale_drift_bounded``) a decode
 tail 3× longer than the prompt whose K/V magnitude drifts to 3× the
 admission-scale range keeps attention-output relative divergence under ~0.8
 (vs ~0.06 with no drift), and at the model level a decode 4× the prompt
-length keeps logit relative divergence under 0.5
-(``test_int8_long_decode_divergence_bounded``). Decodes far beyond a
-``max_new`` of a few hundred tokens, or adapters that systematically grow
-activation magnitude, should either re-admit (prefill on the generated
-prefix refreshes scales) or allocate the pool with ``kv_quant=False``.
+length keeps logit relative divergence under 0.5. Decodes far beyond a
+``max_new`` of a few hundred tokens should either re-admit (prefill on the
+generated prefix refreshes scales — the paged preemption path does exactly
+this) or use ``kv_quant=False`` with the dense layout. Per-page scales make
+periodic per-page rescale a natural follow-up (see ROADMAP).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 import warnings
@@ -68,6 +91,7 @@ from repro.core.physical import PAD_SENTINEL, PhysicalFM, bucket_for
 from repro.models import lm
 
 FREE = PAD_SENTINEL   # free-slot adapter sentinel (same as run_batch padding)
+TRASH_PAGE = 0        # arena page absorbing free-slot garbage writes
 
 
 def default_prompt_buckets(prompt_len: int) -> tuple[int, ...]:
@@ -115,6 +139,20 @@ class DecodeSlot:
     t_first: float        # wall time of the first generated token (TTFT end)
     prompt_tokens: int = 0   # TRUE (post-truncation) admitted prompt length
     done: bool = False
+    prompt: Optional[np.ndarray] = None   # admitted prompt (paged: requeue)
+    adapter_id: Optional[str] = None
+
+
+@dataclasses.dataclass
+class _PendingJoin:
+    """A deferred admission (paged pool full) waiting in the FIFO queue."""
+    task_id: str
+    prompt: np.ndarray
+    adapter_id: Optional[str]
+    max_new_tokens: int
+    rid: int
+    eos_id: Optional[int]
+    resume: Optional[DecodeSlot] = None   # preempted stream being re-admitted
 
 
 class DecodeEngine:
@@ -126,7 +164,8 @@ class DecodeEngine:
                  eos_id: Optional[int] = None,
                  prompt_buckets: Optional[tuple] = None,
                  temperature: float = 0.0, top_k: int = 0,
-                 sample_seed: int = 0):
+                 sample_seed: int = 0, paged: bool = False,
+                 page_size: int = 16, total_pages: Optional[int] = None):
         cfg = fm.cfg
         assert cfg.vocab_size > 0 and not cfg.is_representation, \
             "DecodeEngine serves generative decoder LMs (vocab head required)"
@@ -158,15 +197,44 @@ class DecodeEngine:
         self._keys = jax.random.split(jax.random.PRNGKey(sample_seed),
                                       self.num_slots)
         self.s_max = self.prompt_len + max_new + 1
-        # the persistent pool: allocated once, updated in place (donated)
-        self.pool = lm.init_cache(cfg, self.num_slots, self.s_max,
-                                  kv_quant=kv_quant)
+        self.paged = paged
+        if paged:
+            assert kv_quant, "the paged arena is int8-only (kv_quant=True)"
+            assert self.var_len, \
+                "paged pools need attention-only stacks (recurrent state " \
+                "is per-slot dense)"
+            self.page_size = page_size
+            self.pages_per_slot = -(-self.s_max // page_size)
+            if total_pages is None:        # dense-equivalent memory + trash
+                total_pages = 1 + self.num_slots * self.pages_per_slot
+            assert total_pages >= 2, "need at least one usable page"
+            self.total_pages = total_pages
+            self.pool = lm.init_cache(cfg, self.num_slots, self.s_max,
+                                      kv_quant=True, paged=True,
+                                      page_size=page_size,
+                                      num_pages=total_pages)
+            # host-side allocator state; the device page table is synced
+            # from _ptab before any decode dispatch that follows a change
+            self._free_pages = list(range(total_pages - 1, TRASH_PAGE, -1))
+            self._ptab = np.zeros((self.num_slots, self.pages_per_slot),
+                                  np.int32)
+            self._held = np.zeros((self.num_slots,), np.int64)
+            self._lens = np.zeros((self.num_slots,), np.int64)
+            self._ptab_dirty = True
+            self.pending: collections.deque[_PendingJoin] = collections.deque()
+            self.deferrals = 0
+            self.preemptions = 0
+        else:
+            # the persistent pool: allocated once, updated in place (donated)
+            self.pool = lm.init_cache(cfg, self.num_slots, self.s_max,
+                                      kv_quant=kv_quant)
+            self.pending = collections.deque()
         self._tokens = jnp.zeros((self.num_slots,), jnp.int32)  # last token/slot
         self.slots: list[Optional[DecodeSlot]] = [None] * self.num_slots
         self._slot_adapters = np.full((self.num_slots,), FREE, np.int32)
         self._jit_prefill: dict[tuple, Callable] = {}
         self._jit_decode: dict[tuple, Callable] = {}
-        self._jit_write: Optional[Callable] = None
+        self._jit_write: dict = {}      # dense: {None: fn}; paged: {npages: fn}
         self._seg_key = None        # composition signature of cached metadata
         self._seg_dev = None        # device-uploaded (perm, inv, blocks)
         self.steps = 0              # decode steps executed (all slots)
@@ -179,19 +247,120 @@ class DecodeEngine:
     def active_count(self) -> int:
         return sum(1 for s in self.slots if s is not None)
 
+    def pending_count(self) -> int:
+        return len(self.pending)
+
+    def pending_rids(self) -> list[int]:
+        return [p.rid for p in self.pending]
+
+    def pending_task_ids(self) -> list[str]:
+        return [p.task_id for p in self.pending]
+
     def compile_count(self) -> int:
         """Total jitted executables (prefill + decode + pool writes); steady
         state across request join/leave churn must not grow this."""
-        fns = list(self._jit_prefill.values()) + list(self._jit_decode.values())
-        if self._jit_write is not None:
-            fns.append(self._jit_write)
+        fns = (list(self._jit_prefill.values()) +
+               list(self._jit_decode.values()) +
+               list(self._jit_write.values()))
         return sum(f._cache_size() if hasattr(f, "_cache_size") else 1
                    for f in fns)
+
+    # ---- page accounting (paged layout) ----
+    def free_page_count(self) -> int:
+        return len(self._free_pages) if self.paged else 0
+
+    def used_page_count(self) -> int:
+        if not self.paged:
+            return 0
+        return (self.total_pages - 1) - len(self._free_pages)
+
+    def page_occupancy(self) -> float:
+        """Fraction of usable (non-trash) pages held by streams."""
+        if not self.paged:
+            return 0.0
+        return self.used_page_count() / max(self.total_pages - 1, 1)
+
+    def _pages_for(self, tokens: int) -> int:
+        return -(-max(tokens, 1) // self.page_size)
+
+    def _imminent_page_need(self) -> int:
+        """Pages the LIVE streams will allocate for their next chunk — the
+        watermark an admission must clear on top of its own need, so letting
+        one more stream in doesn't immediately preempt a running one."""
+        need = 0
+        for i, s in enumerate(self.slots):
+            if s is not None and not s.done:
+                need += max(0, self._pages_for(self._lens[i] + self.chunk)
+                            - self._held[i])
+        return need
+
+    def _admission_need(self, prompt_tokens: int) -> int:
+        plen = self.bucket_for_prompt(min(max(prompt_tokens, 1),
+                                          self.prompt_len))
+        return (self._pages_for(self._adm_s_max(plen))
+                + self._pages_for(self.chunk)
+                + self._imminent_page_need())
+
+    def can_admit(self, prompt_tokens: int = 1) -> bool:
+        """Would an admission of an ``prompt_tokens``-token prompt proceed
+        right now? Dense: a free slot. Paged: a free slot, nothing already
+        deferred ahead of it (FIFO), and free pages covering the prompt's
+        admission bucket PLUS a chunk of decode headroom for this stream AND
+        for every live one — the memory-aware gate ``ServeLoop`` consults
+        before dispatching a prefill. Deliberately conservative by one chunk
+        per live stream: over-admitting converts into preemptions, which
+        redo prefill work and can truncate long streams."""
+        if not self.free_slots():
+            return False
+        if not self.paged:
+            return True
+        if self.pending:
+            return False
+        return len(self._free_pages) >= self._admission_need(prompt_tokens)
+
+    def _take_pages(self, n: int) -> np.ndarray:
+        assert len(self._free_pages) >= n
+        return np.array([self._free_pages.pop() for _ in range(n)], np.int32)
+
+    def _release_slot_pages(self, slot: int):
+        self._free_pages.extend(int(p) for p in
+                                self._ptab[slot, :self._held[slot]])
+        self._ptab[slot] = TRASH_PAGE
+        self._held[slot] = 0
+        self._lens[slot] = 0
+        self._ptab_dirty = True
+
+    def _sync_page_table(self):
+        """Push the host page table to every attention sublayer's device
+        leaf. Values-only: the (num_slots, pages_per_slot) shape is static,
+        so syncing never retraces."""
+        if not self._ptab_dirty:
+            return
+        for sub in self.pool:
+            if isinstance(sub, dict) and "page_table" in sub:
+                nper = sub["page_table"].shape[0]
+                sub["page_table"] = jnp.asarray(
+                    np.broadcast_to(self._ptab[None],
+                                    (nper,) + self._ptab.shape))
+        self._ptab_dirty = False
 
     # ---- jitted planes ----
     @staticmethod
     def _donate(*argnums):
         return argnums if jax.default_backend() != "cpu" else ()
+
+    def _impl(self, rows: int, cap: int) -> str:
+        """LoRA path for a ``rows``-row co-batch. Resolved from the slot
+        bucket (not the live adapter count) so the choice is stable within
+        each compiled (rows, cap) jit key."""
+        return self.fm.resolve_lora_impl(rows, num_adapters=cap)
+
+    def _adm_s_max(self, plen: int) -> int:
+        """Admission-prefill cache length for one prompt bucket: the paged
+        scatter needs a whole number of pages; dense scatters into s_max."""
+        if self.paged:
+            return self._pages_for(plen) * self.page_size
+        return self.s_max
 
     def _prefill_fn(self, cap: int, plen: int):
         """Admission prefill for one prompt-length bucket. The bucket length
@@ -199,8 +368,10 @@ class DecodeEngine:
         every length within the bucket reuses the executable."""
         key = (cap, plen)
         if key not in self._jit_prefill:
-            cfg, impl, bt = self.cfg, self.fm.lora_impl, self.fm.seg_block_t
-            s_max, kvq, sample = self.s_max, self.kv_quant, self._sample
+            cfg, bt = self.cfg, self.fm.seg_block_t
+            impl = self._impl(1, cap)
+            s_max, kvq, sample = self._adm_s_max(plen), self.kv_quant, \
+                self._sample
 
             @jax.jit
             def run(params, tokens, true_len, rng_key, lora_stack,
@@ -221,7 +392,9 @@ class DecodeEngine:
         return self._jit_prefill[key]
 
     def _write_fn(self):
-        if self._jit_write is None:
+        """Dense admission scatter: one dynamic_update_slice per cache leaf
+        along the slot (batch) axis."""
+        if None not in self._jit_write:
             donate = self._donate(0)
 
             def write(pool, cache, slot):
@@ -231,13 +404,52 @@ class DecodeEngine:
                     lambda p, c: jax.lax.dynamic_update_slice_in_dim(
                         p, c.astype(p.dtype), slot, axis=1), pool, cache)
 
-            self._jit_write = jax.jit(write, donate_argnums=donate)
-        return self._jit_write
+            self._jit_write[None] = jax.jit(write, donate_argnums=donate)
+        return self._jit_write[None]
+
+    def _paged_write_fn(self, npages: int):
+        """Paged admission scatter for one prompt bucket (``npages`` pages):
+        the one-row prefill cache reshapes into pages and scatters into the
+        arena at the allocated page ids (traced), the admission scales stamp
+        both the pages and the slot's scale row, and the slot's ``len`` is
+        set to the TRUE prompt length. Page ids, slot and length are traced
+        operands — allocation churn never retraces."""
+        if npages not in self._jit_write:
+            donate = self._donate(0)
+            ps = self.page_size
+
+            def write(pool, cache, slot, page_idx, true_len):
+                out = []
+                for psub, csub in zip(pool, cache):
+                    kq = csub["k"][:, 0]            # (nper, S, kv, hd)
+                    nper, _, kv, hd = kq.shape
+                    kq = kq.reshape(nper, npages, ps, kv, hd)
+                    vq = csub["v"][:, 0].reshape(nper, npages, ps, kv, hd)
+                    ks = csub["k_scale"][:, 0]      # (nper, kv)
+                    vs = csub["v_scale"][:, 0]
+                    d = dict(psub)
+                    d["k"] = psub["k"].at[:, page_idx].set(
+                        kq.astype(psub["k"].dtype))
+                    d["v"] = psub["v"].at[:, page_idx].set(
+                        vq.astype(psub["v"].dtype))
+                    d["k_scale"] = psub["k_scale"].at[:, page_idx].set(
+                        jnp.broadcast_to(ks[:, None], (nper, npages, kv)))
+                    d["v_scale"] = psub["v_scale"].at[:, page_idx].set(
+                        jnp.broadcast_to(vs[:, None], (nper, npages, kv)))
+                    d["slot_k_scale"] = psub["slot_k_scale"].at[:, slot].set(ks)
+                    d["slot_v_scale"] = psub["slot_v_scale"].at[:, slot].set(vs)
+                    d["len"] = psub["len"].at[:, slot].set(true_len)
+                    out.append(d)
+                return out
+
+            self._jit_write[npages] = jax.jit(write, donate_argnums=donate)
+        return self._jit_write[npages]
 
     def _decode_fn(self, cap: int, chunk: int):
         key = (self.num_slots, cap, chunk)
         if key not in self._jit_decode:
-            cfg, impl, bt = self.cfg, self.fm.lora_impl, self.fm.seg_block_t
+            cfg, bt = self.cfg, self.fm.seg_block_t
+            impl = self._impl(self.num_slots, cap)
             donate = self._donate(1)
 
             sample = self._sample
@@ -266,6 +478,9 @@ class DecodeEngine:
 
     # ---- segment metadata (per composition, not per token) ----
     def _segments(self, cap: int):
+        if self._impl(self.num_slots, cap) != "segmented":
+            z = jnp.zeros((1,), jnp.int32)      # gather never reads these
+            return z, z, z
         key = (self._slot_adapters.tobytes(), cap)
         if key != self._seg_key:
             perm, inv, blocks = self.fm.segment_meta(self._slot_adapters, cap, 1)
@@ -275,6 +490,9 @@ class DecodeEngine:
         return self._seg_dev
 
     def _prefill_segments(self, adapter_slot: int, cap: int, plen: int):
+        if self._impl(1, cap) != "segmented":
+            z = jnp.zeros((1,), jnp.int32)
+            return z, z, z
         ids = np.full((plen,), adapter_slot, np.int32)
         perm, inv, blocks = self.fm.segment_meta(ids, cap, 1)
         return jnp.asarray(perm), jnp.asarray(inv), jnp.asarray(blocks)
@@ -291,8 +509,15 @@ class DecodeEngine:
              adapter_id: Optional[str] = None, max_new_tokens: int = 8,
              rid: int = -1, eos_id: Optional[int] = None) -> int:
         """Admit one request: prefill its prompt (LoRA applied, K/V int8-
-        quantized in-graph), scatter it into a free slot, produce the first
-        token. Returns the slot index; raises if the pool is full.
+        quantized in-graph), scatter it into a free slot (paged: into freshly
+        allocated pages), produce the first token. Returns the slot index.
+
+        A full pool behaves per layout: the dense pool raises (its capacity
+        is the static slot count — the caller must drain first); the paged
+        pool **defers** — the request queues FIFO and admits during a later
+        ``step_chunk`` once a slot AND enough free pages exist — returning
+        -1. Deferral, not failure: a burst beyond capacity drains instead of
+        crashing the serving tick.
 
         Admission is variable-length: the prompt is right-padded to the
         smallest prompt-length bucket that holds it (a static jit key —
@@ -302,10 +527,35 @@ class DecodeEngine:
         keep their LAST ``prompt_len`` tokens (causal LM: the suffix
         matters) — that loses context, so it WARNS; the decode budget clamps
         to the pool's ``max_new`` capacity."""
-        free = self.free_slots()
-        if not free:
-            raise RuntimeError("no free decode slots; step_chunk() first")
         prompt = np.asarray(prompt, np.int32).reshape(-1)
+        req = _PendingJoin(task_id=task_id, prompt=prompt,
+                           adapter_id=adapter_id,
+                           max_new_tokens=max_new_tokens, rid=rid,
+                           eos_id=eos_id)
+        if self.paged and not self.can_admit(len(prompt)):
+            # deferral must be able to END: a request whose prompt bucket +
+            # chunk headroom exceeds the whole arena would pend forever
+            # (drain() and the serve loop would spin) — that is a pool
+            # configuration error, not backpressure
+            plen = self.bucket_for_prompt(min(max(len(prompt), 1),
+                                              self.prompt_len))
+            base = self._pages_for(self._adm_s_max(plen)) + \
+                self._pages_for(self.chunk)
+            if base > self.total_pages - 1:
+                raise ValueError(
+                    f"prompt needs {base} pages (bucket {plen} + chunk "
+                    f"headroom) but the arena only has "
+                    f"{self.total_pages - 1} usable pages; raise "
+                    f"total_pages or shrink prompt_buckets/chunk")
+            self.pending.append(req)
+            self.deferrals += 1
+            return -1
+        if not self.free_slots():
+            raise RuntimeError("no free decode slots; step_chunk() first")
+        return self._admit_now(req)
+
+    def _admit_now(self, req: _PendingJoin) -> int:
+        prompt = req.prompt
         if len(prompt) > self.prompt_len:
             warnings.warn(
                 f"prompt of {len(prompt)} tokens exceeds the engine's largest "
@@ -314,6 +564,7 @@ class DecodeEngine:
                 f"prompt_buckets to the workload)", RuntimeWarning,
                 stacklevel=2)
             prompt = prompt[-self.prompt_len:]     # causal LM: suffix matters
+        true_prompt = prompt
         if self.var_len:
             true_len = max(1, len(prompt))
             plen = self.bucket_for_prompt(true_len)
@@ -325,10 +576,10 @@ class DecodeEngine:
             if len(prompt) < plen:
                 prompt = np.concatenate(
                     [np.zeros(plen - len(prompt), np.int32), prompt])
-        max_new_tokens = max(1, min(max_new_tokens, self.max_new))
-        slot = free[0]
+        max_new_tokens = max(1, min(req.max_new_tokens, self.max_new))
+        slot = self.free_slots()[0]
         cap = self.fm.adapters.capacity()
-        aslot = self.fm.adapters.index(adapter_id)
+        aslot = self.fm.adapters.index(req.adapter_id)
         perm, inv, blocks = self._prefill_segments(aslot, cap, plen)
         first, key, cache = self._prefill_fn(cap, plen)(
             self.fm.params, jnp.asarray(prompt[None]),
@@ -336,42 +587,165 @@ class DecodeEngine:
             self.fm.adapters.stacked(), jnp.full((1,), aslot, jnp.int32),
             perm, inv, blocks)
         self._keys = self._keys.at[slot].set(key[0])
-        self.pool = self._write_fn()(self.pool, cache, slot)
+        if self.paged:
+            npages = self._pages_for(self._adm_s_max(plen))
+            pages = self._take_pages(npages)
+            self.pool = self._paged_write_fn(npages)(
+                self.pool, cache, jnp.int32(slot), jnp.asarray(pages),
+                jnp.int32(true_len))
+            self._ptab[slot, :npages] = pages
+            self._held[slot] = npages
+            self._lens[slot] = true_len
+            # trim: bucket padding beyond the true length scattered zero
+            # pages — return them now; decode growth re-allocates on demand
+            keep = self._pages_for(true_len)
+            if keep < npages:
+                self._free_pages.extend(int(p) for p in
+                                        self._ptab[slot, keep:npages])
+                self._ptab[slot, keep:npages] = TRASH_PAGE
+                self._held[slot] = keep
+            self._ptab_dirty = True
+        else:
+            self.pool = self._write_fn()(self.pool, cache, slot)
         self._tokens = self._tokens.at[slot].set(first[0])
         now = time.perf_counter()
         tok0 = int(first[0])
-        eos = self.eos_id if eos_id is None else eos_id
-        self.slots[slot] = DecodeSlot(
-            rid=rid, task_id=task_id, adapter_slot=aslot,
-            max_new=max_new_tokens, eos_id=eos,
-            tokens=[tok0], t_join=now, t_first=now, prompt_tokens=true_len,
-            done=(max_new_tokens == 1 or (eos is not None and tok0 == eos)))
+        eos = self.eos_id if req.eos_id is None else req.eos_id
+        if req.resume is not None:
+            # preempted stream resuming: keep its identity/latency stamps,
+            # append the re-prefill's next token to the existing stream.
+            # s.prompt deliberately stays the ORIGINAL prompt — s.tokens
+            # still holds everything generated, so a SECOND preemption
+            # rebuilds prompt+tokens without duplicating the first resume's
+            # prefix (and re-truncates from the fullest context available)
+            s = req.resume
+            s.tokens.append(tok0)
+            s.done = (len(s.tokens) >= s.max_new or
+                      (s.eos_id is not None and tok0 == s.eos_id))
+            self.slots[slot] = s
+        else:
+            self.slots[slot] = DecodeSlot(
+                rid=req.rid, task_id=req.task_id, adapter_slot=aslot,
+                max_new=max_new_tokens, eos_id=eos,
+                tokens=[tok0], t_join=now, t_first=now,
+                prompt_tokens=true_len, prompt=true_prompt,
+                adapter_id=req.adapter_id,
+                done=(max_new_tokens == 1 or (eos is not None and tok0 == eos)))
         self._slot_adapters[slot] = aslot
         self._seg_key = None                    # composition changed
         return slot
 
     def leave(self, slot: int) -> DecodeSlot:
-        """Retire a slot (finished or cancelled) and free it for admission."""
+        """Retire a slot (finished or cancelled) and free it for admission
+        (paged: its pages return to the free list)."""
         s = self.slots[slot]
         assert s is not None, slot
         self.slots[slot] = None
         self._slot_adapters[slot] = FREE
         self._seg_key = None                    # composition changed
+        if self.paged:
+            self._release_slot_pages(slot)
         # keep the freed slot's cache length bounded while it idles
         for sub in self.pool:
             if isinstance(sub, dict) and "len" in sub:
                 sub["len"] = sub["len"].at[:, slot].set(0)
         return s
 
+    # ---- paged page-pressure handling ----
+    def _preempt(self, slot: int):
+        """Evict a live stream to reclaim its pages: it re-queues at the
+        FRONT of the pending queue with its generated prefix folded into the
+        prompt (re-admission also refreshes its int8 scales). Sampling
+        streams lose PRNG continuity across a preemption; greedy streams
+        resume exactly."""
+        s = self.slots[slot]
+        prompt = np.concatenate([
+            np.asarray(s.prompt if s.prompt is not None else [], np.int32),
+            np.asarray(s.tokens, np.int32)])
+        self.slots[slot] = None
+        self._slot_adapters[slot] = FREE
+        self._seg_key = None
+        self._release_slot_pages(slot)
+        for sub in self.pool:
+            if isinstance(sub, dict) and "len" in sub:
+                sub["len"] = sub["len"].at[:, slot].set(0)
+        self.pending.appendleft(_PendingJoin(
+            task_id=s.task_id, prompt=prompt, adapter_id=s.adapter_id,
+            max_new_tokens=s.max_new, rid=s.rid, eos_id=s.eos_id, resume=s))
+        self.preemptions += 1
+
+    def _ensure_chunk_pages(self):
+        """Top every live slot up to ``len + chunk`` tokens of pages before
+        the chunk dispatches. When the free list runs dry, preempt the
+        youngest live streams (least work redone) until it doesn't; a single
+        stream that cannot fit is a configuration error (pool smaller than
+        one stream's chunk growth)."""
+        while True:
+            live = [i for i, s in enumerate(self.slots)
+                    if s is not None and not s.done]
+            preempted = False
+            for i in live:
+                if self.slots[i] is None:       # preempted by an earlier pass
+                    continue
+                need = self._pages_for(self._lens[i] + self.chunk) \
+                    - self._held[i]
+                if need <= 0:
+                    continue
+                while need > len(self._free_pages):
+                    victims = [j for j in live
+                               if j != i and self.slots[j] is not None
+                               and not self.slots[j].done]
+                    if not victims:
+                        raise RuntimeError(
+                            f"paged pool exhausted: {need} pages needed for "
+                            f"one stream, {len(self._free_pages)} free and "
+                            f"nothing left to preempt (total_pages="
+                            f"{self.total_pages} is too small)")
+                    self._preempt(min(
+                        victims, key=lambda j: len(self.slots[j].tokens)))
+                    preempted = True
+                pages = self._take_pages(need)
+                h = self._held[i]
+                self._ptab[i, h:h + need] = pages
+                self._held[i] = h + need
+                self._ptab_dirty = True
+            if not preempted:
+                return
+
+    def _drain_pending(self):
+        """FIFO-admit deferred joins while slots and pages allow."""
+        while self.pending and self.can_admit_pending():
+            self._admit_now(self.pending.popleft())
+
+    def can_admit_pending(self) -> bool:
+        if not self.pending or not self.free_slots():
+            return False
+        return len(self._free_pages) >= \
+            self._admission_need(len(self.pending[0].prompt))
+
     def step_chunk(self) -> list[DecodeSlot]:
-        """Advance every occupied slot by up to ``chunk`` greedy tokens under
-        one jitted scan; retire and return the slots that finished."""
+        """Advance every occupied slot by up to ``chunk`` tokens under one
+        jitted scan; retire and return the slots that finished. Paged:
+        streams already done retire FIRST (their pages fund deferred
+        admissions and spare a live stream from preemption), then deferred
+        admissions drain into the freed capacity, then live slots top up
+        with pages for the chunk and the page table syncs."""
         t0 = time.perf_counter()
-        finished = [i for i, s in enumerate(self.slots)
-                    if s is not None and s.done]
+        retired = [self.leave(i) for i, s in enumerate(self.slots)
+                   if s is not None and s.done]
+        if self.paged:
+            self._drain_pending()
         live = [i for i, s in enumerate(self.slots)
                 if s is not None and not s.done]
+        if live and self.paged:
+            self._ensure_chunk_pages()
+            # preemption may have evicted members of the live set
+            live = [i for i, s in enumerate(self.slots)
+                    if s is not None and not s.done]
+        finished = []
         if live:
+            if self.paged:
+                self._sync_page_table()
             cap = self.fm.adapters.capacity()
             perm, inv, blocks = self._segments(cap)
             self.pool, self._tokens, self._keys, out = \
@@ -381,6 +755,10 @@ class DecodeEngine:
                     jnp.asarray(self._slot_adapters), perm, inv, blocks)
             out = np.asarray(out)               # one host sync per chunk
             self.steps += self.chunk
+            if self.paged:
+                for i, s in enumerate(self.slots):
+                    if s is not None:
+                        self._lens[i] += self.chunk
             now = time.perf_counter()
             for i in live:
                 s = self.slots[i]
@@ -393,13 +771,14 @@ class DecodeEngine:
                         s.eos_id is not None and s.tokens[-1] == s.eos_id):
                     s.done = True
                     finished.append(i)
-        retired = [self.leave(i) for i in finished]
+        retired += [self.leave(i) for i in finished]
         self.last_chunk_s = time.perf_counter() - t0
         return retired
 
     def drain(self) -> list[DecodeSlot]:
-        """Step until every occupied slot retires."""
+        """Step until every occupied slot retires (and, paged, every deferred
+        admission has been served)."""
         out = []
-        while self.active_count():
+        while self.active_count() or self.pending:
             out += self.step_chunk()
         return out

@@ -9,12 +9,16 @@ The real-execution plane (CPU-scale configs). A PhysicalFM owns:
   * a cache of jitted executables keyed on (batch bucket, adapter slot
     bucket) so TPU-style static shapes never recompile in steady state.
 
-``run_batch`` executes the segmented (SGMV) LoRA serve path by default: the
-adapter-sorted co-batch is flattened token-major, permuted into block-padded
-segments (metadata built ONCE per batch on the host via
-``kernels.segmented_lora.segment_metadata``), and the q/v deltas dispatch
-through the Pallas kernel (ref oracle on CPU). ``lora_impl="gather"`` keeps
-the per-request gather-einsum path (train / dry-run / parity testing).
+``run_batch`` picks the LoRA serve path per co-batch (``lora_impl="auto"``,
+the server default): the measured ``AUTO_LORA_TABLE`` crossover chooses
+between the segmented (SGMV) path — the adapter-sorted co-batch is flattened
+token-major, permuted into block-padded segments (metadata built ONCE per
+batch on the host via ``kernels.segmented_lora.segment_metadata``), and the
+q/v deltas dispatch through the Pallas kernel (ref oracle on CPU) — and the
+per-request gather-einsum path, which wins where block padding fragments
+(e.g. large batches spread over many adapters). Explicit
+``lora_impl="gather"``/``"segmented"`` overrides pin one path
+(train / dry-run / parity testing / benchmarks).
 """
 from __future__ import annotations
 
@@ -32,6 +36,30 @@ from repro.models import lm
 
 BUCKETS = (1, 2, 4, 8, 16, 32)
 SLOT_BUCKETS = (4, 8, 16, 32, 64)
+
+# lora_impl="auto" crossover table, measured per (batch bucket, adapter
+# count) cell from BENCH_serving.json#pooled (CPU backend): the per-cell
+# winner between the gather-einsum path and the segmented SGMV kernel.
+# Neither dominates: segmented amortizes when many tokens share an adapter
+# (e.g. batch 32 / 1 adapter: 8.6ms vs 18.2ms gather) but its block padding
+# loses when a large co-batch fragments across adapters (batch 32 / 4
+# adapters: 16.4ms vs 9.8ms gather). Re-measure and update when the kernel
+# or the backend changes; explicit lora_impl= overrides skip the table.
+NA_BUCKETS = (1, 2, 4, 8, 16)
+AUTO_LORA_TABLE = {
+    (1, 1): "segmented", (1, 2): "gather", (1, 4): "segmented",
+    (1, 8): "gather", (1, 16): "gather",
+    (2, 1): "gather", (2, 2): "segmented", (2, 4): "gather",
+    (2, 8): "segmented", (2, 16): "segmented",
+    (4, 1): "segmented", (4, 2): "segmented", (4, 4): "segmented",
+    (4, 8): "segmented", (4, 16): "segmented",
+    (8, 1): "gather", (8, 2): "gather", (8, 4): "segmented",
+    (8, 8): "gather", (8, 16): "segmented",
+    (16, 1): "segmented", (16, 2): "gather", (16, 4): "gather",
+    (16, 8): "segmented", (16, 16): "segmented",
+    (32, 1): "segmented", (32, 2): "gather", (32, 4): "gather",
+    (32, 8): "gather", (32, 16): "gather",
+}
 # adapter-id sentinel for rows that are padding / free decode slots; beyond
 # any real slot index AND any slot bucket, so both LoRA paths zero it out.
 # Shared with DecodeEngine so pad rows and free slots segment identically.
@@ -154,7 +182,7 @@ class PhysicalFM:
     """One deployed backbone instance."""
 
     def __init__(self, cfg: ModelConfig, *, seed: int = 0, lora_rank: int = 16,
-                 input_len: int = 32, lora_impl: str = "segmented",
+                 input_len: int = 32, lora_impl: str = "auto",
                  seg_block_t: int = 16):
         self.cfg = cfg
         self.input_len = input_len
@@ -185,12 +213,27 @@ class PhysicalFM:
         return sum(f._cache_size() if hasattr(f, "_cache_size") else 1
                    for f in self._jit_cache.values())
 
-    def _features_fn(self, bucket: int, slots: int):
+    def resolve_lora_impl(self, rows: int, num_adapters: Optional[int] = None
+                          ) -> str:
+        """The LoRA execution path for a ``rows``-request co-batch.
+
+        ``lora_impl="auto"`` consults ``AUTO_LORA_TABLE`` at (batch bucket,
+        adapter-count bucket); explicit "gather"/"segmented" pass through.
+        ``num_adapters`` defaults to the store's registered count — callers
+        with a bucketed jit key (the decode engine) pass their slot bucket
+        instead so the resolution can't flip within a compiled key."""
+        if self.lora_impl != "auto":
+            return self.lora_impl
+        na = len(self.adapters) if num_adapters is None else num_adapters
+        nb = next((b for b in NA_BUCKETS if max(1, na) <= b), NA_BUCKETS[-1])
+        return AUTO_LORA_TABLE[(bucket_for(rows), nb)]
+
+    def _features_fn(self, bucket: int, slots: int, impl: str):
         """Shared backbone forward with per-request backbone LoRA deltas,
-        jitted per (batch bucket, adapter slot bucket)."""
-        key = (bucket, slots)
+        jitted per (batch bucket, adapter slot bucket, lora impl)."""
+        key = (bucket, slots, impl)
         if key not in self._jit_cache:
-            cfg, impl, bt = self.cfg, self.lora_impl, self.seg_block_t
+            cfg, bt = self.cfg, self.seg_block_t
 
             @jax.jit
             def run(params, embeds, lora_stack, adapter_idx, perm, inv, blocks):
@@ -252,12 +295,13 @@ class PhysicalFM:
                 [adapter_idx, np.full((pad,), PAD_SENTINEL, np.int32)])
         stack = self.adapters.stacked()
         cap = self.adapters.capacity()
-        if self.lora_impl == "segmented":
+        impl = self.resolve_lora_impl(b)
+        if impl == "segmented":
             perm, inv, blocks = self.segment_meta(
                 np.asarray(adapter_idx), cap, embeds.shape[1])
         else:   # gather path never reads the metadata; pass static dummies
             perm = inv = blocks = np.zeros((1,), np.int32)
-        out = self._features_fn(b, cap)(
+        out = self._features_fn(b, cap, impl)(
             self.params, jnp.asarray(embeds), stack,
             jnp.asarray(adapter_idx, jnp.int32), jnp.asarray(perm),
             jnp.asarray(inv), jnp.asarray(blocks))

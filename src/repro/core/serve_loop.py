@@ -12,9 +12,13 @@ virtual tag —
     for tick N+1 is assembled on the host and dispatched while the device is
     still executing tick N, whose heads/host-sync resolve afterwards;
   * a **prefill admission** (tag = smallest queued generative start tag,
-    available while the decode pool has free slots): arrivals join the
+    available while the decode pool can take it): arrivals join the
     ``DecodeEngine`` mid-flight between chunks, charged their TRUE prompt
-    length in tokens;
+    length in tokens. Admission is **memory-aware** on a paged pool: the
+    loop peeks the would-be-admitted request and only dispatches the prefill
+    when the engine's free-page count covers its prompt bucket plus a chunk
+    of decode headroom (``DecodeEngine.can_admit``), DEFERRING — the request
+    stays queued at its tag, the loop serves other work — otherwise;
   * a **decode chunk** (tag = the most-behind active stream's virtual time):
     every occupied slot advances ``chunk`` tokens; each participating task is
     charged ``chunk × its active slots`` tokens.
@@ -63,6 +67,7 @@ class ServeLoop:
         self.served: list[Request] = []
         self.ticks = collections.Counter()      # work-kind -> tick count
         self._tie_last = "decode"               # alternation state (see tick)
+        self.page_samples: list[float] = []     # paged-pool occupancy / tick
 
     # ---- plumbing ----
     @property
@@ -101,13 +106,27 @@ class ServeLoop:
         if pooled_tag != float("inf"):
             candidates.append((pooled_tag, 0, "pooled"))
         gen_tag = sched.peek_tag(vfms, is_generative)
-        if gen_tag != float("inf") and (eng is None or eng.free_slots()):
-            # ties: admit before pooled/decode — filling slots lets the next
-            # decode chunk amortize over more streams
-            candidates.append((gen_tag, -1, "admit"))
-        if eng is not None and eng.active_count():
-            decode_tag = min(sched.task_vtime(s.task_id)
-                             for s in eng.slots if s is not None)
+        if gen_tag != float("inf"):
+            admit_ok = eng is None
+            if not admit_ok:
+                # memory-aware admission: peek the request this admission
+                # would serve and ask the engine whether a free slot AND (on
+                # a paged pool) enough free pages for its prompt bucket plus
+                # a chunk of decode headroom exist — otherwise DEFER: the
+                # request keeps its tag and the loop serves other work until
+                # retiring streams free pages
+                head = sched.peek_request(vfms, is_generative)
+                n = len(np.asarray(head.payload).reshape(-1)) \
+                    if head is not None and head.payload is not None else 1
+                admit_ok = eng.can_admit(n)
+            if admit_ok:
+                # ties: admit before pooled/decode — filling slots lets the
+                # next decode chunk amortize over more streams
+                candidates.append((gen_tag, -1, "admit"))
+        if eng is not None and (eng.active_count() or eng.pending_count()):
+            tids = [s.task_id for s in eng.slots if s is not None] \
+                + eng.pending_task_ids()
+            decode_tag = min(sched.task_vtime(t) for t in tids)
             if not sched.token_accounting:
                 # no token clock (STFQ/FIFO): the decode tag is meaningless
                 # against real queue tags — force a tie with the best queued
@@ -183,7 +202,13 @@ class ServeLoop:
         # (its requests must not outlive work dispatched after them)
         self._flush()
         eng = self._engine(create=True)
-        free = len(eng.free_slots())
+        # paged pools admit ONE request per tick: tick()'s can_admit gate
+        # only vetted the head request, so popping more would shove the rest
+        # past the page check into the engine's rid-FIFO pending queue —
+        # charged early and served out of tag order. The loop re-ticks and
+        # admission keeps its tie priority, so a burst still lands back to
+        # back, each admission individually vetted.
+        free = 1 if eng.paged else len(eng.free_slots())
         # defer_charge: dispatch advances the stream's virtual time only to
         # its start tag; the ACTUAL work is charged incrementally below and
         # per decode chunk (double-pricing would halve the gen share)
@@ -206,6 +231,8 @@ class ServeLoop:
         active = collections.Counter(
             s.task_id for s in eng.slots if s is not None and not s.done)
         retired = eng.step_chunk()
+        if eng.paged:
+            self.page_samples.append(eng.page_occupancy())
         sched.charge_tokens(
             vfms, {t: n * eng.chunk for t, n in active.items()}, now)
         done_t = time.perf_counter()
@@ -235,12 +262,16 @@ class ServeLoop:
     def warmup(self, *, pooled_task: Optional[str] = None,
                gen_task: Optional[str] = None, pooled_n: int = 4):
         """Compile every executable the loop can dispatch before measuring:
-        a pooled co-batch (plus a single), one admission prefill per
-        prompt-length bucket, the decode chunk, and the pool write. Shared
-        by the benchmarks and examples so the warm set can't drift from the
-        jit-key set. Generative warmup is skipped for FMs the engine cannot
-        serve (no vocab head / enc-dec)."""
+        one pooled co-batch per batch bucket up to ``pooled_n`` (BFQ can
+        form ANY size under load, so every bucket the run could hit must be
+        warm — a size-2 sub-batch mid-measurement used to cost a compile),
+        one admission prefill per prompt-length bucket, the decode chunk,
+        and the pool write. Shared by the benchmarks and examples so the
+        warm set can't drift from the jit-key set. Generative warmup is
+        skipped for FMs the engine cannot serve (no vocab head / enc-dec)."""
         import numpy as np
+
+        from repro.core.physical import BUCKETS
         fm = self.srv.fms[self.fm_id]
         cfg = fm.cfg
         vfms = self._vfms()
@@ -250,12 +281,19 @@ class ServeLoop:
         pooled_task = pooled_task or tids[0]
         gen_task = gen_task or tids[-1]
         rng = np.random.RandomState(0)
-        trace = [Request(pooled_task, 0.0,
-                         payload=rng.randn(fm.input_len,
-                                           cfg.d_model).astype(np.float32))
+
+        def payload():
+            # DISTINCT rows: the executor's head probe defers its verdict on
+            # identical rows, which would leave the head jits cold
+            return rng.randn(fm.input_len, cfg.d_model).astype(np.float32)
+
+        ex = self._executor()
+        for b in (x for x in BUCKETS if x <= max(pooled_n, 1)):
+            reqs = [Request(pooled_task, 0.0, payload=payload())
+                    for _ in range(b)]
+            ex.execute(Batch(reqs, group_sub_batches(reqs, vfms)), vfms)
+        trace = [Request(pooled_task, 0.0, payload=payload())
                  for _ in range(pooled_n)]
-        trace.append(Request(pooled_task, 0.02,
-                             payload=trace[0].payload))     # size-1 bucket
         if cfg.vocab_size > 0 and not cfg.is_representation \
                 and not cfg.is_encoder_decoder:
             eng = self._engine(create=True)
@@ -270,7 +308,8 @@ class ServeLoop:
     def _work_left(self) -> bool:
         eng = self._engine()
         return (self._pending is not None or bool(self._inflight)
-                or (eng is not None and eng.active_count() > 0)
+                or (eng is not None and (eng.active_count() > 0
+                                         or eng.pending_count() > 0))
                 or any(v.queue for v in self._vfms().values()))
 
     def run(self, trace, *, drain: bool = True,
@@ -351,7 +390,10 @@ class ServeLoop:
         out: dict[int, object] = {}
 
         def mine_active():
-            return any(s is not None and s.rid in mine for s in eng.slots)
+            # paged pools may DEFER a join into the engine's pending queue;
+            # those streams are still ours and must be drained to completion
+            return any(s is not None and s.rid in mine for s in eng.slots) \
+                or any(r in mine for r in eng.pending_rids())
 
         while pending or mine_active():
             now = time.perf_counter()

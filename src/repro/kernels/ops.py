@@ -18,6 +18,8 @@ from repro.kernels.decode_attention_int8 import \
     decode_attention_int8 as _decode_int8_pallas
 from repro.kernels.decode_attention_int8 import quantize_kv as _quantize_kv
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.paged_decode_attention import \
+    paged_decode_attention as _paged_decode_pallas
 from repro.kernels.segmented_lora import segmented_lora as _sgmv_pallas
 
 # module-level default, overridable per call
@@ -84,6 +86,44 @@ def decode_attention_int8(q, k_q, v_q, k_scale, v_scale, lengths, *,
                                    window=window, interpret=interpret)
     return ref.decode_attention_int8_ref(q, kh, vh, k_scale, v_scale, lengths,
                                          window=window)
+
+
+def paged_decode_attention(q, k_pages, v_pages, k_scale, v_scale, page_table,
+                           lengths, *, window: Optional[int] = None,
+                           backend: Optional[str] = None,
+                           interpret: bool = False):
+    """Paged int8-KV decode attention, model layout.
+
+    q: (B, H, hd); k_pages/v_pages: (num_pages, ps, KV, hd) int8 arena;
+    k_scale/v_scale: (num_pages, KV) per-page scales; page_table:
+    (B, max_pages) int32; lengths: (B,) -> (B, H, hd). The Pallas path
+    gathers pages via the scalar-prefetched table inside the kernel grid;
+    the CPU oracle gathers with jnp then reuses the f32 decode reference."""
+    b = _resolve(backend)
+    if b == "pallas":
+        kh = k_pages.transpose(0, 2, 1, 3)      # (P, KV, ps, hd) head-major
+        vh = v_pages.transpose(0, 2, 1, 3)
+        return _paged_decode_pallas(q, kh, vh, k_scale, v_scale, page_table,
+                                    lengths, window=window,
+                                    interpret=interpret)
+    # XLA path: gather from the model-layout arena FIRST (the gathered
+    # (B, MP, ps, KV, hd) block is per-request-sized), dequant with the
+    # per-page scales, then transpose only the gathered block into the
+    # head-major layout the f32 decode reference wants — never the whole
+    # arena. This keeps the per-step cost over the dense int8 path to one
+    # gather + one small transpose (~10% at the serving shapes, see
+    # BENCH_serving.json#paged.step_parity).
+    B, MP = page_table.shape
+    _, ps, KV, hd = k_pages.shape
+
+    def gathered(pages, scale):
+        g = pages[page_table].astype(jnp.float32)   # (B, MP, ps, KV, hd)
+        g = g * scale[page_table][:, :, None, :, None]
+        return g.transpose(0, 3, 1, 2, 4).reshape(B, KV, MP * ps, hd)
+
+    return ref.decode_attention_ref(q, gathered(k_pages, k_scale),
+                                    gathered(v_pages, v_scale), lengths,
+                                    window=window)
 
 
 def segmented_lora(x, block_adapter, a_w, b_w, *, block_t: int = 128,

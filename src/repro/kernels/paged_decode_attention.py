@@ -1,0 +1,130 @@
+"""Paged int8-KV flash-decode Pallas kernel (the paged serving pool).
+
+The dense int8 decode kernel streams one contiguous ``(B, KV, S, hd)`` cache
+row per request — which forces the pool to RESERVE ``s_max`` tokens per slot
+whether the stream uses them or not. The paged pool instead keeps one global
+arena of fixed-size pages (``(num_pages, KV, page_size, hd)`` int8, plus a
+per-(page, kv-head) scale pair) and a per-request page table; a stream holds
+exactly the pages its tokens occupy, so colocation is bounded by tokens in
+flight, not by ``num_slots × s_max``.
+
+The kernel gathers K/V **through the page table inside the grid**: the block
+index maps read the scalar-prefetched ``page_table`` (SMEM), so grid step
+``(b, h, j)`` DMAs arena page ``page_table[b, j]`` into VMEM — the gather is
+part of the pipelined HBM→VMEM streaming, never a materialized dense copy.
+Same online-softmax accumulator as ``decode_attention_int8``; dequantization
+stays in-register (per-page scales ride along via the same index map), so HBM
+only ever sees int8.
+
+Page-table entries past a stream's last page must point at SOME valid page
+(callers keep them 0): their blocks are DMA'd but fully masked by the length
+check, exactly like the dense kernel's tail blocks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import COMPILER_PARAMS as _COMPILER_PARAMS
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, ptab_ref, q_ref, k_ref, v_ref, scale_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, window: Optional[int],
+            ps: int):
+    b = pl.program_id(0)
+    js = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(js == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    # token positions this PAGE covers in the stream (page js of request b)
+    pos = js * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)[0]
+    mask = pos < length
+    if window is not None:
+        mask &= pos >= (length - window)
+
+    @pl.when(jnp.any(mask))
+    def _compute():
+        k_s = scale_ref[0, 0, 0]
+        v_s = scale_ref[0, 0, 1]
+        q = q_ref[0, 0].astype(jnp.float32)                 # (G, hd)
+        # in-register dequantization — HBM only ever streams int8 pages
+        k = k_ref[0, 0].astype(jnp.float32) * k_s           # (ps, hd)
+        v = v_ref[0, 0].astype(jnp.float32) * v_s
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        s = jnp.where(mask[None, :], s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(js == ns - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, k_scale, v_scale, page_table,
+                           lengths, *, window: Optional[int] = None,
+                           interpret: bool = False):
+    """q: (B, H, hd) float; k_pages/v_pages: (num_pages, KV, ps, hd) int8;
+    k_scale/v_scale: (num_pages, KV) f32 per-page dequant scales;
+    page_table: (B, max_pages) int32 arena page ids (entries past a stream's
+    length must still be valid indices — keep them 0); lengths: (B,)
+    -> (B, H, hd)."""
+    B, H, hd = q.shape
+    _, KV, ps, _ = k_pages.shape
+    MP = page_table.shape[1]
+    G = H // KV
+    scale = 1.0 / (hd ** 0.5)
+    qg = q.reshape(B, KV, G, hd)
+    scales = jnp.stack([k_scale, v_scale], axis=-1)          # (P, KV, 2)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                               # lengths, page_table
+        grid=(B, KV, MP),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, lens, pt: (b, h, 0, 0)),
+            # the paged gather: block (b, h, j) pulls arena page pt[b, j]
+            pl.BlockSpec((1, 1, ps, hd),
+                         lambda b, h, j, lens, pt: (pt[b, j], h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, hd),
+                         lambda b, h, j, lens, pt: (pt[b, j], h, 0, 0)),
+            pl.BlockSpec((1, 1, 2),
+                         lambda b, h, j, lens, pt: (pt[b, j], h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, j, lens, pt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window, ps=ps),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, page_table, qg, k_pages, v_pages, scales)
+    return out.reshape(B, H, hd)

@@ -75,16 +75,55 @@ def sublayer_spec(cfg: ModelConfig, lay: SubLayer) -> dict:
 
 
 def sublayer_cache_spec(cfg: ModelConfig, lay: SubLayer, batch: int, s_max: int,
-                        enc_len: int = 0, kv_quant: bool = False) -> Optional[dict]:
+                        enc_len: int = 0, kv_quant: bool = False,
+                        paged: bool = False, page_size: int = 16,
+                        num_pages: int = 0) -> Optional[dict]:
     """Decode-time cache carried per sublayer (logical axes included).
 
     ``kv_quant``: store self-attention K/V as int8 with per-(batch, kv-head)
     symmetric scales (persistent serving pools — halves cache traffic; scales
     are written at prefill admission). Cross-attention K/V stay bf16.
+
+    ``paged``: the paged serving pool layout (``core.decode_engine`` with
+    ``paged=True``) — instead of one dense (batch, s_max) region per slot,
+    self-attention K/V live in a global arena of ``num_pages`` fixed-size
+    pages shared by all slots, addressed through a per-slot ``page_table``
+    (int32 arena page ids; entries past a stream's length stay 0, a valid —
+    masked — index). Scales are per (page, kv-head); ``slot_k_scale`` /
+    ``slot_v_scale`` keep each slot's admission-time scales so decode-era
+    appends quantize into the same range and stamp them onto fresh pages.
+    ``s_max`` bounds pages per slot (the page-table width), NOT reserved
+    memory: a stream only ever holds the pages its tokens occupy. int8-only
+    (the arena layout exists to halve streamed bytes; a bf16 arena would
+    just be a slower dense pool).
     """
     kv, hd = cfg.num_kv_heads, cfg.head_dim
     dt = jnp.bfloat16
     kv_dt = jnp.int8 if kv_quant else dt
+    if paged and lay.kind == ATTN:
+        assert kv_quant and num_pages > 0 and not lay.has_cross, \
+            "paged pools are int8 self-attention only"
+        mp = -(-s_max // page_size)                 # page-table width
+        return {
+            "k": ParamSpec((num_pages, page_size, kv, hd),
+                           (None, None, "kv_heads", None),
+                           init="zeros", dtype=kv_dt),
+            "v": ParamSpec((num_pages, page_size, kv, hd),
+                           (None, None, "kv_heads", None),
+                           init="zeros", dtype=kv_dt),
+            "k_scale": ParamSpec((num_pages, kv), (None, "kv_heads"),
+                                 init="zeros", dtype=jnp.float32),
+            "v_scale": ParamSpec((num_pages, kv), (None, "kv_heads"),
+                                 init="zeros", dtype=jnp.float32),
+            "slot_k_scale": ParamSpec((batch, kv), ("batch", "kv_heads"),
+                                      init="zeros", dtype=jnp.float32),
+            "slot_v_scale": ParamSpec((batch, kv), ("batch", "kv_heads"),
+                                      init="zeros", dtype=jnp.float32),
+            "page_table": ParamSpec((batch, mp), ("batch", None),
+                                    init="zeros", dtype=jnp.int32),
+            "len": ParamSpec((batch,), ("batch",), init="zeros",
+                             dtype=jnp.int32),
+        }
     if lay.kind == ATTN:
         spec = {
             "k": ParamSpec((batch, s_max, kv, hd), ("batch", "cache_seq", "kv_heads", None),

@@ -53,23 +53,35 @@ def model_structs(cfg: ModelConfig, dtype=None):
 
 
 def cache_spec(cfg: ModelConfig, batch: int, s_max: int,
-               kv_quant: bool = False) -> list:
+               kv_quant: bool = False, paged: bool = False,
+               page_size: int = 16, num_pages: int = 0) -> list:
     """Stacked per-period decode cache (list over sublayers).
 
     ``kv_quant``: int8 self-attention K/V + per-(batch, kv-head) scales —
-    the persistent serving pool layout (see ``core.decode_engine``)."""
+    the persistent serving pool layout (see ``core.decode_engine``).
+
+    ``paged``: block-paged int8 arena + per-slot page table instead of the
+    dense (batch, s_max) regions — ``num_pages`` fixed-size pages shared by
+    all slots, so pool memory is ``num_pages × page_size`` tokens regardless
+    of ``batch`` (see ``blocks.sublayer_cache_spec``). ``s_max`` only bounds
+    the page-table width (max pages one stream may hold)."""
     plen = blk.period_len(cfg)
     nper = cfg.num_layers // plen
     layout = blk.period_layout(cfg, cross=cfg.is_encoder_decoder)
     enc_len = s_max if cfg.is_encoder_decoder else 0
     return [stack_specs(blk.sublayer_cache_spec(cfg, lay, batch, s_max, enc_len,
-                                                kv_quant=kv_quant), nper)
+                                                kv_quant=kv_quant, paged=paged,
+                                                page_size=page_size,
+                                                num_pages=num_pages), nper)
             for lay in layout]
 
 
-def init_cache(cfg: ModelConfig, batch: int, s_max: int, kv_quant: bool = False):
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, kv_quant: bool = False,
+               paged: bool = False, page_size: int = 16, num_pages: int = 0):
     return init_params(jax.random.PRNGKey(0),
-                       cache_spec(cfg, batch, s_max, kv_quant=kv_quant))
+                       cache_spec(cfg, batch, s_max, kv_quant=kv_quant,
+                                  paged=paged, page_size=page_size,
+                                  num_pages=num_pages))
 
 
 # ---------------- stack forward ----------------
@@ -242,7 +254,14 @@ def prefill(params, cfg: ModelConfig, *, tokens=None, embeds=None, enc_embeds=No
     pass applies the same per-request adapters the decode steps will.
     ``seq_lens``: (B,) true prompt lengths for right-padded variable-length
     admission — pads are masked from attention and the cache, and the "last"
-    logits come from each row's final REAL token."""
+    logits come from each row's final REAL token.
+
+    Paged pools (``init_cache(paged=True)``) admit through THIS same dense
+    prefill on a page-aligned bucket-sized cache (one whole page multiple);
+    the engine then scatters the filled cache into freshly allocated arena
+    pages and stamps the admission scales per page
+    (``DecodeEngine._paged_write_fn``) — ``decode_step`` takes the paged
+    branch automatically when the cache carries a ``page_table``."""
     x, cache, _ = forward(params, cfg, tokens=tokens, embeds=embeds,
                           enc_embeds=enc_embeds, pos3=pos3, cache=cache,
                           mode="full", shard=shard, lora=lora,

@@ -49,6 +49,36 @@ def token_trace(task_id: str, rps: float, horizon: float, *, prompt_len: int,
     return out
 
 
+def long_tail_token_trace(task_id: str, rps: float, horizon: float, *,
+                          prompt_len: int, vocab: int, new_lo: int = 8,
+                          new_hi: int = 512, seed: int = 0,
+                          slo_s: float | None = None, start: float = 0.0,
+                          min_prompt_len: int | None = None) -> list[Request]:
+    """Generative trace with a LONG-TAIL decode-length mix: ``max_new_tokens``
+    sampled log-uniformly in [new_lo, new_hi] (default 8-512), so most
+    streams are short while a heavy tail runs 10-60x longer. This is the
+    workload shape that makes dense per-slot KV reservations waste memory —
+    and therefore what exercises page recycling and memory-aware admission
+    on the paged pool: short streams retire and return pages while the tail
+    keeps decoding. Prompt lengths are uniform in
+    [min_prompt_len or prompt_len, prompt_len] like ``token_trace``."""
+    rng = np.random.RandomState(seed)
+    lo = prompt_len if min_prompt_len is None else max(1, min_prompt_len)
+    t, out = start, []
+    while True:
+        t += rng.exponential(1.0 / rps)
+        if t >= start + horizon:
+            break
+        new = int(round(np.exp(rng.uniform(np.log(new_lo),
+                                           np.log(new_hi + 1)))))
+        new = max(new_lo, min(new, new_hi))
+        plen = int(rng.randint(lo, prompt_len + 1))
+        out.append(Request(
+            task_id, t, payload=rng.randint(0, vocab, plen).astype("int32"),
+            tokens=float(plen + new), max_new_tokens=new, slo=SLO(slo_s)))
+    return out
+
+
 def feature_trace(task_id: str, rps: float, horizon: float, *, input_len: int,
                   d_model: int, seed: int = 0, slo_s: float | None = None,
                   start: float = 0.0) -> list[Request]:

@@ -53,13 +53,39 @@ def decode_stats(requests) -> dict:
     }
 
 
-def mixed_stats(requests) -> dict:
+def page_gauges(engine) -> dict:
+    """Free/used KV-page gauges of a paged decode pool (zeros for dense) —
+    the numbers an operator watches to size ``total_pages``: free and used
+    counts, deferred/preempted admissions, and current occupancy."""
+    return {
+        "paged": bool(getattr(engine, "paged", False)),
+        "free_pages": engine.free_page_count(),
+        "used_pages": engine.used_page_count(),
+        "total_pages": getattr(engine, "total_pages", 0),
+        "occupancy": round(engine.page_occupancy(), 4),
+        "deferrals": getattr(engine, "deferrals", 0),
+        "preemptions": getattr(engine, "preemptions", 0),
+    }
+
+
+def mixed_stats(requests, page_samples=None) -> dict:
     """Split per-plane report for mixed pooled + generative serving (the
     event-loop plane): request-level latency for the pooled side, token-level
-    TTFT/TPOT/throughput for the generative side."""
+    TTFT/TPOT/throughput for the generative side. ``page_samples`` (the
+    per-decode-tick KV-page occupancy fractions a ``ServeLoop`` collects on a
+    paged pool) adds an occupancy p50/p95/max section — how full the arena
+    actually ran, the signal for sizing ``total_pages``."""
     pooled = [r for r in requests if r.max_new_tokens <= 0]
     gen = [r for r in requests if r.max_new_tokens > 0]
-    return {"pooled": latency_stats(pooled), "decode": decode_stats(gen)}
+    out = {"pooled": latency_stats(pooled), "decode": decode_stats(gen)}
+    if page_samples:
+        out["kv_pages"] = {
+            "samples": len(page_samples),
+            "occupancy_p50": round(percentile(page_samples, 50), 4),
+            "occupancy_p95": round(percentile(page_samples, 95), 4),
+            "occupancy_max": round(float(np.max(page_samples)), 4),
+        }
+    return out
 
 
 def jain_fairness(shares: dict[str, float], weights: dict[str, float]) -> float:

@@ -1,0 +1,343 @@
+"""Paged int8 KV pool: kernel parity (jnp oracle + Pallas interpret mode),
+paged-vs-dense decode parity over join/leave churn with ragged prompts, page
+recycling after retire, zero recompiles across churn + page allocation,
+join-burst deferral (regression: beyond-capacity admission queues and drains
+instead of crashing the tick), preemption under page pressure, and
+memory-aware loop admission."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.decode_engine import DecodeEngine
+from repro.core.physical import PhysicalFM
+from repro.kernels import ops, ref
+from repro.kernels.paged_decode_attention import paged_decode_attention
+
+BT = 8
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduced(get_config("stablelm-1.6b"))
+
+
+def _randomized_adapter(fm, i):
+    tree = fm.adapters._mod.init_single_adapter(
+        jax.random.PRNGKey(i), fm.cfg, fm.adapters.rank)
+    leaves, tdef = jax.tree.flatten(tree)
+    ks = jax.random.split(jax.random.PRNGKey(100 + i), len(leaves))
+    return jax.tree.unflatten(tdef, [
+        jax.random.normal(k, l.shape, l.dtype) * 0.05
+        for k, l in zip(ks, leaves)])
+
+
+def _fm(cfg, impl="segmented", na=3):
+    fm = PhysicalFM(cfg, seed=0, input_len=8, lora_rank=4, lora_impl=impl,
+                    seg_block_t=BT)
+    for i in range(na):
+        fm.adapters.add(f"lora{i}", _randomized_adapter(fm, i))
+    return fm
+
+
+# ---------------- kernel parity ----------------
+
+def _paged_case(seed=0, B=3, H=8, KV=2, hd=16, ps=8, P=11, MP=4,
+                lens=(9, 25, 1)):
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(B, H, hd).astype(np.float32))
+    kp = jnp.asarray(rng.randint(-127, 128, (P, KV, ps, hd)).astype(np.int8))
+    vp = jnp.asarray(rng.randint(-127, 128, (P, KV, ps, hd)).astype(np.int8))
+    ks = jnp.asarray(rng.rand(P, KV).astype(np.float32) * 0.05 + 1e-3)
+    vs = jnp.asarray(rng.rand(P, KV).astype(np.float32) * 0.05 + 1e-3)
+    pt = np.zeros((B, MP), np.int32)           # disjoint pages per stream
+    free = list(range(1, P))
+    rng.shuffle(free)
+    for b in range(B):
+        for j in range(-(-int(lens[b]) // ps)):
+            pt[b, j] = free.pop()
+    return q, kp, vp, ks, vs, jnp.asarray(pt), jnp.asarray(
+        np.asarray(lens, np.int32))
+
+
+@pytest.mark.parametrize("window", [None, 6])
+def test_paged_kernel_interpret_matches_ref(window):
+    """Pallas paged decode (interpret mode on CPU) vs the jnp gather oracle."""
+    q, kp, vp, ks, vs, pt, lens = _paged_case()
+    want = ref.paged_decode_attention_ref(q, kp, vp, ks, vs, pt, lens,
+                                          window=window)
+    got = paged_decode_attention(q, kp, vp, ks, vs, pt, lens, window=window,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_ref_matches_dense_int8_ref():
+    """Gathering pages into a dense layout and running the dense int8 oracle
+    must reproduce the paged oracle exactly (uniform per-stream scales, the
+    layout a fresh admission writes)."""
+    B, KV, ps, MP, hd = 2, 2, 8, 3, 16
+    P = 1 + B * MP
+    rng = np.random.RandomState(1)
+    q = jnp.asarray(rng.randn(B, 6, hd).astype(np.float32))
+    kp = rng.randint(-127, 128, (P, KV, ps, hd)).astype(np.int8)
+    vp = rng.randint(-127, 128, (P, KV, ps, hd)).astype(np.int8)
+    row_ks = rng.rand(B, KV).astype(np.float32) * 0.05 + 1e-3
+    row_vs = rng.rand(B, KV).astype(np.float32) * 0.05 + 1e-3
+    pt = 1 + np.arange(B * MP, dtype=np.int32).reshape(B, MP)
+    ks = np.zeros((P, KV), np.float32)
+    vs = np.zeros((P, KV), np.float32)
+    for b in range(B):
+        ks[pt[b]] = row_ks[b]
+        vs[pt[b]] = row_vs[b]
+    lens = np.array([19, 5], np.int32)
+    got = ref.paged_decode_attention_ref(
+        jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(ks),
+        jnp.asarray(vs), jnp.asarray(pt), jnp.asarray(lens))
+    k_dense = kp[pt].transpose(0, 2, 1, 3, 4).reshape(B, KV, MP * ps, hd)
+    v_dense = vp[pt].transpose(0, 2, 1, 3, 4).reshape(B, KV, MP * ps, hd)
+    want = ref.decode_attention_int8_ref(
+        jnp.asarray(q), jnp.asarray(k_dense), jnp.asarray(v_dense),
+        jnp.asarray(row_ks), jnp.asarray(row_vs), jnp.asarray(lens))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_ops_paged_dispatch_model_layout():
+    """The ops wrapper adapts the model-layout arena (P, ps, KV, hd)."""
+    q, kp, vp, ks, vs, pt, lens = _paged_case(seed=2)
+    got = ops.paged_decode_attention(q, kp.transpose(0, 2, 1, 3),
+                                     vp.transpose(0, 2, 1, 3), ks, vs, pt,
+                                     lens)
+    want = ref.paged_decode_attention_ref(q, kp, vp, ks, vs, pt, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
+
+
+# ---------------- paged engine vs dense engine ----------------
+
+def _churn(eng, cfg, prompts, names):
+    """Join/leave churn with ragged prompt lengths; returns rid->tokens."""
+    out = {}
+    i = 0
+    for i in range(4):
+        eng.join(f"t{i}", prompts[i], adapter_id=names[i % 4],
+                 max_new_tokens=3 + i, rid=i)
+    joined = 4
+    while eng.active_count() or eng.pending_count():
+        for s in eng.step_chunk():
+            out[s.rid] = s.tokens
+        while joined < len(prompts) and eng.free_slots() and \
+                eng.can_admit(len(prompts[joined])):
+            eng.join(f"t{joined}", prompts[joined],
+                     adapter_id=names[joined % 4], max_new_tokens=4,
+                     rid=joined)
+            joined += 1
+    return out
+
+
+def test_paged_matches_dense_over_churn_ragged_prompts(cfg):
+    """The paged pool must produce the SAME greedy token streams as the dense
+    int8 pool across join/leave churn with ragged prompt lengths — paging is
+    a memory layout, not a numeric change."""
+    rng = np.random.RandomState(5)
+    lens = [8, 3, 6, 1, 7, 4, 8, 2]
+    prompts = [rng.randint(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lens]
+    names = ["lora0", "lora1", "lora2", None]
+    outs = {}
+    for mode in ("dense", "paged"):
+        fm = _fm(cfg)
+        kw = dict(num_slots=4, prompt_len=8, max_new=8, chunk=2)
+        if mode == "paged":
+            kw.update(paged=True, page_size=4)
+        outs[mode] = _churn(DecodeEngine(fm, **kw), cfg, prompts, names)
+    assert outs["paged"] == outs["dense"]
+    assert len(outs["paged"]) == len(prompts)
+
+
+def test_page_recycling_no_stale_leak(cfg):
+    """A retired stream's pages go back to the free list; a new stream that
+    recycles them must decode exactly like one admitted into a FRESH pool —
+    no stale K/V from the previous owner can leak through the masks."""
+    fm = _fm(cfg, na=1)
+    rng = np.random.RandomState(9)
+    p_old = rng.randint(0, cfg.vocab_size, 8).astype(np.int32)
+    p_new = rng.randint(0, cfg.vocab_size, 5).astype(np.int32)
+
+    def serve(eng, p, steps):
+        eng.join("t", p, adapter_id="lora0", max_new_tokens=steps, rid=0)
+        (d,) = eng.drain()
+        return d.tokens
+
+    recycled = DecodeEngine(fm, num_slots=2, prompt_len=8, max_new=8,
+                            chunk=2, paged=True, page_size=4, total_pages=7)
+    first = serve(recycled, p_old, 8)           # fills most of the arena
+    assert recycled.free_page_count() == 6      # all pages recycled
+    got = serve(recycled, p_new, 6)             # reuses the same pages
+    fresh = DecodeEngine(fm, num_slots=2, prompt_len=8, max_new=8,
+                         chunk=2, paged=True, page_size=4, total_pages=7)
+    assert got == serve(fresh, p_new, 6)
+    assert len(first) == 8 and len(got) == 6
+
+
+def test_paged_zero_recompiles_across_churn_and_page_alloc(cfg):
+    """After one warm join per prompt bucket, churn — including decode page
+    allocation, recycling, deferral-drain — adds ZERO executables: page ids,
+    tables and lengths are traced operands, never jit keys."""
+    fm = _fm(cfg)
+    eng = DecodeEngine(fm, num_slots=4, prompt_len=16, max_new=6, chunk=2,
+                       paged=True, page_size=4, prompt_buckets=(4, 16))
+    rng = np.random.RandomState(3)
+    for plen in (4, 16):                        # warm each bucket once
+        eng.join("w", rng.randint(0, cfg.vocab_size, plen),
+                 adapter_id="lora0", max_new_tokens=2, rid=-1)
+    eng.drain()
+    compiles = eng.compile_count()
+    names = ["lora0", "lora1", None, "lora2"]
+    for i, plen in enumerate((1, 3, 7, 9, 13, 16, 2, 11)):
+        eng.join(f"t{i}", rng.randint(0, cfg.vocab_size, plen),
+                 adapter_id=names[i % 4], max_new_tokens=2 + i % 3, rid=i)
+        if not eng.free_slots():
+            eng.step_chunk()
+    eng.drain()
+    assert eng.compile_count() == compiles
+    assert eng.free_page_count() == eng.total_pages - 1
+
+
+# ---------------- deferral + preemption ----------------
+
+def test_join_burst_defers_and_drains(cfg):
+    """Regression for the mid-loop crash: a burst of admissions beyond pool
+    capacity must QUEUE (join returns -1) and drain across chunks — every
+    stream completes, nothing raises."""
+    fm = _fm(cfg, na=1)
+    eng = DecodeEngine(fm, num_slots=2, prompt_len=8, max_new=8, chunk=2,
+                       paged=True, page_size=4, total_pages=9)
+    rng = np.random.RandomState(1)
+    slots = [eng.join(f"t{i}", rng.randint(0, cfg.vocab_size, 4 + i % 5),
+                      adapter_id="lora0", max_new_tokens=6, rid=i)
+             for i in range(6)]
+    assert slots.count(-1) == 4 and eng.pending_count() == 4
+    assert eng.deferrals == 4
+    done = eng.drain()
+    assert sorted(d.rid for d in done) == list(range(6))
+    assert all(len(d.tokens) == 6 for d in done)
+    assert eng.free_page_count() == 8           # everything returned
+
+
+def test_dense_join_still_raises_when_full(cfg):
+    """The dense layout keeps its historical contract: static slot capacity,
+    the caller drains first."""
+    fm = _fm(cfg, na=1)
+    eng = DecodeEngine(fm, num_slots=1, prompt_len=8, max_new=4, chunk=2)
+    p = np.arange(8) % cfg.vocab_size
+    eng.join("a", p, adapter_id="lora0", max_new_tokens=4, rid=0)
+    with pytest.raises(RuntimeError, match="no free decode slots"):
+        eng.join("b", p, adapter_id="lora0", max_new_tokens=4, rid=1)
+
+
+def test_page_pressure_preempts_and_completes(cfg):
+    """Two long streams on an arena that holds only one to completion: the
+    younger stream is preempted (pages reclaimed, re-queued with its
+    generated prefix) and BOTH still finish with full budgets. A resumed
+    stream must keep its ORIGINAL prompt on the slot — folding the combined
+    resume prompt back in would duplicate the generated prefix on a second
+    preemption."""
+    fm = _fm(cfg, na=1)
+    eng = DecodeEngine(fm, num_slots=2, prompt_len=8, max_new=24, chunk=4,
+                       paged=True, page_size=4, total_pages=10)
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(0, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(2)]
+    with warnings.catch_warnings():             # resume prompt > bucket warns
+        warnings.simplefilter("ignore", RuntimeWarning)
+        for i in range(2):
+            eng.join(f"t{i}", prompts[i], adapter_id="lora0",
+                     max_new_tokens=24, rid=i)
+        done = eng.drain()
+    assert sorted(d.rid for d in done) == [0, 1]
+    assert all(len(d.tokens) == 24 for d in done)
+    assert eng.preemptions > 0
+    assert eng.free_page_count() == 9
+    for d in done:                              # original prompt, always
+        np.testing.assert_array_equal(d.prompt, prompts[d.rid])
+
+
+def test_join_raises_when_prompt_can_never_fit(cfg):
+    """A prompt whose bucket + chunk headroom exceeds the whole arena is a
+    configuration error: deferring it would spin drain()/the serve loop
+    forever, so join must raise immediately."""
+    fm = _fm(cfg, na=1)
+    eng = DecodeEngine(fm, num_slots=2, prompt_len=16, max_new=8, chunk=4,
+                       paged=True, page_size=4, total_pages=3)  # 2 usable
+    with pytest.raises(ValueError, match="usable pages"):
+        eng.join("t", np.arange(16, dtype=np.int32) % cfg.vocab_size,
+                 adapter_id="lora0", max_new_tokens=4, rid=0)
+
+
+# ---------------- memory-aware loop admission ----------------
+
+def _loop_server(cfg, *, engine_kwargs):
+    from repro.core.server import FMplexServer
+    from repro.core.vfm import TaskExtensions
+    fm = PhysicalFM(cfg, seed=0, input_len=8, lora_rank=4,
+                    lora_impl="segmented", seg_block_t=BT)
+    fm.calibrate(sizes=(1, 2, 4))
+    srv = FMplexServer("s0")
+    srv.deploy_fm("fm0", fm, scheduler="bfq")
+    fm.adapters.new("lora0", seed=0)
+    srv.bind_task("gen", "fm0", weight=1.0,
+                  extensions=TaskExtensions(adapter_id="lora0"))
+    srv.decode_engine("fm0", **engine_kwargs)
+    return srv, srv.serve_loop("fm0")
+
+
+def test_loop_memory_aware_admission_defers_not_raises(cfg):
+    """A generative burst against a tiny paged arena: the loop must DEFER
+    admissions while pages are short (requests stay queued, ticks keep
+    serving) and still complete every stream; occupancy samples land in
+    ``page_samples`` for the kv-page gauges."""
+    from repro.core.request import Request
+    srv, loop = _loop_server(cfg, engine_kwargs=dict(
+        num_slots=2, prompt_len=8, max_new=8, chunk=2,
+        paged=True, page_size=4, total_pages=9))
+    rng = np.random.RandomState(0)
+    trace = [Request("gen", 0.0,
+                     payload=rng.randint(0, cfg.vocab_size,
+                                         4 + i % 5).astype(np.int32),
+                     tokens=float(8 + 6), max_new_tokens=6)
+             for i in range(6)]
+    served = loop.run(trace)
+    assert len(served) == 6
+    assert all(r.finish_time is not None and len(r.result) == 6
+               for r in served)
+    eng = srv.engines["fm0"]
+    assert eng.free_page_count() == 8
+    # loop admissions are individually vetted by tick()'s can_admit gate
+    # (one per admit tick), so none should spill into the engine's own
+    # deferral queue — requests wait AT THEIR TAG in the scheduler instead
+    assert eng.deferrals == 0
+    assert loop.page_samples and max(loop.page_samples) > 0
+
+    from repro.serving.metrics import mixed_stats, page_gauges
+    stats = mixed_stats(served, page_samples=loop.page_samples)
+    assert stats["kv_pages"]["occupancy_p95"] <= 1.0
+    assert stats["decode"]["n"] == 6
+    g = page_gauges(eng)
+    assert g["paged"] and g["used_pages"] == 0 and g["free_pages"] == 8
+
+
+def test_long_tail_trace_shape():
+    from repro.serving.loadgen import long_tail_token_trace
+    tr = long_tail_token_trace("t", 50.0, 4.0, prompt_len=16, vocab=100,
+                               new_lo=8, new_hi=512, seed=0,
+                               min_prompt_len=2)
+    assert len(tr) > 50
+    news = np.array([r.max_new_tokens for r in tr])
+    assert news.min() >= 8 and news.max() <= 512
+    assert np.median(news) < news.mean()        # long tail skews the mean
+    assert all(2 <= len(r.payload) <= 16 for r in tr)

@@ -113,8 +113,7 @@ def fm_pair():
     return pair
 
 
-def test_run_batch_segmented_is_default_and_matches_gather(fm_pair):
-    assert PhysicalFM.__init__.__kwdefaults__["lora_impl"] == "segmented"
+def test_run_batch_segmented_matches_gather(fm_pair):
     seg, gat = fm_pair["segmented"], fm_pair["gather"]
     cap = seg.adapters.capacity()
     rng = np.random.RandomState(0)
@@ -126,6 +125,33 @@ def test_run_batch_segmented_is_default_and_matches_gather(fm_pair):
     # the adapters actually do something
     f_base = gat.run_batch(x, np.full(6, cap, np.int32))
     assert np.abs(f_gat - f_base).max() > 1e-3
+
+
+def test_auto_impl_is_default_and_consults_crossover_table(fm_pair):
+    """``lora_impl="auto"`` (the server default) resolves gather vs segmented
+    per (batch bucket, adapter count) from the measured crossover table;
+    explicit overrides pass through untouched."""
+    from repro.core.physical import AUTO_LORA_TABLE
+    assert PhysicalFM.__init__.__kwdefaults__["lora_impl"] == "auto"
+    seg = fm_pair["segmented"]
+    assert seg.resolve_lora_impl(32) == seg.lora_impl == "segmented"
+    auto = PhysicalFM(seg.cfg, seed=0, input_len=12, lora_rank=4,
+                      seg_block_t=BT)
+    for i in range(3):
+        auto.adapters.add(f"lora{i}", seg.adapters._trees[i])
+    # the cell the bench called out: batch 32 spread over 4 adapters loses
+    # to gather (block padding fragments); batch 32 on one adapter wins big
+    assert auto.resolve_lora_impl(32, num_adapters=4) == "gather"
+    assert auto.resolve_lora_impl(32, num_adapters=1) == "segmented"
+    assert auto.resolve_lora_impl(6, num_adapters=3) == \
+        AUTO_LORA_TABLE[(8, 4)]                  # buckets round up
+    # auto serving matches the pinned paths (same numerics either way)
+    rng = np.random.RandomState(0)
+    x = rng.randn(5, 12, seg.cfg.d_model).astype(np.float32)
+    aidx = np.array([0, 2, auto.adapters.capacity(), 1, 0], np.int32)
+    np.testing.assert_allclose(auto.run_batch(x, aidx),
+                               fm_pair["gather"].run_batch(x, aidx),
+                               atol=1e-4)
 
 
 def test_zero_recompiles_within_slot_capacity(fm_pair):
