@@ -165,10 +165,13 @@ def run_all(out_path: str = None, smoke: bool = False):
     fresh_sched()
     loop.ticks.clear()         # report the MIXED run's interleaving only
     loop.page_samples.clear()  # occupancy of the measured run only
+    loop.shared_samples.clear()
     mixed = run_loop(loop, pooled + gen, max_wall)
-    ms = mixed_stats(mixed, page_samples=loop.page_samples)
+    ms = mixed_stats(mixed, page_samples=loop.page_samples,
+                     shared_samples=loop.shared_samples)
     loop_pooled, loop_decode = ms["pooled"], ms["decode"]
     loop_kv_pages = ms.get("kv_pages", {})
+    loop_kv_sharing = ms.get("kv_sharing", {})
     loop_gen_lat = latency_stats([r for r in mixed if r.max_new_tokens > 0])
     loop_recompiles = eng.compile_count() + fm.compile_count() - compiles
 
@@ -193,6 +196,7 @@ def run_all(out_path: str = None, smoke: bool = False):
         "mixed_loop": {"pooled": loop_pooled, "decode": loop_decode,
                        "decode_latency": loop_gen_lat,
                        "kv_pages": loop_kv_pages,
+                       "kv_sharing": loop_kv_sharing,
                        "ticks": dict(loop.ticks)},
         "engine_pages": page_gauges(eng),
         "mixed_drain": {"pooled": drain_pooled, "decode": drain_decode,
@@ -207,7 +211,8 @@ def run_all(out_path: str = None, smoke: bool = False):
           f"drain={drain_pooled.get('p50_ms', float('nan')):.1f}ms "
           f"(drain/loop x{improvement:.2f})")
     print(f"decode (loop): {loop_decode}")
-    print(f"kv pages (loop): {loop_kv_pages} | {page_gauges(eng)}")
+    print(f"kv pages (loop): {loop_kv_pages} sharing={loop_kv_sharing} "
+          f"| {page_gauges(eng)}")
     print(f"steady-state recompiles across mixed churn: {loop_recompiles}")
     assert loop_recompiles == 0, "mixed churn must not recompile"
     write_serving_section("mixed", out, out_path)

@@ -18,6 +18,14 @@ Two claims, measured on the same reduced decoder backbone:
 Plus the steady-state invariant: churn with page allocation/recycling and
 deferred admissions adds ZERO jitted executables.
 
+And the **page-size sweep** (8/16/32/64 at the same fixed token budget):
+small pages cut last-page fragmentation (waste ~ page_size/2 per stream) but
+widen the page table and shrink per-DMA transfers; the sweep records peak
+concurrency, measured fragmentation (held-page slack over held capacity) and
+decode step time per size, so the fragmentation-vs-table-width knee is a
+number, not folklore. CPU-measured; re-run on TPU before trusting the knee
+there (the DMA economics differ — see ROADMAP).
+
 Results land under the "paged" section of ``BENCH_serving.json`` with the
 same warmup / median-of-repeats / backend + jax-version stamping as the
 other serving sections.
@@ -47,6 +55,7 @@ PARITY_STEPS = 64
 CHUNK = 8
 WARMUP = 1
 REPEATS = 5
+PAGE_SIZE_SWEEP = (8, 16, 32, 64)
 
 
 def _fm(cfg, num_adapters: int = 4) -> PhysicalFM:
@@ -82,6 +91,7 @@ def drive_capacity(eng: DecodeEngine, work, names) -> dict:
     many streams actually run concurrently."""
     t0 = time.perf_counter()
     done = []
+    peak_frag = 0.0
     for i, (prompt, new) in enumerate(work):
         if not eng.paged:
             while not eng.free_slots():
@@ -94,22 +104,31 @@ def drive_capacity(eng: DecodeEngine, work, names) -> dict:
         done += eng.step_chunk()
         peak = max(peak, eng.active_count())
         peak_pages = max(peak_pages, eng.used_page_count())
+        if eng.paged:
+            held = int(eng._held.sum())
+            if held:
+                # last-page slack: tokens of held capacity not backing a
+                # real token — THE fragmentation cost of a page size
+                frag = 1.0 - float(eng._lens.sum()) / (held * eng.page_size)
+                peak_frag = max(peak_frag, frag)
     wall = time.perf_counter() - t0
     toks = sum(len(d.tokens) for d in done)
     assert len(done) == len(work), (len(done), len(work))
     return {"streams_served": len(done), "peak_concurrent_streams": peak,
-            "peak_used_pages": peak_pages, "tokens_out": toks,
+            "peak_used_pages": peak_pages,
+            "peak_fragmentation": round(peak_frag, 4),
+            "tokens_out": toks,
             "tokens_per_s": round(toks / wall, 1),
             "wall_s": round(wall, 3)}
 
 
 def parity_step_time(fm, cfg, *, paged: bool, steps: int, repeats: int,
-                     seed: int = 7) -> list[float]:
+                     seed: int = 7, page_size: int = None) -> list[float]:
     """Median-of-chunks decode ms/step at FULL occupancy (all slots live)."""
     kw = dict(num_slots=PARITY_SLOTS, prompt_len=PROMPT_LEN, max_new=steps,
               chunk=CHUNK)
-    if paged:
-        kw.update(paged=True, page_size=PAGE_SIZE)   # dense-equivalent pages
+    if paged:                                        # dense-equivalent pages
+        kw.update(paged=True, page_size=page_size or PAGE_SIZE)
     eng = DecodeEngine(fm, **kw)
     rng = np.random.RandomState(seed)
     prompts = rng.randint(0, cfg.vocab_size,
@@ -133,10 +152,42 @@ def parity_step_time(fm, cfg, *, paged: bool, steps: int, repeats: int,
     return per_rep
 
 
+def page_size_sweep(fm, cfg, names, sizes, *, repeats: int) -> dict:
+    """Same fixed KV token budget, page size swept over ``sizes``: capacity
+    on the mixed-length workload (with the measured peak last-page
+    fragmentation) plus steady decode ms/step at fixed occupancy — the two
+    sides of the page-size trade (waste vs table width / transfer size)."""
+    budget_tokens = DENSE_SLOTS * (PROMPT_LEN + MAX_NEW + 1)
+    work = mixed_length_workload(cfg, N_STREAMS, MAX_NEW)
+    out = {}
+    for ps in sizes:
+        eng = DecodeEngine(fm, num_slots=PAGED_SLOTS, prompt_len=PROMPT_LEN,
+                           max_new=MAX_NEW, chunk=CHUNK, paged=True,
+                           page_size=ps,
+                           total_pages=1 + budget_tokens // ps)
+        cap = drive_capacity(eng, work, names)
+        ms = statistics.median(parity_step_time(
+            fm, cfg, paged=True, steps=PARITY_STEPS, repeats=repeats,
+            page_size=ps))
+        out[str(ps)] = {
+            "total_pages": 1 + budget_tokens // ps,
+            "table_width": eng.pages_per_slot,
+            "peak_concurrent_streams": cap["peak_concurrent_streams"],
+            "peak_fragmentation": cap["peak_fragmentation"],
+            "tokens_per_s": cap["tokens_per_s"],
+            "decode_ms_per_step": round(ms, 3),
+        }
+        print(f"page_size={ps}: peak {cap['peak_concurrent_streams']} "
+              f"streams, frag {cap['peak_fragmentation']:.3f}, "
+              f"table width {eng.pages_per_slot}, {ms:.2f}ms/step")
+    return out
+
+
 def run_all(out_path: str = None, smoke: bool = False):
-    global MAX_NEW, N_STREAMS, PARITY_STEPS, REPEATS
+    global MAX_NEW, N_STREAMS, PARITY_STEPS, REPEATS, PAGE_SIZE_SWEEP
     if smoke:
         MAX_NEW, N_STREAMS, PARITY_STEPS, REPEATS = 32, 12, 16, 1
+        PAGE_SIZE_SWEEP = (8, 32)
     cfg = reduced(get_config("stablelm-1.6b"))
     fm = _fm(cfg)
     names = [f"lora{i}" for i in range(4)]
@@ -195,6 +246,10 @@ def run_all(out_path: str = None, smoke: bool = False):
     assert steady["recompiles_after_churn"] == 0, steady
     assert steady["free_pages_after_drain"] == steady["total_usable_pages"]
 
+    # ---- page-size sweep: fragmentation vs table width ----
+    sweep = page_size_sweep(fm, cfg, names, PAGE_SIZE_SWEEP,
+                            repeats=max(1, REPEATS // 2))
+
     out = {
         "config": cfg.name,
         "prompt_len": PROMPT_LEN,
@@ -221,6 +276,7 @@ def run_all(out_path: str = None, smoke: bool = False):
             "paged_over_dense": round(overhead, 3),
         },
         "steady_state": steady,
+        "page_size_sweep": sweep,
         "paged_2x_streams_at_fixed_memory": bool(ratio >= 2.0),
         "paged_step_within_10pct": bool(overhead <= 1.10),
     }

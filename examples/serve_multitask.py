@@ -121,7 +121,8 @@ def mixed_main(args):
                            max_new=args.max_new, seed=i)
                for i in range(n_gen)]
     served = loop.run(merge(traces))
-    s = mixed_stats(served, page_samples=loop.page_samples)
+    s = mixed_stats(served, page_samples=loop.page_samples,
+                    shared_samples=loop.shared_samples)
     eng = srv.engines["fm0"]
     print(f"mixed: {len(served)} served, ticks={dict(loop.ticks)}")
     p, d = s["pooled"], s["decode"]
@@ -139,14 +140,17 @@ def mixed_main(args):
     if args.paged:
         from repro.serving.metrics import page_gauges
         kv = s.get("kv_pages", {})
+        sh = s.get("kv_sharing", {})
         print(f"  kv pages: occupancy p50={kv.get('occupancy_p50')} "
-              f"p95={kv.get('occupancy_p95')} | {page_gauges(eng)}")
+              f"p95={kv.get('occupancy_p95')} dedup "
+              f"p50={sh.get('dedup_frac_p50')} | {page_gauges(eng)}")
 
 
 def _paged_kwargs(args) -> dict:
     if not args.paged:
         return {}
-    kw = dict(paged=True, page_size=args.page_size)
+    kw = dict(paged=True, page_size=args.page_size,
+              prefix_sharing=not args.no_prefix_sharing)
     if args.total_pages:
         kw["total_pages"] = args.total_pages
     return kw
@@ -167,6 +171,8 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--total-pages", type=int, default=0,
                     help="KV arena size in pages (default: dense-equivalent)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable copy-on-write prompt-prefix page sharing")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     args = ap.parse_args()

@@ -16,29 +16,79 @@ per-step cost of multi-task isolation must be ~zero. The engine owns:
       - *paged* (``paged=True``): one global arena of ``total_pages``
         fixed-size pages (int8 K/V + per-(page, kv-head) scales,
         ``page_size`` tokens each) shared by every slot, addressed through a
-        device-resident per-slot page table. Admission prefill scatters the
-        prompt into freshly allocated pages, decode appends a page on demand
-        (the host allocator tops slots up to ``len + chunk`` tokens before
-        each chunk), and retire returns pages to the free list — so
-        concurrency is bounded by TOTAL TOKENS IN FLIGHT, not
-        ``num_slots × s_max``. Attention gathers K/V through the page table
-        inside the Pallas kernel grid (``kernels.paged_decode_attention``;
-        jnp gather oracle on CPU). Page 0 is the reserved trash page: free
-        slots keep stepping (static shapes) and their garbage writes land
-        there, never in a live stream's pages.
+        device-resident per-slot page table. Attention gathers K/V through
+        the page table inside the Pallas kernel grid
+        (``kernels.paged_decode_attention``; jnp gather oracle on CPU).
+        Page 0 is the reserved trash page: free slots keep stepping (static
+        shapes) and their garbage writes land there, never in a live
+        stream's pages.
+
+    **Paged page lifecycle — refcounted ownership + copy-on-write prefix
+    sharing.** Every usable page carries a reference count; a page is owned
+    by the free list exactly when its refcount is zero, and by one or more
+    page-table mappings otherwise. The lifecycle:
+
+      * *allocate* (``_take_pages``): pop from the free list, refcount 1.
+      * *share* (``_share_pages``): a joining stream whose prompt starts
+        with a prefix another stream already admitted MAPS that stream's
+        pages into its own page table instead of copying them — the prefix
+        registry (indexed by a chained sha256 digest over the adapter
+        identity and the leading token bytes, one entry per full page of a
+        registered prompt) resolves the
+        longest page-aligned shared prefix, and each mapped page's refcount
+        increments. Only pages wholly covered by prompt tokens are ever
+        registered, and decode writes only ever land at positions at or
+        beyond the stream's true prompt length — so shared pages are
+        IMMUTABLE and the read path (the paged attention kernel) needs no
+        change. The first divergent or partial page is the copy-on-write
+        boundary: the admission scatter points the shared positions at the
+        trash page and lands only the private tail in freshly allocated
+        pages.
+      * *release* (``_release_pages``; retire / preempt / bucket-trim all
+        route through it): decrement, and only a refcount that reaches zero
+        returns the page to the free list (and drops its registry entry).
+        Preempting or retiring one sharer therefore never invalidates
+        another sharer's mapped pages.
+
+    Admission quantizes the prompt's K/V **per (page, kv-head)**: a page's
+    scale is a pure function of the tokens it covers, so a shared page's
+    int8 codes and scales are bit-identical to what the joining stream's
+    own prefill would have written — sharing is exact, not approximate, and
+    a sharer's token stream matches the unshared engine token for token.
+    One exception keeps decode sane: the prompt/decode BOUNDARY page (the
+    partial page decode keeps appending into — never shared, sharing stops
+    at the last full page) is stamped at the slot-wide admission scale, so
+    a few small-magnitude prompt tokens in it cannot clip the stream's
+    normal-range decode K/V. Decode appends quantize into the slot's
+    admission-era running scale for the first token of each fresh page
+    (stamping it as the page scale) and into the page's stamped scale
+    thereafter, so a recycled page's stale scale can never leak into a new
+    owner.
+
+    Admission prefill scatters the prompt's private tail into freshly
+    allocated pages, decode appends a page on demand (the host allocator
+    tops slots up to ``len + chunk`` tokens before each chunk), and retire
+    releases — so concurrency is bounded by TOTAL *deduplicated* TOKENS IN
+    FLIGHT: co-resident streams carrying the same system prompt pay for it
+    once, not once per stream.
 
   * **admission prefill** — a joining request's prompt runs a single jitted
     prefill (LoRA applied, K/V quantized in-graph) and is scattered into its
     slot (dense: one ``dynamic_update_slice`` per cache leaf; paged: a page
-    scatter into the allocated page ids). Admission is **variable-length**:
-    prompts are right-padded to the smallest of 2-3 *prompt-length buckets*
-    (a static jit-cache key), while the TRUE length rides along as a traced
-    operand — pad keys are masked out of attention, the cache ``len`` is
-    per-row exact, and the first token comes from the last REAL prompt
-    position. On a full pool, a paged ``join`` **defers** (FIFO pending
-    queue drained as slots and pages free up) instead of raising — a burst
-    of admissions beyond capacity queues and drains across chunks; the
-    dense layout keeps the historical raise.
+    scatter into the allocated page ids, shared positions pointed at the
+    trash page). Admission is **variable-length**: prompts are right-padded
+    to the smallest of 2-3 *prompt-length buckets* (a static jit-cache
+    key), while the TRUE length rides along as a traced operand — pad keys
+    are masked out of attention, the cache ``len`` is per-row exact, and
+    the first token comes from the last REAL prompt position. On a full
+    pool, a paged ``join`` **defers** (pending queue drained as slots and
+    pages free up) instead of raising — a burst of admissions beyond
+    capacity queues and drains across chunks; the dense layout keeps the
+    historical raise. The pending queue drains mostly-FIFO with a bounded
+    lookahead (``pending_lookahead``): a small prompt may admit past a
+    large head that free pages cannot yet cover, but only
+    ``hol_skip_cap`` times in a row — then the head regains strict
+    priority, so skip-ahead cannot starve it.
 
   * **chunked decode** — ``step_chunk`` advances ALL occupied slots ``chunk``
     tokens under one jitted ``lax.scan`` (device-resident sampling: one
@@ -60,20 +110,31 @@ per-step cost of multi-task isolation must be ~zero. The engine owns:
     ``PhysicalFM.resolve_lora_impl`` (gather vs segmented crossover;
     ``lora_impl="auto"`` is the server default).
 
-int8 KV scale drift: quantization scales are fixed ONCE at prefill admission
-(paged: stamped per page from the slot's admission scales). Decode-era K/V
-whose magnitude outgrows the prompt-era range are clipped to ±127·scale — the
-engine never rescales a live slot. The divergence this introduces is bounded
-and grows slowly with decode length: empirically
-(``tests/test_decode_engine.py::test_int8_scale_drift_bounded``) a decode
-tail 3× longer than the prompt whose K/V magnitude drifts to 3× the
+int8 KV scale drift: dense-pool quantization scales are fixed ONCE at prefill
+admission; decode-era K/V whose magnitude outgrows the prompt-era range are
+clipped to ±127·scale and the dense engine never rescales a live slot. The
+divergence this introduces is bounded and grows slowly with decode length:
+empirically (``tests/test_decode_engine.py::test_int8_scale_drift_bounded``)
+a decode tail 3× longer than the prompt whose K/V magnitude drifts to 3× the
 admission-scale range keeps attention-output relative divergence under ~0.8
 (vs ~0.06 with no drift), and at the model level a decode 4× the prompt
-length keeps logit relative divergence under 0.5. Decodes far beyond a
-``max_new`` of a few hundred tokens should either re-admit (prefill on the
-generated prefix refreshes scales — the paged preemption path does exactly
-this) or use ``kv_quant=False`` with the dense layout. Per-page scales make
-periodic per-page rescale a natural follow-up (see ROADMAP).
+length keeps logit relative divergence under 0.5. The PAGED pool refreshes
+**proactively**: the decode step tracks each slot's running decode-era
+|K|/|V| maxima in the pool (``k_max``/``v_max``, traced — no extra
+compiles), and when a slot's observed maximum exceeds
+``scale_refresh`` × its admission range the engine re-quantizes the slot's
+current tail page in place (codes rescaled old→new scale, both per-page and
+slot running scales bumped, ``scale_refreshes`` counted) so SUBSEQUENT
+tokens quantize into the drifted range instead of clipping against the
+prompt-era one. The refresh bounds the FUTURE, not the past: codes clipped
+before the drift first crossed the threshold stay clipped (int8 cannot be
+un-clipped), so a drifting stream converges to the refreshed-layout bound
+(~no-drift tolerance, see ``test_int8_scale_drift_bounded``) rather than
+holding it from the first drifted token. Shared prefix pages are never
+refresh targets (the tail page is always private). Dense decodes far beyond a ``max_new`` of a few
+hundred tokens should either re-admit (prefill on the generated prefix
+refreshes scales — the paged preemption path does exactly this) or use
+``kv_quant=False``.
 """
 from __future__ import annotations
 
@@ -165,7 +226,9 @@ class DecodeEngine:
                  prompt_buckets: Optional[tuple] = None,
                  temperature: float = 0.0, top_k: int = 0,
                  sample_seed: int = 0, paged: bool = False,
-                 page_size: int = 16, total_pages: Optional[int] = None):
+                 page_size: int = 16, total_pages: Optional[int] = None,
+                 prefix_sharing: bool = True, scale_refresh: float = 2.0,
+                 pending_lookahead: int = 4, hol_skip_cap: int = 4):
         cfg = fm.cfg
         assert cfg.vocab_size > 0 and not cfg.is_representation, \
             "DecodeEngine serves generative decoder LMs (vocab head required)"
@@ -224,6 +287,22 @@ class DecodeEngine:
             self.pending: collections.deque[_PendingJoin] = collections.deque()
             self.deferrals = 0
             self.preemptions = 0
+            # refcounted ownership + COW prefix sharing (module docstring)
+            self.prefix_sharing = bool(prefix_sharing)
+            self._page_refs = np.zeros((total_pages,), np.int32)
+            self._prefix_registry: dict[tuple, int] = {}   # key -> page id
+            self._page_key: dict[int, tuple] = {}          # page id -> key
+            self.prefix_hits = 0            # joins that mapped >= 1 page
+            self.shared_pages_mapped = 0    # cumulative pages mapped, not copied
+            # proactive int8 scale refresh (module docstring, drift section)
+            self.scale_refresh = float(scale_refresh)
+            self.scale_refreshes = 0
+            self._jit_rescale = None
+            # bounded pending-queue lookahead (head-of-line fix)
+            self.pending_lookahead = max(1, int(pending_lookahead))
+            self.hol_skip_cap = max(1, int(hol_skip_cap))
+            self._hol_skips = 0
+            self.hol_bypasses = 0
         else:
             # the persistent pool: allocated once, updated in place (donated)
             self.pool = lm.init_cache(cfg, self.num_slots, self.s_max,
@@ -262,6 +341,8 @@ class DecodeEngine:
         fns = (list(self._jit_prefill.values()) +
                list(self._jit_decode.values()) +
                list(self._jit_write.values()))
+        if getattr(self, "_jit_rescale", None) is not None:
+            fns.append(self._jit_rescale)
         return sum(f._cache_size() if hasattr(f, "_cache_size") else 1
                    for f in fns)
 
@@ -283,6 +364,22 @@ class DecodeEngine:
     def _pages_for(self, tokens: int) -> int:
         return -(-max(tokens, 1) // self.page_size)
 
+    def shared_page_count(self) -> int:
+        """Physical pages currently mapped by more than one stream."""
+        return int((self._page_refs > 1).sum()) if self.paged else 0
+
+    def dedup_saved_pages(self) -> int:
+        """Pages prefix sharing is saving RIGHT NOW: logical mappings minus
+        physical pages (Σ max(refcount - 1, 0))."""
+        if not self.paged:
+            return 0
+        return int(np.maximum(self._page_refs - 1, 0).sum())
+
+    def logical_page_count(self) -> int:
+        """Total page-table mappings across live slots — what the streams
+        would hold physically without prefix sharing."""
+        return int(self._held.sum()) if self.paged else 0
+
     def _imminent_page_need(self) -> int:
         """Pages the LIVE streams will allocate for their next chunk — the
         watermark an admission must clear on top of its own need, so letting
@@ -294,41 +391,134 @@ class DecodeEngine:
                             - self._held[i])
         return need
 
-    def _admission_need(self, prompt_tokens: int) -> int:
+    def _admission_need(self, prompt_tokens: int, prompt=None,
+                        adapter_id: Optional[str] = None) -> int:
+        """Free pages an admission must find: the prompt's bucket worth of
+        pages MINUS the pages its prefix would share (known only when the
+        prompt content is provided), plus a chunk of decode headroom for the
+        new stream and for every live one."""
         plen = self.bucket_for_prompt(min(max(prompt_tokens, 1),
                                           self.prompt_len))
-        return (self._pages_for(self._adm_s_max(plen))
+        shared = len(self._match_prefix(adapter_id, prompt)) \
+            if prompt is not None else 0
+        return (self._pages_for(self._adm_s_max(plen)) - shared
                 + self._pages_for(self.chunk)
                 + self._imminent_page_need())
 
-    def can_admit(self, prompt_tokens: int = 1) -> bool:
-        """Would an admission of an ``prompt_tokens``-token prompt proceed
+    def can_admit(self, prompt_tokens: Optional[int] = None, *,
+                  prompt=None, adapter_id: Optional[str] = None) -> bool:
+        """Would an admission of a ``prompt_tokens``-token prompt proceed
         right now? Dense: a free slot. Paged: a free slot, nothing already
         deferred ahead of it (FIFO), and free pages covering the prompt's
         admission bucket PLUS a chunk of decode headroom for this stream AND
         for every live one — the memory-aware gate ``ServeLoop`` consults
         before dispatching a prefill. Deliberately conservative by one chunk
         per live stream: over-admitting converts into preemptions, which
-        redo prefill work and can truncate long streams."""
+        redo prefill work and can truncate long streams.
+
+        The paged gate REQUIRES the prompt length (or the prompt itself) —
+        a silent 1-token default once let callers consult the memory gate
+        with a wildly low estimate and over-admit. Passing ``prompt``
+        (token ids) additionally lets the gate DISCOUNT the pages a shared
+        prefix would map instead of allocate; ``adapter_id`` keys the
+        prefix registry lookup (LoRA'd V differs per adapter)."""
+        if prompt is not None:
+            prompt = np.asarray(prompt, np.int32).reshape(-1)
+            if prompt_tokens is None:
+                prompt_tokens = len(prompt)
+        if self.paged and prompt_tokens is None:
+            raise TypeError(
+                "can_admit on a paged pool requires prompt_tokens (or "
+                "prompt=): the memory gate cannot size an admission from "
+                "a default 1-token estimate")
         if not self.free_slots():
             return False
         if not self.paged:
             return True
         if self.pending:
             return False
-        return len(self._free_pages) >= self._admission_need(prompt_tokens)
+        return len(self._free_pages) >= self._admission_need(
+            prompt_tokens, prompt=prompt, adapter_id=adapter_id)
 
+    # ---- refcounted page allocator + prefix registry (paged layout) ----
     def _take_pages(self, n: int) -> np.ndarray:
         assert len(self._free_pages) >= n
-        return np.array([self._free_pages.pop() for _ in range(n)], np.int32)
+        pages = np.array([self._free_pages.pop() for _ in range(n)], np.int32)
+        self._page_refs[pages] = 1
+        return pages
+
+    def _share_pages(self, pages):
+        for p in pages:
+            self._page_refs[int(p)] += 1
+
+    def _release_pages(self, pages):
+        """Drop one reference per page; pages whose refcount reaches zero
+        return to the free list and fall out of the prefix registry."""
+        for p in pages:
+            p = int(p)
+            r = self._page_refs[p] = self._page_refs[p] - 1
+            assert r >= 0, f"double free of page {p}"
+            if r == 0:
+                self._free_pages.append(p)
+                key = self._page_key.pop(p, None)
+                if key is not None and self._prefix_registry.get(key) == p:
+                    del self._prefix_registry[key]
 
     def _release_slot_pages(self, slot: int):
-        self._free_pages.extend(int(p) for p in
-                                self._ptab[slot, :self._held[slot]])
+        self._release_pages(self._ptab[slot, :self._held[slot]])
         self._ptab[slot] = TRASH_PAGE
         self._held[slot] = 0
         self._lens[slot] = 0
         self._ptab_dirty = True
+
+    def _prefix_keys(self, adapter_id: Optional[str],
+                     prompt: np.ndarray) -> list[bytes]:
+        """One registry key per full page of ``prompt``: a CHAINED sha256
+        digest (key_j = H(key_{j-1} || page_j bytes), seeded with the
+        adapter identity), so key material and hashing stay O(prompt
+        bytes) total — not O(pages × prefix) — while a digest still
+        commits to the ENTIRE prefix up to its page. 256-bit collisions
+        are negligible against page-mapping corruption."""
+        import hashlib
+        h = hashlib.sha256(b"\x00" if adapter_id is None
+                           else b"\x01" + adapter_id.encode())
+        ps = self.page_size
+        keys = []
+        for j in range(len(prompt) // ps):
+            h.update(prompt[j * ps:(j + 1) * ps].tobytes())
+            keys.append(h.digest())
+        return keys
+
+    def _match_prefix(self, adapter_id: Optional[str], prompt) -> list[int]:
+        """Arena page ids of the longest registered page-aligned prefix of
+        ``prompt`` under ``adapter_id`` (LoRA changes V, so prefixes only
+        match within one adapter). Empty when sharing is off."""
+        if not (self.paged and self.prefix_sharing) or prompt is None:
+            return []
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) > self.prompt_len:       # join() left-truncates
+            prompt = prompt[-self.prompt_len:]
+        shared = []
+        for key in self._prefix_keys(adapter_id, prompt):
+            p = self._prefix_registry.get(key)
+            if p is None:
+                break
+            shared.append(p)
+        return shared
+
+    def _register_prefix(self, adapter_id: Optional[str], prompt: np.ndarray,
+                         slot: int, true_len: int):
+        """Publish the slot's FULL prompt pages (the only immutable ones —
+        decode never writes below ``true_len``) for future joins to map.
+        An existing registration for the same prefix wins (first writer);
+        the duplicate page stays private to this slot."""
+        if not self.prefix_sharing:
+            return
+        keys = self._prefix_keys(adapter_id, prompt[:true_len])
+        for j, key in enumerate(keys):
+            page = int(self._ptab[slot, j])
+            if self._prefix_registry.setdefault(key, page) == page:
+                self._page_key[page] = key
 
     def _sync_page_table(self):
         """Push the host page table to every attention sublayer's device
@@ -370,8 +560,13 @@ class DecodeEngine:
         if key not in self._jit_prefill:
             cfg, bt = self.cfg, self.fm.seg_block_t
             impl = self._impl(1, cap)
-            s_max, kvq, sample = self._adm_s_max(plen), self.kv_quant, \
-                self._sample
+            # paged admission keeps the prefill K/V in float: the page
+            # scatter quantizes PER PAGE (a page's scale depends only on
+            # the tokens it covers, so shared prefix pages are bit-exact
+            # across streams); the dense scatter stores the in-graph
+            # per-row quantization unchanged
+            s_max, kvq, sample = self._adm_s_max(plen), \
+                self.kv_quant and not self.paged, self._sample
 
             @jax.jit
             def run(params, tokens, true_len, rng_key, lora_stack,
@@ -409,11 +604,17 @@ class DecodeEngine:
 
     def _paged_write_fn(self, npages: int):
         """Paged admission scatter for one prompt bucket (``npages`` pages):
-        the one-row prefill cache reshapes into pages and scatters into the
-        arena at the allocated page ids (traced), the admission scales stamp
-        both the pages and the slot's scale row, and the slot's ``len`` is
-        set to the TRUE prompt length. Page ids, slot and length are traced
-        operands — allocation churn never retraces."""
+        the one-row FLOAT prefill cache reshapes into pages, each page is
+        quantized with its own per-(page, kv-head) scale (a pure function of
+        the tokens the page covers — the property that makes shared prefix
+        pages bit-exact across streams), and pages scatter into the arena at
+        the allocated page ids. Shared prefix positions arrive pointed at
+        the trash page, so their (identical) content is simply discarded.
+        The slot's running scales are set to the prompt-wide maximum (the
+        admission range decode appends quantize into), the drift trackers
+        reset, and ``len`` is set to the TRUE prompt length. Page ids, slot
+        and length are traced operands — allocation and sharing churn never
+        retrace."""
         if npages not in self._jit_write:
             donate = self._donate(0)
             ps = self.page_size
@@ -421,23 +622,47 @@ class DecodeEngine:
             def write(pool, cache, slot, page_idx, true_len):
                 out = []
                 for psub, csub in zip(pool, cache):
-                    kq = csub["k"][:, 0]            # (nper, S, kv, hd)
-                    nper, _, kv, hd = kq.shape
-                    kq = kq.reshape(nper, npages, ps, kv, hd)
-                    vq = csub["v"][:, 0].reshape(nper, npages, ps, kv, hd)
-                    ks = csub["k_scale"][:, 0]      # (nper, kv)
-                    vs = csub["v_scale"][:, 0]
+                    kf = csub["k"][:, 0].astype(jnp.float32)  # (nper,S,kv,hd)
+                    nper, _, kv, hd = kf.shape
+                    kf = kf.reshape(nper, npages, ps, kv, hd)
+                    vf = csub["v"][:, 0].astype(jnp.float32).reshape(
+                        nper, npages, ps, kv, hd)
+                    kmax = jnp.max(jnp.abs(kf), axis=(2, 4))  # (nper,np,kv)
+                    vmax = jnp.max(jnp.abs(vf), axis=(2, 4))
+                    ks = kmax / 127.0       # 0 for empty (pad-only) pages
+                    vs = vmax / 127.0
+                    # slot scales = prompt-wide max: identical to the dense
+                    # per-row quantization range (kernels.quantize_kv)
+                    slot_ks = jnp.maximum(jnp.max(kmax, axis=1), 1e-8) / 127.0
+                    slot_vs = jnp.maximum(jnp.max(vmax, axis=1), 1e-8) / 127.0
+                    # the prompt/decode BOUNDARY page (the partial page
+                    # decode will keep appending into) is stamped at the
+                    # slot-wide scale, not its prompt-local one: a partial
+                    # page holding a few small-magnitude prompt tokens must
+                    # not clip the stream's normal-range decode K/V. Still a
+                    # pure function of the prompt (slot scale is), and never
+                    # a shared page (sharing stops at the last FULL page).
+                    sel = (jnp.arange(npages) == true_len // ps)[None, :,
+                                                                 None]
+                    ks = jnp.where(sel, slot_ks[:, None, :], ks)
+                    vs = jnp.where(sel, slot_vs[:, None, :], vs)
+                    kq = jnp.clip(jnp.round(
+                        kf / jnp.maximum(ks, 1e-12)[:, :, None, :, None]),
+                        -127, 127).astype(psub["k"].dtype)
+                    vq = jnp.clip(jnp.round(
+                        vf / jnp.maximum(vs, 1e-12)[:, :, None, :, None]),
+                        -127, 127).astype(psub["v"].dtype)
                     d = dict(psub)
-                    d["k"] = psub["k"].at[:, page_idx].set(
-                        kq.astype(psub["k"].dtype))
-                    d["v"] = psub["v"].at[:, page_idx].set(
-                        vq.astype(psub["v"].dtype))
-                    d["k_scale"] = psub["k_scale"].at[:, page_idx].set(
-                        jnp.broadcast_to(ks[:, None], (nper, npages, kv)))
-                    d["v_scale"] = psub["v_scale"].at[:, page_idx].set(
-                        jnp.broadcast_to(vs[:, None], (nper, npages, kv)))
-                    d["slot_k_scale"] = psub["slot_k_scale"].at[:, slot].set(ks)
-                    d["slot_v_scale"] = psub["slot_v_scale"].at[:, slot].set(vs)
+                    d["k"] = psub["k"].at[:, page_idx].set(kq)
+                    d["v"] = psub["v"].at[:, page_idx].set(vq)
+                    d["k_scale"] = psub["k_scale"].at[:, page_idx].set(ks)
+                    d["v_scale"] = psub["v_scale"].at[:, page_idx].set(vs)
+                    d["slot_k_scale"] = psub["slot_k_scale"].at[:, slot].set(
+                        slot_ks)
+                    d["slot_v_scale"] = psub["slot_v_scale"].at[:, slot].set(
+                        slot_vs)
+                    d["k_max"] = psub["k_max"].at[:, slot].set(0.0)
+                    d["v_max"] = psub["v_max"].at[:, slot].set(0.0)
                     d["len"] = psub["len"].at[:, slot].set(true_len)
                     out.append(d)
                 return out
@@ -445,12 +670,81 @@ class DecodeEngine:
             self._jit_write[npages] = jax.jit(write, donate_argnums=donate)
         return self._jit_write[npages]
 
+    def _rescale_fn(self):
+        """Proactive per-page scale refresh for ONE (slot, tail page): bump
+        the page and slot scales to cover the slot's observed decode-era
+        |K|/|V| maxima (with 10% headroom) and rewrite the page's int8 codes
+        from the old scale into the new one. Slot and page are traced — the
+        refresh compiles once, ever."""
+        if self._jit_rescale is None:
+            donate = self._donate(0)
+            margin = 1.1 / 127.0
+
+            def rescale(pool, slot, page):
+                out = []
+                for sub in pool:
+                    km = sub["k_max"][:, slot] * margin       # (nper, kv)
+                    vm = sub["v_max"][:, slot] * margin
+                    old_ks = sub["k_scale"][:, page]
+                    old_vs = sub["v_scale"][:, page]
+                    new_ks = jnp.maximum(old_ks, km)
+                    new_vs = jnp.maximum(old_vs, vm)
+                    rk = jnp.where(new_ks > 0,
+                                   old_ks / jnp.maximum(new_ks, 1e-12), 1.0)
+                    rv = jnp.where(new_vs > 0,
+                                   old_vs / jnp.maximum(new_vs, 1e-12), 1.0)
+                    kp = jnp.round(sub["k"][:, page].astype(jnp.float32)
+                                   * rk[:, None, :, None])
+                    vp = jnp.round(sub["v"][:, page].astype(jnp.float32)
+                                   * rv[:, None, :, None])
+                    d = dict(sub)
+                    d["k"] = sub["k"].at[:, page].set(
+                        kp.astype(sub["k"].dtype))
+                    d["v"] = sub["v"].at[:, page].set(
+                        vp.astype(sub["v"].dtype))
+                    d["k_scale"] = sub["k_scale"].at[:, page].set(new_ks)
+                    d["v_scale"] = sub["v_scale"].at[:, page].set(new_vs)
+                    d["slot_k_scale"] = sub["slot_k_scale"].at[:, slot].set(
+                        jnp.maximum(sub["slot_k_scale"][:, slot], km))
+                    d["slot_v_scale"] = sub["slot_v_scale"].at[:, slot].set(
+                        jnp.maximum(sub["slot_v_scale"][:, slot], vm))
+                    out.append(d)
+                return out
+
+            self._jit_rescale = jax.jit(rescale, donate_argnums=donate)
+        return self._jit_rescale
+
+    def _maybe_refresh_scales(self, over):
+        """Refresh the (always private) tail page of every slot the chunk's
+        in-graph drift check flagged: its decode-era |K|/|V| maxima exceeded
+        ``scale_refresh`` × the admission range."""
+        if not self.paged or self.scale_refresh <= 0 or not over.any():
+            return
+        for i in np.nonzero(over)[0]:
+            s = self.slots[i]
+            # only decode-era tokens drift, and only a slot that has decoded
+            # past its prompt has a PRIVATE tail page to rewrite — shared
+            # prefix pages are never refresh targets
+            if s is None or s.done or self._lens[i] <= s.prompt_tokens:
+                continue
+            page = int(self._ptab[i, (self._lens[i] - 1) // self.page_size])
+            self.pool = self._rescale_fn()(self.pool, jnp.int32(int(i)),
+                                           jnp.int32(page))
+            self.scale_refreshes += 1
+
     def _decode_fn(self, cap: int, chunk: int):
         key = (self.num_slots, cap, chunk)
         if key not in self._jit_decode:
             cfg, bt = self.cfg, self.fm.seg_block_t
             impl = self._impl(self.num_slots, cap)
             donate = self._donate(1)
+            # drift detection rides the chunk: the over-threshold flag is
+            # computed in-graph from the post-chunk trackers and synced
+            # with the tokens — the steady-state path never does extra
+            # host round-trips just to learn nothing drifted
+            refresh_thr = self.scale_refresh * 127.0 \
+                if self.paged and self.scale_refresh > 0 else None
+            nslots = self.num_slots
 
             sample = self._sample
 
@@ -471,7 +765,16 @@ class DecodeEngine:
 
                 (pool, tok, keys), out = jax.lax.scan(
                     body, (pool, tokens, keys), None, length=chunk)
-                return pool, tok, keys, out.T                # (slots, chunk)
+                drift = jnp.zeros((nslots,), jnp.bool_)
+                if refresh_thr is not None:
+                    for sub in pool:
+                        if isinstance(sub, dict) and "k_max" in sub:
+                            o = (sub["k_max"] > refresh_thr * jnp.maximum(
+                                    sub["slot_k_scale"], 1e-8)) | \
+                                (sub["v_max"] > refresh_thr * jnp.maximum(
+                                    sub["slot_v_scale"], 1e-8))
+                            drift = drift | jnp.any(o, axis=(0, 2))
+                return pool, tok, keys, out.T, drift         # (slots, chunk)
 
             self._jit_decode[key] = jax.jit(run, donate_argnums=donate)
         return self._jit_decode[key]
@@ -532,20 +835,25 @@ class DecodeEngine:
                            adapter_id=adapter_id,
                            max_new_tokens=max_new_tokens, rid=rid,
                            eos_id=eos_id)
-        if self.paged and not self.can_admit(len(prompt)):
+        if self.paged and not self.can_admit(len(prompt), prompt=prompt,
+                                             adapter_id=adapter_id):
             # deferral must be able to END: a request whose prompt bucket +
-            # chunk headroom exceeds the whole arena would pend forever
-            # (drain() and the serve loop would spin) — that is a pool
-            # configuration error, not backpressure
-            plen = self.bucket_for_prompt(min(max(len(prompt), 1),
-                                              self.prompt_len))
-            base = self._pages_for(self._adm_s_max(plen)) + \
-                self._pages_for(self.chunk)
-            if base > self.total_pages - 1:
+            # chunk headroom (minus the pages its prefix currently shares)
+            # exceeds the whole arena would pend forever (drain() and the
+            # serve loop would spin) — that is a pool configuration error,
+            # not backpressure. A request that only fits BECAUSE of the
+            # discount and whose registered sharer later retires becomes
+            # STRANDED: it stays queued without blocking others, and only
+            # a full engine wedge raises (_raise_if_wedged).
+            if self._never_fits(req):
+                plen = self.bucket_for_prompt(min(max(len(prompt), 1),
+                                                  self.prompt_len))
+                base = self._pages_for(self._adm_s_max(plen)) + \
+                    self._pages_for(self.chunk)
                 raise ValueError(
                     f"prompt needs {base} pages (bucket {plen} + chunk "
-                    f"headroom) but the arena only has "
-                    f"{self.total_pages - 1} usable pages; raise "
+                    f"headroom) beyond any shared prefix but the arena "
+                    f"only has {self.total_pages - 1} usable pages; raise "
                     f"total_pages or shrink prompt_buckets/chunk")
             self.pending.append(req)
             self.deferrals += 1
@@ -589,21 +897,38 @@ class DecodeEngine:
         self._keys = self._keys.at[slot].set(key[0])
         if self.paged:
             npages = self._pages_for(self._adm_s_max(plen))
-            pages = self._take_pages(npages)
+            shared = self._match_prefix(req.adapter_id, true_prompt)
+            m = len(shared)
+            priv = self._take_pages(npages - m)
+            pages = priv
+            if m:
+                self._share_pages(shared)
+                self.prefix_hits += 1
+                self.shared_pages_mapped += m
+                pages = np.concatenate(
+                    [np.asarray(shared, np.int32), priv])
+            # COW admission: the slot MAPS the shared prefix pages, but the
+            # scatter points those positions at the trash page — their
+            # (bit-identical) content is already in the arena and must not
+            # be rewritten while other streams read it
+            scatter = pages.copy()
+            scatter[:m] = TRASH_PAGE
             self.pool = self._paged_write_fn(npages)(
-                self.pool, cache, jnp.int32(slot), jnp.asarray(pages),
+                self.pool, cache, jnp.int32(slot), jnp.asarray(scatter),
                 jnp.int32(true_len))
             self._ptab[slot, :npages] = pages
             self._held[slot] = npages
             self._lens[slot] = true_len
             # trim: bucket padding beyond the true length scattered zero
-            # pages — return them now; decode growth re-allocates on demand
+            # pages — release them now (always private: the shared prefix
+            # never extends past the prompt); decode growth re-allocates
             keep = self._pages_for(true_len)
             if keep < npages:
-                self._free_pages.extend(int(p) for p in
-                                        self._ptab[slot, keep:npages])
+                self._release_pages(self._ptab[slot, keep:npages])
                 self._ptab[slot, keep:npages] = TRASH_PAGE
                 self._held[slot] = keep
+            self._register_prefix(req.adapter_id, true_prompt, slot,
+                                  true_len)
             self._ptab_dirty = True
         else:
             self.pool = self._write_fn()(self.pool, cache, slot)
@@ -712,16 +1037,87 @@ class DecodeEngine:
             if not preempted:
                 return
 
-    def _drain_pending(self):
-        """FIFO-admit deferred joins while slots and pages allow."""
-        while self.pending and self.can_admit_pending():
-            self._admit_now(self.pending.popleft())
+    def _never_fits(self, req: _PendingJoin) -> bool:
+        """True when the request cannot be admitted even into an EMPTY
+        arena, counting the pages its prefix currently shares — deferring
+        it would spin forever."""
+        plen = self.bucket_for_prompt(min(max(len(req.prompt), 1),
+                                          self.prompt_len))
+        m = len(self._match_prefix(req.adapter_id, req.prompt))
+        return (self._pages_for(self._adm_s_max(plen)) - m
+                + self._pages_for(self.chunk)) > self.total_pages - 1
+
+    def _viable_pending(self) -> list[int]:
+        """Pending indices that could fit the arena at its CURRENT sharing
+        state. A deferred join admitted on the strength of a prefix
+        discount whose registered sharer has since retired is STRANDED: it
+        stays queued (a later admission re-registering its prefix would
+        unstrand it) but is invisible to the drain and exempt from the
+        head-of-line fairness cap — it cannot be starved of something no
+        amount of waiting provides. ``step_chunk`` raises only when the
+        whole engine wedges on stranded entries (nothing live, nothing
+        viable), the one state no future engine event can fix."""
+        return [i for i, r in enumerate(self.pending)
+                if not self._never_fits(r)]
+
+    def _next_admissible_pending(self) -> Optional[int]:
+        """Index of the next deferred join the pool can take: the (viable)
+        head, or — bounded lookahead — a smaller prompt within
+        ``pending_lookahead`` viable entries of it whose pages ARE free
+        while the head's are not. Skip-ahead is capped: after
+        ``hol_skip_cap`` consecutive bypasses the window collapses to the
+        head alone until it admits, so a large blocked head is delayed,
+        never starved."""
+        if not self.pending or not self.free_slots():
+            return None
+        viable = self._viable_pending()
+        window = 1 if self._hol_skips >= self.hol_skip_cap else \
+            self.pending_lookahead
+        for idx in viable[:window]:
+            req = self.pending[idx]
+            if len(self._free_pages) >= self._admission_need(
+                    len(req.prompt), prompt=req.prompt,
+                    adapter_id=req.adapter_id):
+                return idx
+        return None
 
     def can_admit_pending(self) -> bool:
-        if not self.pending or not self.free_slots():
-            return False
-        return len(self._free_pages) >= \
-            self._admission_need(len(self.pending[0].prompt))
+        return self._next_admissible_pending() is not None
+
+    def _drain_pending(self):
+        """Admit deferred joins while slots and pages allow — FIFO with the
+        bounded skip-ahead of ``_next_admissible_pending`` (one large prompt
+        at the head no longer starves small prompts queued behind it).
+        Bypassing a stranded entry never consumes the fairness budget."""
+        while True:
+            idx = self._next_admissible_pending()
+            if idx is None:
+                return
+            req = self.pending[idx]
+            bypassed_viable = any(not self._never_fits(self.pending[i])
+                                  for i in range(idx))
+            del self.pending[idx]
+            if bypassed_viable:
+                self._hol_skips += 1
+                self.hol_bypasses += 1
+            else:
+                self._hol_skips = 0
+            self._admit_now(req)
+
+    def _raise_if_wedged(self):
+        """Nothing live, nothing viable, stranded joins pending: no future
+        engine event can admit them (new joins defer behind the pending
+        queue, so the re-registration that would unstrand them can never
+        happen either) — drain()/the serve loop would spin forever. Loud
+        configuration error instead."""
+        if self.pending and self.active_count() == 0 \
+                and not self._viable_pending():
+            raise ValueError(
+                f"{len(self.pending)} deferred prompt(s) no longer fit the "
+                f"arena ({self.total_pages - 1} usable pages) — the shared "
+                f"prefix they were admitted against was released and "
+                f"nothing is left to free; raise total_pages or shrink "
+                f"prompt_buckets/chunk")
 
     def step_chunk(self) -> list[DecodeSlot]:
         """Advance every occupied slot by up to ``chunk`` tokens under one
@@ -729,7 +1125,12 @@ class DecodeEngine:
         streams already done retire FIRST (their pages fund deferred
         admissions and spare a live stream from preemption), then deferred
         admissions drain into the freed capacity, then live slots top up
-        with pages for the chunk and the page table syncs."""
+        with pages for the chunk and the page table syncs. Entered with
+        nothing occupied and only STRANDED deferred joins left, raises the
+        wedge configuration error — checked on ENTRY so the call that
+        retires the last live stream still returns it."""
+        if self.paged:
+            self._raise_if_wedged()
         t0 = time.perf_counter()
         retired = [self.leave(i) for i, s in enumerate(self.slots)
                    if s is not None and s.done]
@@ -748,7 +1149,7 @@ class DecodeEngine:
                 self._sync_page_table()
             cap = self.fm.adapters.capacity()
             perm, inv, blocks = self._segments(cap)
-            self.pool, self._tokens, self._keys, out = \
+            self.pool, self._tokens, self._keys, out, drift = \
                 self._decode_fn(cap, self.chunk)(
                     self.fm.params, self.pool, self._tokens, self._keys,
                     self.fm.adapters.stacked(),
@@ -771,6 +1172,7 @@ class DecodeEngine:
                         s.eos_id is not None and s.tokens[-1] == s.eos_id):
                     s.done = True
                     finished.append(i)
+            self._maybe_refresh_scales(np.asarray(drift))
         retired += [self.leave(i) for i in finished]
         self.last_chunk_s = time.perf_counter() - t0
         return retired

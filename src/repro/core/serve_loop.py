@@ -68,6 +68,7 @@ class ServeLoop:
         self.ticks = collections.Counter()      # work-kind -> tick count
         self._tie_last = "decode"               # alternation state (see tick)
         self.page_samples: list[float] = []     # paged-pool occupancy / tick
+        self.shared_samples: list[float] = []   # dedup fraction / decode tick
 
     # ---- plumbing ----
     @property
@@ -114,11 +115,18 @@ class ServeLoop:
                 # a paged pool) enough free pages for its prompt bucket plus
                 # a chunk of decode headroom exist — otherwise DEFER: the
                 # request keeps its tag and the loop serves other work until
-                # retiring streams free pages
+                # retiring streams free pages. The PROMPT rides along so the
+                # gate can discount pages a shared prefix would map rather
+                # than allocate (a sharer needs only its private tail)
                 head = sched.peek_request(vfms, is_generative)
-                n = len(np.asarray(head.payload).reshape(-1)) \
-                    if head is not None and head.payload is not None else 1
-                admit_ok = eng.can_admit(n)
+                if head is not None and head.payload is not None:
+                    v = vfms.get(head.task_id)
+                    aid = v.extensions.adapter_id if v is not None else None
+                    prompt = np.asarray(head.payload, np.int32).reshape(-1)
+                    admit_ok = eng.can_admit(len(prompt), prompt=prompt,
+                                             adapter_id=aid)
+                else:
+                    admit_ok = eng.can_admit(1)
             if admit_ok:
                 # ties: admit before pooled/decode — filling slots lets the
                 # next decode chunk amortize over more streams
@@ -233,6 +241,8 @@ class ServeLoop:
         retired = eng.step_chunk()
         if eng.paged:
             self.page_samples.append(eng.page_occupancy())
+            self.shared_samples.append(
+                eng.dedup_saved_pages() / max(eng.logical_page_count(), 1))
         sched.charge_tokens(
             vfms, {t: n * eng.chunk for t, n in active.items()}, now)
         done_t = time.perf_counter()

@@ -96,9 +96,12 @@ def paged_decode_attention(q, k_pages, v_pages, k_scale, v_scale, page_table,
 
     q: (B, H, hd); k_pages/v_pages: (num_pages, ps, KV, hd) int8 arena;
     k_scale/v_scale: (num_pages, KV) per-page scales; page_table:
-    (B, max_pages) int32; lengths: (B,) -> (B, H, hd). The Pallas path
-    gathers pages via the scalar-prefetched table inside the kernel grid;
-    the CPU oracle gathers with jnp then reuses the f32 decode reference."""
+    (B, max_pages) int32 — rows of DIFFERENT streams may reference the same
+    physical page (copy-on-write prefix sharing maps shared prompt pages
+    into several tables; the gather is read-only, so no kernel change);
+    lengths: (B,) -> (B, H, hd). The Pallas path gathers pages via the
+    scalar-prefetched table inside the kernel grid; the CPU oracle gathers
+    with jnp then reuses the f32 decode reference."""
     b = _resolve(backend)
     if b == "pallas":
         kh = k_pages.transpose(0, 2, 1, 3)      # (P, KV, ps, hd) head-major

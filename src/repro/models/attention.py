@@ -219,32 +219,44 @@ def self_attention_decode(p, x, cache, cfg, shard, *, pos=None, pos3=None,
     bidx = jnp.arange(B)
     if "page_table" in cache:
         # paged int8 pool: the new token lands in arena page
-        # page_table[b, len // ps] at offset len % ps, quantized into the
-        # slot's admission-era scales, which are also stamped onto the page
-        # (idempotent re-stamp for pages already holding tokens) so the
-        # kernel dequantizes per page. Attention gathers K/V through the
-        # page table (ops.paged_decode_attention).
+        # page_table[b, len // ps] at offset len % ps. The FIRST token of a
+        # page quantizes with the slot's admission-era running scale and
+        # stamps it as the page scale (a recycled page's stale scale must
+        # never leak in); later tokens reuse the page's stamped scale — for
+        # a partial prompt page that is its admission per-page scale, so
+        # earlier codes keep dequantizing correctly. Attention gathers K/V
+        # through the page table (ops.paged_decode_attention). The slot's
+        # decode-era |K|/|V| running maxima ride in ``k_max``/``v_max`` for
+        # the engine's proactive scale refresh.
         ps = cache["k"].shape[1]
         page = jnp.take_along_axis(cache["page_table"],
                                    (idx // ps)[:, None], axis=1)[:, 0]
         off = idx % ps
-        ks = jnp.maximum(cache["slot_k_scale"], 1e-8)
-        vs = jnp.maximum(cache["slot_v_scale"], 1e-8)
-        kq = jnp.clip(jnp.round(k[:, 0].astype(jnp.float32) / ks[:, :, None]),
+        fresh = (off == 0)[:, None]
+        ks = jnp.maximum(jnp.where(fresh, cache["slot_k_scale"],
+                                   cache["k_scale"][page]), 1e-8)
+        vs = jnp.maximum(jnp.where(fresh, cache["slot_v_scale"],
+                                   cache["v_scale"][page]), 1e-8)
+        kf = k[:, 0].astype(jnp.float32)
+        vf = v[:, 0].astype(jnp.float32)
+        kq = jnp.clip(jnp.round(kf / ks[:, :, None]),
                       -127, 127).astype(jnp.int8)
-        vq = jnp.clip(jnp.round(v[:, 0].astype(jnp.float32) / vs[:, :, None]),
+        vq = jnp.clip(jnp.round(vf / vs[:, :, None]),
                       -127, 127).astype(jnp.int8)
         k_pages = cache["k"].at[page, off].set(kq)
         v_pages = cache["v"].at[page, off].set(vq)
         k_sc = cache["k_scale"].at[page].set(ks)
         v_sc = cache["v_scale"].at[page].set(vs)
+        k_max = jnp.maximum(cache["k_max"], jnp.max(jnp.abs(kf), axis=-1))
+        v_max = jnp.maximum(cache["v_max"], jnp.max(jnp.abs(vf), axis=-1))
         from repro.kernels import ops
         o = ops.paged_decode_attention(q[:, 0], k_pages, v_pages, k_sc, v_sc,
                                        cache["page_table"], idx + 1,
                                        window=cfg.sliding_window)
         out = out_project(p, o.astype(x.dtype)[:, None], x.dtype)
         return out, {"k": k_pages, "v": v_pages, "k_scale": k_sc,
-                     "v_scale": v_sc, "len": idx + 1}
+                     "v_scale": v_sc, "k_max": k_max, "v_max": v_max,
+                     "len": idx + 1}
     if "k_scale" in cache:
         from repro.kernels import ops
         # scales are per (B, KV), fixed at prefill; epsilon-guard free slots

@@ -87,11 +87,16 @@ def sublayer_cache_spec(cfg: ModelConfig, lay: SubLayer, batch: int, s_max: int,
     ``paged``: the paged serving pool layout (``core.decode_engine`` with
     ``paged=True``) — instead of one dense (batch, s_max) region per slot,
     self-attention K/V live in a global arena of ``num_pages`` fixed-size
-    pages shared by all slots, addressed through a per-slot ``page_table``
+    pages shared by all slots (copy-on-write prefix sharing maps one page
+    into several tables), addressed through a per-slot ``page_table``
     (int32 arena page ids; entries past a stream's length stay 0, a valid —
-    masked — index). Scales are per (page, kv-head); ``slot_k_scale`` /
-    ``slot_v_scale`` keep each slot's admission-time scales so decode-era
-    appends quantize into the same range and stamp them onto fresh pages.
+    masked — index). Scales are per (page, kv-head) — each page is
+    quantized over its OWN content at admission, which is what makes a
+    shared prefix page bit-identical regardless of which stream wrote it.
+    ``slot_k_scale`` / ``slot_v_scale`` keep each slot's admission-time
+    running scales so decode-era appends quantize into a consistent range
+    and stamp it onto fresh pages; ``k_max`` / ``v_max`` track the slot's
+    decode-era magnitude maxima for the engine's proactive scale refresh.
     ``s_max`` bounds pages per slot (the page-table width), NOT reserved
     memory: a stream only ever holds the pages its tokens occupy. int8-only
     (the arena layout exists to halve streamed bytes; a bf16 arena would
@@ -119,6 +124,10 @@ def sublayer_cache_spec(cfg: ModelConfig, lay: SubLayer, batch: int, s_max: int,
                                       init="zeros", dtype=jnp.float32),
             "slot_v_scale": ParamSpec((batch, kv), ("batch", "kv_heads"),
                                       init="zeros", dtype=jnp.float32),
+            "k_max": ParamSpec((batch, kv), ("batch", "kv_heads"),
+                               init="zeros", dtype=jnp.float32),
+            "v_max": ParamSpec((batch, kv), ("batch", "kv_heads"),
+                               init="zeros", dtype=jnp.float32),
             "page_table": ParamSpec((batch, mp), ("batch", None),
                                     init="zeros", dtype=jnp.int32),
             "len": ParamSpec((batch,), ("batch",), init="zeros",

@@ -257,11 +257,16 @@ def prefill(params, cfg: ModelConfig, *, tokens=None, embeds=None, enc_embeds=No
     logits come from each row's final REAL token.
 
     Paged pools (``init_cache(paged=True)``) admit through THIS same dense
-    prefill on a page-aligned bucket-sized cache (one whole page multiple);
-    the engine then scatters the filled cache into freshly allocated arena
-    pages and stamps the admission scales per page
-    (``DecodeEngine._paged_write_fn``) — ``decode_step`` takes the paged
-    branch automatically when the cache carries a ``page_table``."""
+    prefill on a page-aligned bucket-sized FLOAT cache (``kv_quant=False``,
+    one whole page multiple); the engine's page scatter
+    (``DecodeEngine._paged_write_fn``) then quantizes each page over its own
+    content — per-(page, kv-head) scales are a pure function of the tokens a
+    page covers, so two streams admitting the same prefix write bit-identical
+    pages, the property copy-on-write prefix sharing rests on. Shared prefix
+    positions scatter to the trash page (their content already lives in the
+    arena under the registered stream's pages); only the private tail lands.
+    ``decode_step`` takes the paged branch automatically when the cache
+    carries a ``page_table``."""
     x, cache, _ = forward(params, cfg, tokens=tokens, embeds=embeds,
                           enc_embeds=enc_embeds, pos3=pos3, cache=cache,
                           mode="full", shard=shard, lora=lora,

@@ -79,6 +79,45 @@ def long_tail_token_trace(task_id: str, rps: float, horizon: float, *,
     return out
 
 
+def shared_prefix_token_trace(task_id: str, rps: float, horizon: float, *,
+                              prefix_len: int, prompt_len: int, vocab: int,
+                              shared_frac: float = 0.8, n_prefixes: int = 1,
+                              max_new: int = 8, seed: int = 0,
+                              slo_s: float | None = None,
+                              start: float = 0.0) -> list[Request]:
+    """Generative trace for the COW prefix-sharing path: ``shared_frac`` of
+    the requests carry one of ``n_prefixes`` fixed ``prefix_len``-token
+    system/few-shot prefixes followed by a short unique user suffix (total
+    length uniform in (prefix_len, prompt_len]); the rest carry fully random
+    prompts up to ``prompt_len``. This is the multi-task serving shape the
+    paper's memory argument targets — N co-resident streams repeating the
+    same system prompt — where an unshared paged pool stores the prefix N
+    times and a refcounted COW pool stores it once. ``max_new_tokens`` is
+    uniform in [1, max_new] like ``token_trace``."""
+    assert 0 < prefix_len < prompt_len
+    rng = np.random.RandomState(seed)
+    prefixes = [rng.randint(0, vocab, prefix_len).astype("int32")
+                for _ in range(max(1, n_prefixes))]
+    t, out = start, []
+    while True:
+        t += rng.exponential(1.0 / rps)
+        if t >= start + horizon:
+            break
+        new = int(rng.randint(1, max_new + 1))
+        if rng.rand() < shared_frac:
+            suffix = rng.randint(0, vocab, int(
+                rng.randint(1, prompt_len - prefix_len + 1))).astype("int32")
+            prompt = np.concatenate(
+                [prefixes[rng.randint(len(prefixes))], suffix])
+        else:
+            prompt = rng.randint(0, vocab, int(
+                rng.randint(1, prompt_len + 1))).astype("int32")
+        out.append(Request(
+            task_id, t, payload=prompt, tokens=float(len(prompt) + new),
+            max_new_tokens=new, slo=SLO(slo_s)))
+    return out
+
+
 def feature_trace(task_id: str, rps: float, horizon: float, *, input_len: int,
                   d_model: int, seed: int = 0, slo_s: float | None = None,
                   start: float = 0.0) -> list[Request]:

@@ -56,7 +56,9 @@ def decode_stats(requests) -> dict:
 def page_gauges(engine) -> dict:
     """Free/used KV-page gauges of a paged decode pool (zeros for dense) —
     the numbers an operator watches to size ``total_pages``: free and used
-    counts, deferred/preempted admissions, and current occupancy."""
+    counts, deferred/preempted admissions, current occupancy, and the
+    prefix-sharing dedup state (physical pages mapped by several streams,
+    pages saved right now, logical mappings, cumulative prefix hits)."""
     return {
         "paged": bool(getattr(engine, "paged", False)),
         "free_pages": engine.free_page_count(),
@@ -65,16 +67,25 @@ def page_gauges(engine) -> dict:
         "occupancy": round(engine.page_occupancy(), 4),
         "deferrals": getattr(engine, "deferrals", 0),
         "preemptions": getattr(engine, "preemptions", 0),
+        "shared_pages": engine.shared_page_count(),
+        "dedup_saved_pages": engine.dedup_saved_pages(),
+        "logical_pages": engine.logical_page_count(),
+        "prefix_hits": getattr(engine, "prefix_hits", 0),
+        "hol_bypasses": getattr(engine, "hol_bypasses", 0),
+        "scale_refreshes": getattr(engine, "scale_refreshes", 0),
     }
 
 
-def mixed_stats(requests, page_samples=None) -> dict:
+def mixed_stats(requests, page_samples=None, shared_samples=None) -> dict:
     """Split per-plane report for mixed pooled + generative serving (the
     event-loop plane): request-level latency for the pooled side, token-level
     TTFT/TPOT/throughput for the generative side. ``page_samples`` (the
     per-decode-tick KV-page occupancy fractions a ``ServeLoop`` collects on a
     paged pool) adds an occupancy p50/p95/max section — how full the arena
-    actually ran, the signal for sizing ``total_pages``."""
+    actually ran, the signal for sizing ``total_pages``. ``shared_samples``
+    (per-decode-tick dedup fractions: pages saved by prefix sharing over
+    logical page mappings) adds a sharing section — how much effective
+    capacity COW prefix sharing is buying on this workload."""
     pooled = [r for r in requests if r.max_new_tokens <= 0]
     gen = [r for r in requests if r.max_new_tokens > 0]
     out = {"pooled": latency_stats(pooled), "decode": decode_stats(gen)}
@@ -84,6 +95,13 @@ def mixed_stats(requests, page_samples=None) -> dict:
             "occupancy_p50": round(percentile(page_samples, 50), 4),
             "occupancy_p95": round(percentile(page_samples, 95), 4),
             "occupancy_max": round(float(np.max(page_samples)), 4),
+        }
+    if shared_samples:
+        out["kv_sharing"] = {
+            "samples": len(shared_samples),
+            "dedup_frac_p50": round(percentile(shared_samples, 50), 4),
+            "dedup_frac_p95": round(percentile(shared_samples, 95), 4),
+            "dedup_frac_max": round(float(np.max(shared_samples)), 4),
         }
     return out
 

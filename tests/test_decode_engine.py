@@ -316,11 +316,18 @@ def test_sampling_streams_independent_across_slots(cfg):
 # ---------------- int8 KV scale drift ----------------
 
 def test_int8_scale_drift_bounded():
-    """Scales are FIXED at prefill admission; decode-era K/V outside the
-    prompt-era range get clipped. Drive the decode tail to 3x the admission
-    magnitude and assert the attention output's divergence from the fp path
-    stays bounded (the limit documented in ``core.decode_engine``)."""
-    from repro.kernels import ops
+    """Dense-pool scales are FIXED at prefill admission; decode-era K/V
+    outside the prompt-era range get clipped. Drive the decode tail to 3x
+    the admission magnitude and assert the attention output's divergence
+    from the fp path stays bounded (the limit documented in
+    ``core.decode_engine``) — then show the layout the PAGED pool's
+    proactive refresh CONVERGES to (drifted tail pages stamped at the
+    refreshed per-(page, kv-head) range as they are written) holds the
+    no-drift tolerance where the clipped path degrades ~10x. This is the
+    steady-state bound: tokens clipped BEFORE the drift first crosses the
+    refresh threshold stay clipped (int8 codes cannot be un-clipped), so a
+    live stream lands between the two curves during the transient."""
+    from repro.kernels import ops, ref
     from repro.models.attention import decode_attention
     rng = np.random.RandomState(0)
     B, S_p, S_d, KV, hd = 2, 16, 48, 2, 8
@@ -329,6 +336,7 @@ def test_int8_scale_drift_bounded():
     v_p = rng.randn(B, S_p, KV, hd).astype(np.float32)
     kq, vq, ks, vs = ops.quantize_kv(jnp.asarray(k_p), jnp.asarray(v_p))
     ks, vs = np.asarray(ks), np.asarray(vs)
+    rels = {}
     for drift, bound in ((1.0, 0.06), (3.0, 0.85)):
         # decode-era tail at drift× the prompt magnitude, quantized with the
         # ADMISSION-ERA scales exactly as self_attention_decode does
@@ -348,6 +356,45 @@ def test_int8_scale_drift_bounded():
             jnp.asarray(np.concatenate([v_p, v_d], 1)), jnp.asarray(lens)))
         rel = np.linalg.norm(o_q8 - o_fp) / np.linalg.norm(o_fp)
         assert rel < bound, (drift, rel)
+        rels[drift] = rel
+
+        # REFRESHED path: lay the same stream out as pages (the paged pool
+        # layout) with prompt pages at the admission scale and tail pages
+        # re-quantized at the drifted range — what the engine's proactive
+        # refresh stamps via the per-(page, kv-head) scale storage
+        ps = 16
+        P = B * (S // ps) + 1
+        kp_pages = np.zeros((P, KV, ps, hd), np.int8)
+        vp_pages = np.zeros((P, KV, ps, hd), np.int8)
+        pks = np.zeros((P, KV), np.float32)
+        pvs = np.zeros((P, KV), np.float32)
+        ptab = np.zeros((B, S // ps), np.int32)
+        nxt = 1
+        for b in range(B):
+            k_row = np.concatenate([k_p[b], k_d[b]], 0)     # (S, KV, hd)
+            v_row = np.concatenate([v_p[b], v_d[b]], 0)
+            for j in range(S // ps):
+                kpg = k_row[j * ps:(j + 1) * ps].transpose(1, 0, 2)
+                vpg = v_row[j * ps:(j + 1) * ps].transpose(1, 0, 2)
+                if j * ps < S_p:                # prompt page: admission scale
+                    ksc, vsc = ks[b], vs[b]
+                else:                           # tail page: refreshed scale
+                    ksc = np.abs(kpg).max(axis=(1, 2)) / 127.0
+                    vsc = np.abs(vpg).max(axis=(1, 2)) / 127.0
+                kp_pages[nxt] = np.clip(np.round(
+                    kpg / np.maximum(ksc, 1e-8)[:, None, None]), -127, 127)
+                vp_pages[nxt] = np.clip(np.round(
+                    vpg / np.maximum(vsc, 1e-8)[:, None, None]), -127, 127)
+                pks[nxt], pvs[nxt] = ksc, vsc
+                ptab[b, j] = nxt
+                nxt += 1
+        o_rf = np.asarray(ref.paged_decode_attention_ref(
+            jnp.asarray(q), jnp.asarray(kp_pages), jnp.asarray(vp_pages),
+            jnp.asarray(pks), jnp.asarray(pvs), jnp.asarray(ptab),
+            jnp.asarray(lens)))
+        rel_rf = np.linalg.norm(o_rf - o_fp) / np.linalg.norm(o_fp)
+        assert rel_rf < 0.1, (drift, rel_rf)    # no-drift tolerance, always
+    assert rels[3.0] > 5 * rels[1.0]            # the gap refresh closes
 
 
 def test_int8_long_decode_divergence_bounded(cfg):

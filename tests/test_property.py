@@ -130,3 +130,96 @@ def test_int8_quantization_error_bound(xs):
     back = dequantize_int8(q, s)
     bound = float(jnp.max(jnp.abs(x))) / 127.0 * 0.5 + 1e-6
     assert float(jnp.max(jnp.abs(back - x))) <= bound + 1e-5
+
+
+# ---------------- refcounted paged KV pool (COW prefix sharing) ----------------
+
+_PAGED_FM = []          # built once, lazily (a PhysicalFM is expensive)
+
+
+def _paged_fm():
+    if not _PAGED_FM:
+        from repro.configs import get_config, reduced
+        from repro.core.physical import PhysicalFM
+        fm = PhysicalFM(reduced(get_config("stablelm-1.6b")), seed=0,
+                        input_len=8, lora_rank=4, lora_impl="segmented",
+                        seg_block_t=8)
+        fm.adapters.new("lora0", seed=0)
+        _PAGED_FM.append(fm)
+    return _PAGED_FM[0]
+
+
+def _check_page_invariants(eng):
+    """The refcounted free-list contract: every usable page's refcount equals
+    the number of live page-table mappings of it; a page sits on the free
+    list exactly when its refcount is zero (and exactly once); the prefix
+    registry only references live pages; live slots hold enough pages for
+    their tokens; the trash page is never mapped."""
+    import collections
+    from repro.core.decode_engine import TRASH_PAGE
+    held = [int(p) for s in range(eng.num_slots)
+            for p in eng._ptab[s, :eng._held[s]]]
+    c = collections.Counter(held)
+    assert TRASH_PAGE not in c
+    free = eng._free_pages
+    free_set = set(free)
+    assert len(free) == len(free_set), "duplicate free-list entry"
+    for p in range(1, eng.total_pages):
+        assert eng._page_refs[p] == c.get(p, 0), \
+            f"page {p}: refcount {eng._page_refs[p]} != {c.get(p, 0)} mappings"
+        assert (eng._page_refs[p] == 0) == (p in free_set), \
+            f"page {p}: free-list membership disagrees with refcount"
+    for key, p in eng._prefix_registry.items():
+        assert eng._page_refs[p] > 0 and eng._page_key.get(p) == key
+    for s in range(eng.num_slots):
+        slot = eng.slots[s]
+        # done-but-unretired slots stop being topped up (their residual
+        # writes land in the trash page), so only LIVE slots must hold
+        # pages covering their token count
+        if slot is not None and not slot.done:
+            need = -(-max(int(eng._lens[s]), 1) // eng.page_size)
+            assert eng._held[s] >= need
+
+
+@settings(max_examples=8, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(0, 3), st.integers(0, 7)),
+                    min_size=4, max_size=18))
+def test_paged_refcounts_never_leak_or_double_free(ops):
+    """Randomized join/decode/preempt/cancel sequences over shared-prefix
+    prompts: the refcounted free list never double-frees or leaks a page,
+    preempting/cancelling a sharer never touches another stream's mapped
+    pages, and a final drain returns the arena to fully free."""
+    from repro.core.decode_engine import DecodeEngine
+    fm = _paged_fm()
+    cfg = fm.cfg
+    eng = DecodeEngine(fm, num_slots=4, prompt_len=16, max_new=6, chunk=2,
+                       paged=True, page_size=4, total_pages=17,
+                       prompt_buckets=(4, 16))
+    rng = np.random.RandomState(0)
+    prefixes = [rng.randint(0, cfg.vocab_size, 8).astype(np.int32)
+                for _ in range(2)]
+    rid = 0
+    for op, a in ops:
+        live = [i for i, s in enumerate(eng.slots) if s is not None]
+        if op == 0:                                  # join (shared prefix)
+            sfx = np.random.RandomState(a).randint(
+                0, cfg.vocab_size, 1 + a % 5).astype(np.int32)
+            eng.join(f"t{rid}", np.concatenate([prefixes[a % 2], sfx]),
+                     adapter_id="lora0", max_new_tokens=1 + a % 6, rid=rid)
+            rid += 1
+        elif op == 1:
+            eng.step_chunk()
+        elif op == 2 and live:                       # preempt a stream
+            eng._preempt(live[a % len(live)])
+        elif op == 3 and live:                       # cancel a stream
+            eng.leave(live[a % len(live)])
+        _check_page_invariants(eng)
+    for _ in range(200):
+        if not (eng.active_count() or eng.pending_count()):
+            break
+        eng.step_chunk()
+        _check_page_invariants(eng)
+    assert not (eng.active_count() or eng.pending_count())
+    assert eng.free_page_count() == eng.total_pages - 1
+    assert (eng._page_refs[1:] == 0).all()
+    assert not eng._prefix_registry and not eng._page_key
