@@ -1,0 +1,270 @@
+"""Chaos benchmark: the fault-tolerant serving plane under injected faults.
+
+One mixed pooled + generative workload runs twice over identical traces:
+
+  * ``baseline`` — no injected faults (deadline enforcement still active:
+    the ~10% infeasible-deadline requests are shed in BOTH runs);
+  * ``chaos``    — ``serving.faults.ChaosInjector`` arms, mid-run: a NaN'd
+    LoRA adapter (one gen task's streams quarantine via the in-graph
+    finite-logits flag), a raising task head (executor isolates it to that
+    task's rows), page-allocator pressure (forced deferrals/preemptions
+    through the admission gate), and a stalled engine (the loop watchdog
+    trips and degrades gracefully).
+
+Acceptance asserts, per ISSUE 6:
+  * zero crashes / zero wedges — both runs terminate with EVERY trace
+    request reaching a terminal state;
+  * EXACT token parity — every clean stream (feasible deadline, unfaulted
+    task) that completes in the chaos run produces token-for-token the same
+    output as in the fault-free run (greedy rows are independent, so faults
+    must not perturb co-batched streams at all);
+  * zero steady-state recompiles — the whole chaos run (NaN adapter stack
+    rebuild included) adds no jit keys after warmup;
+  * clean-traffic goodput within 10% of baseline is RECORDED
+    (``goodput_within_10pct``; soft on CPU, where wall-clock noise between
+    two timed runs exceeds the bound).
+
+Results land under the "chaos" section of ``BENCH_serving.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from common import write_serving_section
+from repro.configs import get_config, reduced
+from repro.core.physical import PhysicalFM
+from repro.core.request import SLO, Request
+from repro.core.server import FMplexServer
+from repro.core.vfm import TaskExtensions
+from repro.serving.faults import (ChaosEvent, ChaosInjector, NaNAdapterFault,
+                                  PagePressureFault, RaisingHeadFault,
+                                  StallFault)
+from repro.serving.loadgen import feature_trace, merge, token_trace
+from repro.serving.metrics import failure_counters, mixed_stats
+
+PROMPT_LEN = 16
+MAX_NEW = 24
+HORIZON = 2.0
+GEN_RPS = 8.0                  # per clean gen task
+CHAOS_RPS = 1.0                # NaN'd task: ~5% of the stream volume
+POOLED_RPS = 30.0
+INFEASIBLE_FRAC = 0.10
+WATCHDOG_S = 0.12
+
+
+def build(seed: int = 0):
+    cfg = reduced(get_config("stablelm-1.6b"))
+    fm = PhysicalFM(cfg, seed=seed, input_len=PROMPT_LEN, lora_rank=4)
+    fm.calibrate(sizes=(1, 2, 4, 8))
+    srv = FMplexServer("s0")
+    srv.deploy_fm("fm0", fm, scheduler="bfq")
+    rng = np.random.RandomState(seed)
+    w = rng.randn(cfg.d_model, 4).astype(np.float32) * 0.1
+    w2 = rng.randn(cfg.d_model, 4).astype(np.float32) * 0.1
+    srv.bind_task("pooled", "fm0", weight=2.0,
+                  extensions=TaskExtensions(decoder=lambda f: f @ w))
+    # the head the chaos run crashes; its OWN requests fail, nobody else's
+    srv.bind_task("badhead", "fm0", weight=1.0,
+                  extensions=TaskExtensions(decoder=lambda f: f @ w2))
+    for i, tid in enumerate(("gen0", "gen1", "chaosgen")):
+        fm.adapters.new(f"lora{i}", seed=i)
+        srv.bind_task(tid, "fm0", weight=1.0,
+                      extensions=TaskExtensions(adapter_id=f"lora{i}"))
+    srv.decode_engine("fm0", num_slots=4, prompt_len=PROMPT_LEN,
+                      max_new=MAX_NEW, chunk=4, paged=True, page_size=8)
+    loop = srv.serve_loop("fm0", watchdog_stall_s=WATCHDOG_S)
+    return srv, cfg, loop
+
+
+def build_trace(cfg):
+    gen = merge([
+        token_trace("gen0", GEN_RPS, HORIZON, prompt_len=PROMPT_LEN,
+                    vocab=cfg.vocab_size, max_new=MAX_NEW, seed=1,
+                    min_prompt_len=4, infeasible_frac=INFEASIBLE_FRAC),
+        token_trace("gen1", GEN_RPS, HORIZON, prompt_len=PROMPT_LEN,
+                    vocab=cfg.vocab_size, max_new=MAX_NEW, seed=2,
+                    min_prompt_len=4, infeasible_frac=INFEASIBLE_FRAC),
+        token_trace("chaosgen", CHAOS_RPS, HORIZON, prompt_len=PROMPT_LEN,
+                    vocab=cfg.vocab_size, max_new=MAX_NEW, seed=3,
+                    min_prompt_len=4),
+    ])
+    # a short Poisson horizon can sample ZERO chaosgen arrivals; the
+    # quarantine assertions need the NaN'd task present deterministically
+    rng = np.random.RandomState(99)
+    gen += [Request("chaosgen", HORIZON * f,
+                    payload=rng.randint(0, cfg.vocab_size,
+                                        PROMPT_LEN).astype("int32"),
+                    tokens=float(PROMPT_LEN + 4), max_new_tokens=4)
+            for f in (0.1, 0.35)]
+    pooled = merge([
+        feature_trace("pooled", POOLED_RPS, HORIZON, input_len=PROMPT_LEN,
+                      d_model=cfg.d_model, seed=4),
+        feature_trace("badhead", POOLED_RPS / 3.0, HORIZON,
+                      input_len=PROMPT_LEN, d_model=cfg.d_model, seed=5),
+    ])
+    return merge([gen, pooled])
+
+
+def chaos_events():
+    return [
+        # poisoned adapter for the whole run: every chaosgen stream must
+        # quarantine, no clean stream may notice
+        ChaosEvent(at=0.0, fault=NaNAdapterFault("lora2")),
+        # head crash for the first 60%: later badhead requests recover
+        ChaosEvent(at=0.05, fault=RaisingHeadFault("badhead"),
+                   duration=HORIZON * 0.6),
+        # page famine mid-run: deferrals/preemptions, never a wedge
+        ChaosEvent(at=HORIZON * 0.25, fault=PagePressureFault(0.6),
+                   duration=HORIZON * 0.2),
+        # stalled engine long enough for >= 1 watchdog trip
+        ChaosEvent(at=HORIZON * 0.55, fault=StallFault(),
+                   duration=max(3.0 * WATCHDOG_S, HORIZON * 0.15)),
+    ]
+
+
+def _clone(r: Request) -> Request:
+    return Request(r.task_id, r.arrival, payload=r.payload, tokens=r.tokens,
+                   max_new_tokens=r.max_new_tokens,
+                   slo=SLO(r.slo.deadline_s))
+
+
+def run_once(loop, trace, max_wall, injector=None):
+    clones = [_clone(r) for r in trace]
+    keymap = {c.rid: i for i, c in enumerate(clones)}
+    t0 = time.perf_counter()
+    served = loop.run(clones, max_wall=max_wall,
+                      on_tick=injector.on_tick if injector else None)
+    wall = time.perf_counter() - t0
+    if injector is not None:
+        injector.restore_all(loop)
+    return {keymap[r.rid]: r for r in served if r.rid in keymap}, wall
+
+
+def run_all(out_path: str = None, smoke: bool = False):
+    global HORIZON, GEN_RPS, POOLED_RPS
+    if smoke:
+        HORIZON, GEN_RPS, POOLED_RPS = 0.8, 6.0, 20.0
+    srv, cfg, loop = build()
+    eng = srv.decode_engine("fm0")
+    fm = srv.fms["fm0"]
+    ex = srv.executors["fm0"]
+    max_wall = 60.0 if smoke else 300.0
+
+    loop.warmup(pooled_task="pooled", gen_task="gen0", pooled_n=8)
+    compiles = eng.compile_count() + fm.compile_count()
+
+    trace = build_trace(cfg)
+    gen_idx = {i for i, r in enumerate(trace) if r.max_new_tokens > 0}
+    infeasible = {i for i in gen_idx
+                  if trace[i].slo.deadline_s is not None
+                  and trace[i].slo.deadline_s < 1e-3}
+    clean = {i for i in gen_idx - infeasible
+             if trace[i].task_id in ("gen0", "gen1")}
+
+    def fresh_sched():
+        srv.deploy_fm("fm0", profile=srv.profiles["fm0"], scheduler="bfq")
+
+    fresh_sched()
+    base, base_wall = run_once(loop, trace, max_wall)
+
+    fresh_sched()
+    loop.failures.clear()
+    injector = ChaosInjector(chaos_events())
+    chaos, chaos_wall = run_once(loop, trace, max_wall, injector=injector)
+    fails = failure_counters(chaos.values(), loop=loop, engine=eng,
+                             executor=ex)
+    recompiles = eng.compile_count() + fm.compile_count() - compiles
+
+    # -- zero wedges / zero crashes: every request reached a terminal state
+    # in both runs and the engine fully drained
+    assert len(base) == len(trace), \
+        f"baseline dropped requests: {len(base)}/{len(trace)}"
+    assert len(chaos) == len(trace), \
+        f"chaos run dropped requests: {len(chaos)}/{len(trace)}"
+    for i, r in chaos.items():
+        assert r.finish_time is not None, f"non-terminal request {i}"
+    assert eng.active_count() == 0 and eng.pending_count() == 0, \
+        "engine did not drain"
+
+    # -- the chaos run actually exercised every fault path
+    assert fails["quarantined"] > 0, "NaN adapter produced no quarantines"
+    assert fails["head_failed"] > 0, "raising head produced no failures"
+    assert fails["watchdog_trips"] > 0, "stall produced no watchdog trip"
+    assert fails["deadline_shed"] + fails["deadline_cancelled"] > 0, \
+        "infeasible deadlines produced no shedding"
+    # every chaosgen stream that ran is quarantined, never 'ok'
+    for i, r in chaos.items():
+        if trace[i].task_id == "chaosgen":
+            assert r.status != "ok", f"NaN'd stream {i} completed ok"
+
+    # -- EXACT token parity: clean streams completing in both runs emit
+    # identical tokens (greedy rows are independent — faults in co-batched
+    # streams must not perturb them)
+    compared = mismatched = 0
+    for i in clean:
+        rb, rc = base.get(i), chaos.get(i)
+        if rb is None or rc is None or rb.status != "ok" \
+                or rc.status != "ok":
+            continue
+        compared += 1
+        if not np.array_equal(np.asarray(rb.result), np.asarray(rc.result)):
+            mismatched += 1
+    assert compared > 0, "no clean streams completed in both runs"
+    assert mismatched == 0, \
+        f"{mismatched}/{compared} clean streams lost token parity"
+
+    # -- goodput for clean traffic, chaos vs baseline (recorded; soft)
+    def clean_goodput(res, wall):
+        toks = sum(len(r.result) for i, r in res.items()
+                   if i in clean and r.status == "ok"
+                   and r.result is not None)
+        return toks / max(wall, 1e-9)
+
+    g_base = clean_goodput(base, base_wall)
+    g_chaos = clean_goodput(chaos, chaos_wall)
+    ratio = g_chaos / max(g_base, 1e-9)
+
+    ms = mixed_stats([r for r in chaos.values()],
+                     page_samples=loop.page_samples,
+                     shared_samples=loop.shared_samples, failures=fails)
+    out = {
+        "config": cfg.name,
+        "horizon_s": HORIZON,
+        "trace_len": len(trace),
+        "clean_streams": len(clean),
+        "infeasible_deadline_frac": INFEASIBLE_FRAC,
+        "chaos_events": [(t, name, act) for t, name, act in injector.log],
+        "baseline": {"served": len(base),
+                     "clean_goodput_tokens_per_s": round(g_base, 2)},
+        "chaos": {"served": len(chaos),
+                  "clean_goodput_tokens_per_s": round(g_chaos, 2),
+                  "stats": ms},
+        "failures": fails,
+        "parity": {"compared": compared, "mismatched": mismatched},
+        "clean_goodput_ratio": round(ratio, 4),
+        "goodput_within_10pct": bool(ratio >= 0.9),
+        "steady_state_recompiles_chaos": recompiles,
+    }
+    print(f"served: base={len(base)}/{len(trace)} "
+          f"chaos={len(chaos)}/{len(trace)}")
+    print(f"failures: { {k: v for k, v in fails.items() if v} }")
+    print(f"parity: {compared} clean streams compared, "
+          f"{mismatched} mismatched")
+    print(f"clean goodput: base={g_base:.1f} tok/s chaos={g_chaos:.1f} "
+          f"tok/s (x{ratio:.2f}, within 10%: {ratio >= 0.9})")
+    print(f"steady-state recompiles across chaos: {recompiles}")
+    assert recompiles == 0, "chaos run must not add jit keys"
+    write_serving_section("chaos", out, out_path)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: short horizon, lighter rates")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    run_all(out_path=args.out, smoke=args.smoke)

@@ -25,6 +25,12 @@ defers instead of crashing on bursts) and reports the free/used page gauges.
   PYTHONPATH=src python examples/serve_multitask.py --decode --tasks 4 --rps 10
   PYTHONPATH=src python examples/serve_multitask.py --decode --paged --tasks 4 --rps 10
   PYTHONPATH=src python examples/serve_multitask.py --mixed --paged --tasks 4 --rps 30
+  PYTHONPATH=src python examples/serve_multitask.py --chaos --paged --tasks 4 --rps 30
+
+``--chaos`` runs the mixed plane with ``serving.faults`` armed (a NaN'd
+adapter, a raising head, an engine stall, infeasible deadlines) and reports
+the failure-plane counters — every fault lands as a terminal request status,
+never a crash.
 """
 import argparse
 
@@ -59,7 +65,8 @@ def decode_main(args):
     from repro.serving.loadgen import merge, token_trace
 
     srv, cfg = build_server(args.tasks, arch="stablelm-1.6b",
-                            input_len=args.prompt_len, scheduler="bfq")
+                            input_len=args.prompt_len, scheduler="bfq",
+                            slo_s=None)   # cold compiles inside measured loop
     eng = srv.decode_engine("fm0", num_slots=8, prompt_len=args.prompt_len,
                             max_new=args.max_new, chunk=4,
                             **_paged_kwargs(args))
@@ -103,7 +110,8 @@ def mixed_main(args):
     from repro.serving.metrics import mixed_stats
 
     srv, cfg = build_server(args.tasks, arch="stablelm-1.6b",
-                            input_len=args.prompt_len, scheduler="bfq")
+                            input_len=args.prompt_len, scheduler="bfq",
+                            slo_s=None)   # --chaos demos deadline enforcement
     eng = srv.decode_engine("fm0", num_slots=8, prompt_len=args.prompt_len,
                             max_new=args.max_new, chunk=4,
                             **_paged_kwargs(args))
@@ -146,6 +154,70 @@ def mixed_main(args):
               f"p50={sh.get('dedup_frac_p50')} | {page_gauges(eng)}")
 
 
+def chaos_main(args):
+    """Fault-tolerant serving demo: the mixed event-loop workload with the
+    chaos harness armed — one task's adapter NaN'd (its streams quarantine,
+    co-batched streams unaffected), one task's head raising (only its rows
+    fail), a tenth of the generative requests carrying infeasible deadlines
+    (shed before they cost a prefill), and a mid-run engine stall the loop
+    watchdog recovers from. Prints the failure-plane counters next to the
+    usual serving stats."""
+    from repro.serving.faults import (ChaosEvent, ChaosInjector,
+                                      NaNAdapterFault, RaisingHeadFault,
+                                      StallFault)
+    from repro.serving.loadgen import feature_trace, merge, token_trace
+    from repro.serving.metrics import failure_counters, mixed_stats
+
+    srv, cfg = build_server(max(args.tasks, 3), arch="stablelm-1.6b",
+                            input_len=args.prompt_len, scheduler="bfq",
+                            slo_s=None)
+    n_tasks = max(args.tasks, 3)
+    eng = srv.decode_engine("fm0", num_slots=8, prompt_len=args.prompt_len,
+                            max_new=args.max_new, chunk=4,
+                            **_paged_kwargs(args))
+    loop = srv.serve_loop("fm0", watchdog_stall_s=0.25)
+    loop.warmup(pooled_task=f"task{n_tasks - 1}", gen_task="task0")
+    loop.ticks.clear()
+    loop.failures.clear()
+    # task0 streams get the NaN'd adapter; task{n-1}'s head raises;
+    # the rest is clean traffic with 10% infeasible deadlines
+    traces = [token_trace(f"task{i}", args.rps / n_tasks / 4, args.seconds,
+                          prompt_len=args.prompt_len, min_prompt_len=2,
+                          vocab=cfg.vocab_size, max_new=args.max_new,
+                          seed=i, infeasible_frac=0.1)
+              for i in range(max(1, n_tasks // 2))]
+    traces += [feature_trace(f"task{i}", args.rps / n_tasks, args.seconds,
+                             input_len=args.prompt_len, d_model=cfg.d_model,
+                             seed=i) for i in range(n_tasks // 2, n_tasks)]
+    injector = ChaosInjector([
+        ChaosEvent(at=0.0, fault=NaNAdapterFault("lora0")),
+        ChaosEvent(at=args.seconds * 0.1,
+                   fault=RaisingHeadFault(f"task{n_tasks - 1}"),
+                   duration=args.seconds * 0.5),
+        ChaosEvent(at=args.seconds * 0.5, fault=StallFault(),
+                   duration=1.0),
+    ])
+    served = loop.run(merge(traces), on_tick=injector.on_tick)
+    injector.restore_all(loop)
+    fails = failure_counters(served, loop=loop, engine=eng,
+                             executor=srv.executors["fm0"])
+    s = mixed_stats(served, page_samples=loop.page_samples,
+                    shared_samples=loop.shared_samples, failures=fails)
+    p, d = s["pooled"], s["decode"]
+    print(f"chaos: {len(served)} served, ticks={dict(loop.ticks)}")
+    print(f"  chaos events: {injector.log}")
+    print(f"  failures: { {k: v for k, v in fails.items() if v} }")
+    if p.get("n"):
+        print(f"  pooled (ok): n={p['n']} p50={p['p50_ms']:.1f}ms "
+              f"p99={p['p99_ms']:.1f}ms")
+    if d.get("n"):
+        print(f"  decode (ok): n={d['n']} failed={d['n_failed']} "
+              f"{d['tokens_out']} tokens ({d['tokens_per_s']:.1f} tok/s, "
+              f"goodput {d['goodput_tokens_per_s']:.1f} tok/s)")
+    print(f"  engine: {eng.steps} decode steps, {eng.compile_count()} "
+          f"jitted executables (flat under chaos)")
+
+
 def _paged_kwargs(args) -> dict:
     if not args.paged:
         return {}
@@ -165,6 +237,9 @@ def main():
                     help="generative serving via the DecodeEngine")
     ap.add_argument("--mixed", action="store_true",
                     help="pooled + generative traffic through one event loop")
+    ap.add_argument("--chaos", action="store_true",
+                    help="mixed traffic with the chaos-injection harness "
+                         "armed (NaN adapter, raising head, engine stall)")
     ap.add_argument("--paged", action="store_true",
                     help="block-paged int8 KV pool (pages on demand, "
                          "memory-aware admission) instead of dense slots")
@@ -176,7 +251,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     args = ap.parse_args()
-    if args.mixed:
+    if args.chaos:
+        chaos_main(args)
+    elif args.mixed:
         mixed_main(args)
     elif args.decode:
         decode_main(args)

@@ -108,6 +108,17 @@ class SchedulerBase:
                     best = r
         return best
 
+    def on_cancel(self, vfms: dict[str, VFM], req: Request) -> bool:
+        """Remove a still-QUEUED request (client cancel / deadline shed)
+        before it is ever dispatched. Returns False when the request is not
+        queued (already dispatched — nothing to unwind here). Baselines
+        without tag chains need nothing more; BFQ refunds the arrival tags."""
+        v = vfms.get(req.task_id)
+        if v is None or req not in v.queue:
+            return False
+        v.queue.remove(req)
+        return True
+
     @staticmethod
     def _pop(vfms, selected):
         for r in selected:
@@ -253,6 +264,28 @@ class BFQ(SchedulerBase):
                     prev = r.finish_tag
                 self._tail[tid] = prev if vfm.queue else f
         self.v = max([self.v] + list(self._last_dispatched.values()))
+
+    def on_cancel(self, vfms: dict[str, VFM], req: Request) -> bool:
+        """Cancel refund: a queued request's arrival advanced the task's
+        enqueue tail (Eqs. 1-2), so every request queued BEHIND it chains off
+        an l(1)·tokens/w slice of service the task will now never receive —
+        a shed/cancelled request would permanently distort the task's fair
+        share. Removing it re-chains the remaining queue off the task's last
+        DISPATCHED finish (exactly the Eq. 3 re-chain ``on_complete`` and
+        ``charge_tokens`` perform), restoring the tags to what they would
+        have been had the request never arrived."""
+        if not super().on_cancel(vfms, req):
+            return False
+        tid = req.task_id
+        vfm = vfms[tid]
+        l1 = self.profile.l(1)
+        prev = self._last_dispatched.get(tid, 0.0)
+        for r in vfm.queue:
+            r.start_tag = max(prev, r.v_at_arrival)
+            r.finish_tag = r.start_tag + l1 * max(r.tokens, 1e-9) / vfm.weight
+            prev = r.finish_tag
+        self._tail[tid] = prev
+        return True
 
     def task_vtime(self, task_id: str) -> float:
         return self._last_dispatched.get(task_id, 0.0)

@@ -135,6 +135,44 @@ refresh targets (the tail page is always private). Dense decodes far beyond a ``
 hundred tokens should either re-admit (prefill on the generated prefix
 refreshes scales — the paged preemption path does exactly this) or use
 ``kv_quant=False``.
+
+**Failure semantics.** Every stream leaves the engine through ``leave`` (the
+single retire path: slot freed, pages refcount-released, registry entries
+dropped when their last reference goes) with a terminal ``DecodeSlot.status``
+(``core.request`` statuses); deferred joins that never reach a slot leave
+through the ``rejected`` list instead. The exit paths:
+
+  * ``ok`` — budget reached or EOS. Pages freed at retire; nothing refunded
+    (the stream's chunks were real device work).
+  * ``quarantined`` — the in-graph per-slot finite-logits flag (AND-reduced
+    across the chunk inside the decode ``lax.scan``, synced with the chunk's
+    tokens: zero extra D2H round trips, no new jit keys — the same pattern
+    as the scale-drift flag) came back False, or the admission prefill's
+    logits were non-finite. A poisoned stream (NaN'd adapter, Inf
+    activations) retires at the END of its chunk; co-batched rows are
+    per-slot independent (attention, LoRA and sampling are all row-local),
+    so their token streams are bit-identical to a fault-free run. A
+    quarantined ADMISSION never allocates pages, never writes the pool and
+    never registers its prefix — NaN K/V cannot enter the COW registry.
+  * ``deadline_cancelled`` — a live slot (or a preempted resume entry) ran
+    past ``DecodeSlot.deadline``; marked done on chunk entry and retired
+    through the normal sweep, partial tokens preserved.
+  * ``deadline_shed`` — a deferred join expired in the pending queue before
+    ever being admitted; no pages were held, nothing to free.
+  * ``rejected_stranded`` — a stranded deferred join (its shared-prefix
+    discount was released and it can never fit, see ``_viable_pending``)
+    past its deadline, or force-shed by the serve loop's wedge recovery.
+    Stranded entries WITHOUT a deadline still idle (a later re-registration
+    can unstrand them); only a fully wedged engine raises.
+  * ``cancelled`` — ``cancel(rid)`` unwound the stream wherever it lived:
+    live slot (retired via ``leave``, pages freed), pending entry (popped,
+    nothing held), or preempted resume (popped, pages already freed at
+    preemption).
+
+Admissions are recorded in ``admitted_log`` (drained by
+``ServeLoop.take_admitted``-style callers) so schedulers can charge prompt
+tokens when the prefill ACTUALLY runs — a request cancelled or shed while
+deferred was never charged and cannot distort fair shares.
 """
 from __future__ import annotations
 
@@ -202,6 +240,8 @@ class DecodeSlot:
     done: bool = False
     prompt: Optional[np.ndarray] = None   # admitted prompt (paged: requeue)
     adapter_id: Optional[str] = None
+    deadline: float = float("inf")        # wall-clock cancel point (inf: none)
+    status: str = "ok"                    # terminal status (core.request)
 
 
 @dataclasses.dataclass
@@ -214,6 +254,8 @@ class _PendingJoin:
     rid: int
     eos_id: Optional[int]
     resume: Optional[DecodeSlot] = None   # preempted stream being re-admitted
+    deadline: float = float("inf")
+    status: str = "ok"                    # stamped when rejected terminally
 
 
 class DecodeEngine:
@@ -318,6 +360,15 @@ class DecodeEngine:
         self._seg_dev = None        # device-uploaded (perm, inv, blocks)
         self.steps = 0              # decode steps executed (all slots)
         self.last_chunk_s = 0.0
+        # failure-semantics state (module docstring, failure section)
+        self.rejected: list[_PendingJoin] = []   # terminally rejected joins
+        self.admitted_log: list[tuple[int, str, int]] = []  # (rid, task, len)
+        self.admissions = 0          # streams admitted into slots (ever)
+        self.quarantines = 0         # streams retired on non-finite logits
+        self.deadline_cancels = 0    # mid-flight (slot/resume) expirations
+        self.deadline_sheds = 0      # pending entries expired unadmitted
+        self.stranded_rejections = 0  # stranded entries terminally rejected
+        self.cancels = 0             # client cancel() unwinds
 
     # ---- occupancy ----
     def free_slots(self) -> list[int]:
@@ -581,7 +632,10 @@ class DecodeEngine:
                     adapter_idx=adapter_idx, lora_impl=impl, lora_seg=seg,
                     seq_lens=true_len)
                 first, rng_key = sample(logits, rng_key)
-                return first, rng_key, cache
+                # numeric-health flag rides the admission's existing host
+                # sync: a non-finite prefill quarantines at admission, before
+                # any page allocation or prefix registration
+                return first, lm.finite_logits(logits), rng_key, cache
 
             self._jit_prefill[key] = run
         return self._jit_prefill[key]
@@ -756,15 +810,23 @@ class DecodeEngine:
                            "block_t": bt}
 
                 def body(carry, _):
-                    pool, tok, keys = carry
+                    # the per-slot finite flag AND-accumulates through the
+                    # scan carry (logits are per-step values — unlike the
+                    # drift trackers they cannot be read back post-scan), so
+                    # a single NaN step anywhere in the chunk quarantines the
+                    # stream; it is a traced OUTPUT synced with the chunk's
+                    # tokens — no extra D2H syncs, no new jit keys
+                    pool, tok, keys, fin = carry
                     logits, pool = lm.decode_step(
                         params, cfg, tokens=tok, cache=pool, lora=lora_stack,
                         adapter_idx=adapter_idx, lora_impl=impl, lora_seg=seg)
+                    fin = fin & lm.finite_logits(logits)
                     nxt, keys = sample(logits, keys)
-                    return (pool, nxt, keys), nxt
+                    return (pool, nxt, keys, fin), nxt
 
-                (pool, tok, keys), out = jax.lax.scan(
-                    body, (pool, tokens, keys), None, length=chunk)
+                fin0 = jnp.ones((nslots,), jnp.bool_)
+                (pool, tok, keys, fin), out = jax.lax.scan(
+                    body, (pool, tokens, keys, fin0), None, length=chunk)
                 drift = jnp.zeros((nslots,), jnp.bool_)
                 if refresh_thr is not None:
                     for sub in pool:
@@ -774,7 +836,7 @@ class DecodeEngine:
                                 (sub["v_max"] > refresh_thr * jnp.maximum(
                                     sub["slot_v_scale"], 1e-8))
                             drift = drift | jnp.any(o, axis=(0, 2))
-                return pool, tok, keys, out.T, drift         # (slots, chunk)
+                return pool, tok, keys, out.T, drift, fin    # (slots, chunk)
 
             self._jit_decode[key] = jax.jit(run, donate_argnums=donate)
         return self._jit_decode[key]
@@ -810,7 +872,8 @@ class DecodeEngine:
     # ---- serving surface ----
     def join(self, task_id: str, prompt: np.ndarray, *,
              adapter_id: Optional[str] = None, max_new_tokens: int = 8,
-             rid: int = -1, eos_id: Optional[int] = None) -> int:
+             rid: int = -1, eos_id: Optional[int] = None,
+             deadline: Optional[float] = None) -> int:
         """Admit one request: prefill its prompt (LoRA applied, K/V int8-
         quantized in-graph), scatter it into a free slot (paged: into freshly
         allocated pages), produce the first token. Returns the slot index.
@@ -834,7 +897,9 @@ class DecodeEngine:
         req = _PendingJoin(task_id=task_id, prompt=prompt,
                            adapter_id=adapter_id,
                            max_new_tokens=max_new_tokens, rid=rid,
-                           eos_id=eos_id)
+                           eos_id=eos_id,
+                           deadline=float("inf") if deadline is None
+                           else float(deadline))
         if self.paged and not self.can_admit(len(prompt), prompt=prompt,
                                              adapter_id=adapter_id):
             # deferral must be able to END: a request whose prompt bucket +
@@ -889,13 +954,26 @@ class DecodeEngine:
         cap = self.fm.adapters.capacity()
         aslot = self.fm.adapters.index(req.adapter_id)
         perm, inv, blocks = self._prefill_segments(aslot, cap, plen)
-        first, key, cache = self._prefill_fn(cap, plen)(
+        first, fin, key, cache = self._prefill_fn(cap, plen)(
             self.fm.params, jnp.asarray(prompt[None]),
             jnp.full((1,), true_len, jnp.int32), self._keys[slot][None],
             self.fm.adapters.stacked(), jnp.full((1,), aslot, jnp.int32),
             perm, inv, blocks)
         self._keys = self._keys.at[slot].set(key[0])
-        if self.paged:
+        # the prefill consumed real device work whether or not the stream
+        # survives it — record the admission for token-level charging
+        self.admissions += 1
+        if req.resume is None:
+            self.admitted_log.append((req.rid, req.task_id, true_len))
+        # numeric health rides the admission's existing host sync: a
+        # non-finite prefill (poisoned adapter / Inf activations) quarantines
+        # RIGHT HERE — no pages allocated, no pool write, and crucially no
+        # prefix registration (NaN K/V must never enter the COW registry
+        # where later joins would map it)
+        fin_ok = bool(np.asarray(fin)[0])
+        if not fin_ok:
+            self.quarantines += 1
+        if fin_ok and self.paged:
             npages = self._pages_for(self._adm_s_max(plen))
             shared = self._match_prefix(req.adapter_id, true_prompt)
             m = len(shared)
@@ -930,7 +1008,7 @@ class DecodeEngine:
             self._register_prefix(req.adapter_id, true_prompt, slot,
                                   true_len)
             self._ptab_dirty = True
-        else:
+        elif fin_ok:
             self.pool = self._write_fn()(self.pool, cache, slot)
         self._tokens = self._tokens.at[slot].set(first[0])
         now = time.perf_counter()
@@ -945,8 +1023,10 @@ class DecodeEngine:
             # prefix (and re-truncates from the fullest context available)
             s = req.resume
             s.tokens.append(tok0)
-            s.done = (len(s.tokens) >= s.max_new or
+            s.done = (not fin_ok or len(s.tokens) >= s.max_new or
                       (s.eos_id is not None and tok0 == s.eos_id))
+            if not fin_ok:
+                s.status = "quarantined"
             self.slots[slot] = s
         else:
             self.slots[slot] = DecodeSlot(
@@ -954,8 +1034,10 @@ class DecodeEngine:
                 max_new=max_new_tokens, eos_id=eos,
                 tokens=[tok0], t_join=now, t_first=now,
                 prompt_tokens=true_len, prompt=true_prompt,
-                adapter_id=req.adapter_id,
-                done=(max_new_tokens == 1 or (eos is not None and tok0 == eos)))
+                adapter_id=req.adapter_id, deadline=req.deadline,
+                status="ok" if fin_ok else "quarantined",
+                done=(not fin_ok or max_new_tokens == 1
+                      or (eos is not None and tok0 == eos)))
         self._slot_adapters[slot] = aslot
         self._seg_key = None                    # composition changed
         return slot
@@ -1104,6 +1186,99 @@ class DecodeEngine:
                 self._hol_skips = 0
             self._admit_now(req)
 
+    # ---- failure semantics: deadlines, cancellation, terminal rejection ----
+    def _reject_pending(self, p: _PendingJoin, status: str):
+        p.status = status
+        if p.resume is not None:
+            p.resume.status = status
+            p.resume.done = True
+        self.rejected.append(p)
+
+    def _expire_deadlines(self, now: float):
+        """Deadline enforcement on chunk entry: live slots past their
+        deadline are marked done (``deadline_cancelled``) and retire through
+        the normal sweep with their partial tokens; expired pending entries
+        are terminally rejected — ``deadline_shed`` if never admitted,
+        ``deadline_cancelled`` for a preempted resume (it was mid-flight),
+        ``rejected_stranded`` when the entry is stranded (satellite of the
+        stranded-sharer fix: a stranded join with a deadline no longer idles
+        forever)."""
+        for s in self.slots:
+            if s is not None and not s.done and s.deadline < now:
+                s.done = True
+                s.status = "deadline_cancelled"
+                self.deadline_cancels += 1
+        if not self.pending:
+            return
+        keep: collections.deque[_PendingJoin] = collections.deque()
+        for p in self.pending:
+            if p.deadline >= now:
+                keep.append(p)
+            elif self._never_fits(p):
+                self._reject_pending(p, "rejected_stranded")
+                self.stranded_rejections += 1
+            elif p.resume is not None:
+                self._reject_pending(p, "deadline_cancelled")
+                self.deadline_cancels += 1
+            else:
+                self._reject_pending(p, "deadline_shed")
+                self.deadline_sheds += 1
+        if len(keep) != len(self.pending):
+            self.pending = keep
+
+    def cancel(self, rid: int):
+        """Client-cancel one stream by rid wherever it lives. Returns
+        ``("slot", DecodeSlot)`` for a live stream (retired through
+        ``leave`` — pages refcount-released, registry references dropped),
+        ``("pending", _PendingJoin)`` for a deferred or preempted entry
+        (popped; a preempted resume's pages were already freed at
+        preemption), or ``None`` when the rid is not in the engine."""
+        for i, s in enumerate(self.slots):
+            if s is not None and s.rid == rid:
+                s.done = True
+                s.status = "cancelled"
+                self.cancels += 1
+                return ("slot", self.leave(i))
+        for i, p in enumerate(self.pending):
+            if p.rid == rid:
+                del self.pending[i]
+                p.status = "cancelled"
+                if p.resume is not None:
+                    p.resume.status = "cancelled"
+                    p.resume.done = True
+                self.cancels += 1
+                return ("pending", p)
+        return None
+
+    def shed_stranded(self) -> int:
+        """Terminally reject every stranded pending entry (regardless of
+        deadline) into ``rejected`` — the serve loop's graceful-degradation
+        path when the engine would otherwise wedge. Returns the count."""
+        keep: collections.deque[_PendingJoin] = collections.deque()
+        n = 0
+        for p in self.pending:
+            if self._never_fits(p):
+                self._reject_pending(p, "rejected_stranded")
+                self.stranded_rejections += 1
+                n += 1
+            else:
+                keep.append(p)
+        if n:
+            self.pending = keep
+        return n
+
+    def take_rejected(self) -> list[_PendingJoin]:
+        """Drain the terminally rejected pending entries (serve-loop hook)."""
+        out, self.rejected = self.rejected, []
+        return out
+
+    def take_admitted(self) -> list[tuple[int, str, int]]:
+        """Drain the (rid, task_id, true_prompt_len) admission log — the
+        serve loop charges prompt tokens from HERE, at actual admission, so
+        a join that deferred and was later shed never carried a charge."""
+        out, self.admitted_log = self.admitted_log, []
+        return out
+
     def _raise_if_wedged(self):
         """Nothing live, nothing viable, stranded joins pending: no future
         engine event can admit them (new joins defer behind the pending
@@ -1128,10 +1303,14 @@ class DecodeEngine:
         with pages for the chunk and the page table syncs. Entered with
         nothing occupied and only STRANDED deferred joins left, raises the
         wedge configuration error — checked on ENTRY so the call that
-        retires the last live stream still returns it."""
+        retires the last live stream still returns it. Deadline enforcement
+        runs first: expired live slots are marked done (and retire below),
+        expired pending entries are terminally rejected — so a wedge of
+        deadline-carrying strandeds clears itself instead of raising."""
+        t0 = time.perf_counter()
+        self._expire_deadlines(t0)
         if self.paged:
             self._raise_if_wedged()
-        t0 = time.perf_counter()
         retired = [self.leave(i) for i, s in enumerate(self.slots)
                    if s is not None and s.done]
         if self.paged:
@@ -1149,12 +1328,13 @@ class DecodeEngine:
                 self._sync_page_table()
             cap = self.fm.adapters.capacity()
             perm, inv, blocks = self._segments(cap)
-            self.pool, self._tokens, self._keys, out, drift = \
+            self.pool, self._tokens, self._keys, out, drift, fin = \
                 self._decode_fn(cap, self.chunk)(
                     self.fm.params, self.pool, self._tokens, self._keys,
                     self.fm.adapters.stacked(),
                     jnp.asarray(self._slot_adapters), perm, inv, blocks)
             out = np.asarray(out)               # one host sync per chunk
+            fin = np.asarray(fin)               # rides the same sync
             self.steps += self.chunk
             if self.paged:
                 for i, s in enumerate(self.slots):
@@ -1168,7 +1348,15 @@ class DecodeEngine:
                     s.tokens.append(int(t))
                     if s.eos_id is not None and int(t) == s.eos_id:
                         break
-                if len(s.tokens) >= s.max_new or (
+                # quarantine check only for LIVE slots: a freed slot's
+                # garbage row may legitimately go non-finite (stale scales)
+                # and must not trip anything
+                if not fin[i]:
+                    s.done = True
+                    s.status = "quarantined"
+                    self.quarantines += 1
+                    finished.append(i)
+                elif len(s.tokens) >= s.max_new or (
                         s.eos_id is not None and s.tokens[-1] == s.eos_id):
                     s.done = True
                     finished.append(i)

@@ -41,6 +41,8 @@ within slot capacity.
 """
 from __future__ import annotations
 
+import collections
+import dataclasses
 import time
 
 import jax
@@ -49,6 +51,17 @@ import numpy as np
 from repro.core.physical import PhysicalFM
 from repro.core.request import Batch
 from repro.core.vfm import VFM
+
+
+@dataclasses.dataclass
+class HeadFailure:
+    """Sentinel result for rows whose task head raised past the executor's
+    bounded retries. Per-task failure isolation: one misbehaving head fails
+    ONLY its own task's requests — the shared backbone pass and every other
+    task's head in the same co-batch resolve normally. The serve loop maps
+    these to ``status == "head_failed"``."""
+    task_id: str
+    error: str
 
 
 class PendingBatch:
@@ -73,7 +86,8 @@ class PendingBatch:
 
 
 class Executor:
-    def __init__(self, fm: PhysicalFM):
+    def __init__(self, fm: PhysicalFM, *, head_retries: int = 2,
+                 head_backoff_s: float = 0.005):
         self.fm = fm
         # task_id -> (head object, mode); the head is stored so a rebound task
         # with a NEW head re-probes (id()-keyed caching would let a recycled
@@ -81,6 +95,12 @@ class Executor:
         # "device" (jitted on-device), "batched" (host, vectorized) or "row".
         self._head_mode: dict[str, tuple[object, str]] = {}
         self._head_jit: dict[str, object] = {}      # task_id -> jitted head
+        # per-task head fault isolation (HeadFailure): bounded retries with
+        # exponential backoff before the task's rows fail terminally
+        self.head_retries = max(0, int(head_retries))
+        self.head_backoff_s = float(head_backoff_s)
+        self.head_failures = collections.Counter()  # task_id -> give-ups
+        self.retries = 0                            # head re-attempts (all)
 
     @staticmethod
     def _bucketed_rows(feats_dev, idxs: list[int]):
@@ -162,6 +182,33 @@ class Executor:
             return list(y)                    # reuse the probed batched output
         return [head(feats[i]) for i in idxs]
 
+    def _apply_head_isolated(self, tid: str, head, feats_dev, feats_fn,
+                             idxs: list[int]):
+        """Failure-isolation wrapper around ``_apply_head``: a raising head
+        is retried ``head_retries`` times with exponential backoff (transient
+        faults — an OOM'd jit, a flaky host hook — usually clear), and a head
+        that keeps raising fails ONLY this task's rows with ``HeadFailure``
+        sentinels. The cached probe verdict and jit are dropped on every
+        failure so a head that recovers later re-probes from scratch instead
+        of replaying a stale mode."""
+        delay = self.head_backoff_s
+        err: Exception = RuntimeError("head failed")
+        for attempt in range(self.head_retries + 1):
+            try:
+                return self._apply_head(tid, head, feats_dev, feats_fn, idxs)
+            except Exception as e:      # noqa: BLE001 — isolation boundary
+                err = e
+                self._head_mode.pop(tid, None)
+                self._head_jit.pop(tid, None)
+                if attempt < self.head_retries:
+                    self.retries += 1
+                    time.sleep(delay)
+                    delay *= 2
+        self.head_failures[tid] += 1
+        fail = HeadFailure(task_id=tid,
+                           error=f"{type(err).__name__}: {err}")
+        return [fail] * len(idxs)
+
     def execute_async(self, batch: Batch, vfms: dict[str, VFM]) -> PendingBatch:
         """Host prep + device dispatch, NO host sync: returns a
         ``PendingBatch`` whose ``resolve()`` applies heads and syncs. JAX
@@ -213,7 +260,8 @@ class Executor:
         for tid, idxs in by_task.items():
             head = self.fm.heads.get(tid)
             ys = [feats_fn()[i] for i in idxs] if head is None \
-                else self._apply_head(tid, head, feats_dev, feats_fn, idxs)
+                else self._apply_head_isolated(tid, head, feats_dev,
+                                               feats_fn, idxs)
             for i, y in zip(idxs, ys):
                 out[order[i].rid] = y
         # evict verdicts of detached tasks (persistent executor: don't retain

@@ -7,6 +7,30 @@ from typing import Any, Optional
 
 _ids = itertools.count()
 
+# Terminal request statuses (the failure-semantics layer). "ok" is the only
+# success; everything else is a terminal error the serving plane stamped:
+#   deadline_shed      - shed BEFORE admission: predicted TTFT (page-gate cost
+#                        model) could not meet the deadline, or the deferred
+#                        admission expired in the engine's pending queue.
+#   deadline_cancelled - cancelled MID-FLIGHT: the stream (live slot or
+#                        preempted resume entry) ran past its deadline.
+#   cancelled          - client cancel() unwound the request.
+#   quarantined        - the stream produced non-finite logits (NaN/Inf
+#                        adapter or activations) and was retired to protect
+#                        co-batched streams.
+#   head_failed        - the task's decoder head raised past the executor's
+#                        bounded retries; only this task's requests fail.
+#   rejected_stranded  - a deferred join whose shared-prefix discount was
+#                        released could never fit again and its deadline
+#                        passed (or the loop recovered a wedged engine).
+#   watchdog_shed      - the loop watchdog shed queued work of the lowest-
+#                        weight task to degrade gracefully under an engine
+#                        stall.
+STATUS_OK = "ok"
+FAILURE_STATUSES = ("deadline_shed", "deadline_cancelled", "cancelled",
+                    "quarantined", "head_failed", "rejected_stranded",
+                    "watchdog_shed")
+
 
 @dataclasses.dataclass
 class SLO:
@@ -34,6 +58,14 @@ class Request:
     first_token_time: Optional[float] = None   # decode path: TTFT endpoint
     finish_time: Optional[float] = None
     result: Any = None
+    # terminal status: STATUS_OK or one of FAILURE_STATUSES (module header);
+    # error carries the human-readable cause for non-ok terminations
+    status: str = STATUS_OK
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.status == STATUS_OK
 
     @property
     def latency(self) -> Optional[float]:
@@ -45,6 +77,11 @@ class Request:
         if self.slo.deadline_s is None:
             return float("inf")
         return self.arrival + self.slo.deadline_s
+
+    def met_deadline(self) -> bool:
+        """Finished successfully within its deadline (goodput numerator)."""
+        return (self.status == STATUS_OK and self.finish_time is not None
+                and self.finish_time <= self.deadline())
 
 
 @dataclasses.dataclass

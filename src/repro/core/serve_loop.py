@@ -32,6 +32,42 @@ below the decode stream's, and vice versa.
 ``run`` replays an arrival trace against the wall clock; ``step_batch``
 preserves the old synchronous one-BFQ-batch contract (``FMplexServer.step``)
 on top of the same machinery.
+
+**Failure semantics.** Performance isolation (BFQ, the page gate) is only
+half of virtualization's promise — the loop also owns FAILURE isolation, and
+every request leaves it with a terminal ``Request.status`` (``core.request``
+for the full catalogue). The exit paths and what each one unwinds:
+
+  * ``deadline_shed`` (queued): each tick sheds queued generative requests
+    whose deadline is already infeasible — predicted TTFT is the page gate's
+    token cost model, ``l(1) ×`` admitted prompt length — BEFORE they cost a
+    prefill. The scheduler REFUNDS the arrival tags (``on_cancel`` re-chains
+    the task's queue), so shed work never distorts fair shares. Deferred
+    admissions that expire inside the engine's pending queue surface here
+    too (never charged: admission prompt charges are taken from the
+    engine's ``admitted_log`` at ACTUAL admission, not at dispatch).
+  * ``deadline_cancelled`` / ``quarantined`` (mid-flight): stamped by the
+    engine (deadline sweep / in-graph finite-logits flag) and retired
+    through the normal retire path — partial tokens preserved, pages and
+    prefix references released, the chunks already charged stand (they were
+    real device work).
+  * ``cancelled``: client ``cancel(request_id)`` unwinds the request
+    wherever it lives — queued (tag refund), deferred/preempted (popped,
+    never charged), or live (retired via ``leave``: pages, COW references
+    and registry entries released).
+  * ``head_failed``: the executor isolates a raising task head to that
+    task's requests (bounded retry/backoff first); other tasks in the same
+    co-batch resolve normally.
+  * ``watchdog_shed`` / ``rejected_stranded``: a loop-level watchdog
+    watches for wedged engines (work queued, no progress for
+    ``watchdog_stall_s``); on a trip it degrades gracefully — terminally
+    rejects stranded deferred joins and sheds the lowest-weight task's
+    oldest queued request — and the loop NEVER crashes on an engine wedge
+    (the engine's wedge error is caught and converted into terminal
+    rejections).
+
+Non-ok terminations count ``acct.dropped`` (never ``completed``) and feed
+``ServeLoop.failures`` — ``serving.metrics.failure_counters`` reports them.
 """
 from __future__ import annotations
 
@@ -57,7 +93,8 @@ class ServeLoop:
     """Event-loop serving plane bound to one (server, physical FM) pair."""
 
     def __init__(self, server, fm_id: str, *, engine_kwargs: Optional[dict] = None,
-                 idle_sleep: float = 2e-4):
+                 idle_sleep: float = 2e-4,
+                 watchdog_stall_s: Optional[float] = 10.0):
         self.srv = server
         self.fm_id = fm_id
         self.engine_kwargs = engine_kwargs or {}
@@ -69,6 +106,18 @@ class ServeLoop:
         self._tie_last = "decode"               # alternation state (see tick)
         self.page_samples: list[float] = []     # paged-pool occupancy / tick
         self.shared_samples: list[float] = []   # dedup fraction / decode tick
+        # failure-isolation plane (module docstring): terminal-status tallies
+        # plus the stall watchdog. The watchdog only arms while work is
+        # queued and fires when no progress event (serve / engine step /
+        # admission) lands for watchdog_stall_s — None disables it.
+        self.failures = collections.Counter()   # terminal status -> count
+        self.watchdog_stall_s = watchdog_stall_s
+        # deadline enforcement switch: warmup() turns it off around its run
+        # (compiles take arbitrarily long; shedding a warmup request would
+        # leave its executable cold for the measured run)
+        self.enforce_deadlines = True
+        self._progress_mark = None
+        self._last_progress_t = time.perf_counter()
 
     # ---- plumbing ----
     @property
@@ -102,6 +151,22 @@ class ServeLoop:
         now = time.perf_counter() if now is None else now
         sched, vfms = self.sched, self._vfms()
         eng = self._engine()
+        self._shed_infeasible(sched, vfms, eng, now)
+        if self.watchdog_stall_s is not None:
+            # the watchdog watches ENGINE progress specifically: pooled
+            # completions must not mask a wedged decode pool (a stuck pooled
+            # execute blocks inside the tick and cannot be watchdogged
+            # anyway). Armed only while the engine holds work; a trip means
+            # streams/pending sat still for watchdog_stall_s.
+            has_eng_work = eng is not None and \
+                (eng.active_count() or eng.pending_count())
+            sig = (eng.steps, eng.admissions) if has_eng_work else None
+            if sig is None or sig != self._progress_mark:
+                self._progress_mark = sig
+                self._last_progress_t = now
+            elif now - self._last_progress_t > self.watchdog_stall_s:
+                self._watchdog_trip(sched, vfms, eng, now)
+                self._last_progress_t = now
         candidates = []
         pooled_tag = sched.peek_tag(vfms, is_pooled)
         if pooled_tag != float("inf"):
@@ -190,19 +255,55 @@ class ServeLoop:
         out = self._pending.resolve()
         batch = self._pending.batch
         self._pending = None
+        # head_failed stamping BEFORE on_complete so its accounting sees the
+        # terminal status (failed rows count dropped, not completed)
+        self._stamp_head_failures(batch, out)
         self.srv.on_complete(self.fm_id, batch, time.perf_counter())
         for r in batch.requests:
             r.result = out[r.rid]
         self.served += batch.requests
 
-    def _admit_one(self, eng, vfms, r: Request) -> float:
-        """Join one generative request into the pool; returns the TRUE
-        (post-truncation) prompt length — the prefill's token charge."""
+    def _stamp_head_failures(self, batch, out):
+        """Map the executor's per-task HeadFailure sentinels (isolated head
+        crash past its bounded retries) to terminal request statuses."""
+        from repro.core.executor import HeadFailure
+        for r in batch.requests:
+            res = out.get(r.rid)
+            if isinstance(res, HeadFailure):
+                r.status = "head_failed"
+                r.error = res.error
+                out[r.rid] = None
+                self.failures["head_failed"] += 1
+
+    def _admit_one(self, eng, vfms, r: Request):
+        """Join one generative request into the pool (immediate or deferred —
+        the engine's ``admitted_log`` records the charge at ACTUAL
+        admission)."""
         ext = vfms[r.task_id].extensions
         prompt = np.asarray(r.payload).reshape(-1)
         eng.join(r.task_id, prompt, adapter_id=ext.adapter_id,
-                 max_new_tokens=r.max_new_tokens, rid=r.rid)
-        return min(len(prompt), eng.prompt_len)
+                 max_new_tokens=r.max_new_tokens, rid=r.rid,
+                 deadline=r.deadline() if self.enforce_deadlines else None)
+
+    def _charge_admissions(self, sched, vfms, now):
+        """Drain the engine's admitted log and charge each loop-admitted
+        request its TRUE (post-truncation) prompt length. Charging at ACTUAL
+        admission — not at dispatch into the engine — means a deferred join
+        that gets shed/cancelled while still pending never carried a charge
+        to refund (the BFQ-charge bug this replaces: deferred joins were
+        priced at dispatch, so a drop in the pending queue left the task's
+        virtual time inflated by a prefill that never ran)."""
+        eng = self._engine()
+        if eng is None:
+            return
+        charges: dict[str, float] = collections.Counter()
+        for rid, tid, toks in eng.take_admitted():
+            # step_batch-owned requests were dispatched at FULL arrival
+            # price (see _drain_gen) — only loop-admitted rids pay here
+            if rid in self._inflight:
+                charges[tid] += toks
+        if charges:
+            sched.charge_tokens(vfms, charges, now)
 
     def _tick_admit(self, sched, vfms, now):
         # the double buffer only spans pooled→pooled ticks: an engine tick
@@ -218,34 +319,58 @@ class ServeLoop:
         # back, each admission individually vetted.
         free = 1 if eng.paged else len(eng.free_slots())
         # defer_charge: dispatch advances the stream's virtual time only to
-        # its start tag; the ACTUAL work is charged incrementally below and
-        # per decode chunk (double-pricing would halve the gen share)
+        # its start tag; the ACTUAL work is charged at admission via the
+        # engine's admitted log and per decode chunk (double-pricing would
+        # halve the gen share)
         batch = sched.next_batch(vfms, now, pred=is_generative, limit=free,
                                  defer_charge=True)
         if batch is None:
             return
-        charges: dict[str, float] = collections.Counter()
         for r in batch.requests:
-            charges[r.task_id] += self._admit_one(eng, vfms, r)
-            self._inflight[r.rid] = r
-        sched.charge_tokens(vfms, charges, now)
+            self._inflight[r.rid] = r       # before join: admitted-log drain
+            self._admit_one(eng, vfms, r)   # below must see the rid as ours
+        self._charge_admissions(sched, vfms, now)
 
     def _tick_decode(self, sched, vfms, now):
         self._flush()                 # see _tick_admit: pooled results first
         eng = self._engine()
+        # expire deadlines BEFORE counting active slots so an expired stream
+        # is not charged for a chunk it no longer decodes (the engine sweeps
+        # again inside step_chunk; the sweep is idempotent)
+        eng._expire_deadlines(now)
         # decode chunks charge chunk × active_slots tokens per task: that is
         # the device work the chunk performs for the task, whether or not a
         # stream hits its budget mid-chunk
         active = collections.Counter(
             s.task_id for s in eng.slots if s is not None and not s.done)
-        retired = eng.step_chunk()
+        steps0 = eng.steps
+        try:
+            retired = eng.step_chunk()
+        except ValueError:
+            # wedged engine (stranded deferred joins, nothing live, nothing
+            # can ever fit): the engine raises for direct users, the LOOP
+            # degrades — terminally reject the stranded entries and keep
+            # serving everything else
+            self.failures["wedge_recoveries"] += 1
+            eng.shed_stranded()
+            self._handle_rejected(eng, vfms, time.perf_counter())
+            return
         if eng.paged:
             self.page_samples.append(eng.page_occupancy())
             self.shared_samples.append(
                 eng.dedup_saved_pages() / max(eng.logical_page_count(), 1))
-        sched.charge_tokens(
-            vfms, {t: n * eng.chunk for t, n in active.items()}, now)
+        # charge the steps the chunk ACTUALLY advanced (== chunk normally; 0
+        # when a stalled/faulted engine made no progress — phantom charges
+        # would corrupt fair shares for the rest of the run)
+        advanced = eng.steps - steps0
+        if advanced:
+            sched.charge_tokens(
+                vfms, {t: n * advanced for t, n in active.items()}, now)
+        # pending joins admitted inside step_chunk (and any terminally
+        # rejected along the way) surface through the engine's logs
+        self._charge_admissions(sched, vfms, now)
         done_t = time.perf_counter()
+        self._handle_rejected(eng, vfms, done_t)
         for s in retired:
             self._retire(s, vfms, done_t)
 
@@ -260,13 +385,140 @@ class ServeLoop:
         r.result = np.asarray(slot.tokens, np.int32)
         v = vfms.get(r.task_id)
         if v is not None:
-            v.acct.completed += 1
+            if slot.status == "ok":
+                v.acct.completed += 1
+            else:
+                v.acct.dropped += 1
             # token-level service accounting: l(1) per token of device work,
             # prompt (admission prefill) included — mirrors what
-            # charge_tokens billed to the task's virtual time
+            # charge_tokens billed to the task's virtual time. Billed even
+            # for quarantined/expired streams: the device did the work.
             v.acct.service_time += self.sched.profile.l(1) * \
                 (slot.prompt_tokens + len(slot.tokens))
+        if slot.status != "ok":
+            r.status = slot.status
+            r.error = f"stream {slot.status}"
+            self.failures[slot.status] += 1
         self.served.append(r)
+
+    # ---- failure plane (module docstring, failure-semantics section) ----
+    def _terminal(self, r: Request, status: str, now, *, tokens=None,
+                  t_first=None, vfms=None):
+        """Stamp a terminal failure status on a request and account it."""
+        r.status = status
+        r.error = r.error or status
+        r.finish_time = now
+        if t_first is not None:
+            r.first_token_time = t_first
+        r.result = None if tokens is None else np.asarray(tokens, np.int32)
+        self.failures[status] += 1
+        v = (vfms if vfms is not None else self._vfms()).get(r.task_id)
+        if v is not None:
+            v.acct.dropped += 1
+        self._inflight.pop(r.rid, None)
+        self.served.append(r)
+
+    def _handle_rejected(self, eng, vfms, now, *, mine=None, out=None):
+        """Drain the engine's terminally rejected pending entries (deadline
+        sweep, stranded shed, wedge recovery) into terminal request statuses.
+        ``mine``/``out`` route ``step_batch``-owned rids back to its result
+        map (its while-loop must see a result for every request or it never
+        terminates)."""
+        for p in eng.take_rejected():
+            toks = p.resume.tokens if p.resume is not None else None
+            t_first = p.resume.t_first if p.resume is not None else None
+            r = mine.get(p.rid) if mine is not None else None
+            if r is not None:
+                r.status = p.status
+                r.error = f"admission {p.status}"
+                r.finish_time = now
+                if t_first is not None:
+                    r.first_token_time = t_first
+                out[p.rid] = None if toks is None else \
+                    np.asarray(toks, np.int32)
+                self.failures[p.status] += 1
+                # no acct here: step_batch's on_complete sees the terminal
+                # status and counts dropped for the whole batch
+                continue
+            r = self._inflight.get(p.rid)
+            if r is not None:
+                self._terminal(r, p.status, now, tokens=toks,
+                               t_first=t_first, vfms=vfms)
+
+    def _shed_infeasible(self, sched, vfms, eng, now):
+        """Shed queued generative requests whose deadline is already
+        infeasible BEFORE they cost a prefill: predicted TTFT is the page
+        gate's token cost model — ``l(1)`` per admitted prompt token. The
+        scheduler refunds the arrival tags (``on_cancel`` re-chains the
+        queue), so shed work never distorts the task's fair share."""
+        if not self.enforce_deadlines:
+            return
+        l1 = sched.profile.l(1)
+        cap = eng.prompt_len if eng is not None else None
+        for v in vfms.values():
+            for r in [q for q in v.queue if is_generative(q)]:
+                dl = r.deadline()
+                if dl == float("inf"):
+                    continue
+                plen = len(np.asarray(r.payload).reshape(-1)) \
+                    if r.payload is not None else max(r.tokens, 1.0)
+                if cap is not None:
+                    plen = min(plen, cap)
+                if now + l1 * plen > dl and sched.on_cancel(vfms, r):
+                    self._terminal(r, "deadline_shed", now, vfms=vfms)
+
+    def _watchdog_trip(self, sched, vfms, eng, now):
+        """No progress for watchdog_stall_s with work queued: degrade
+        gracefully. Stranded deferred joins are terminally rejected (they
+        are the one way the engine can wedge) and the lowest-weight task's
+        oldest queued request is shed — never crash, never hang."""
+        self.failures["watchdog_trips"] += 1
+        if eng is not None and eng.pending_count():
+            eng.shed_stranded()
+            self._handle_rejected(eng, vfms, now)
+        loaded = [v for v in vfms.values() if v.queue]
+        if loaded:
+            v = min(loaded, key=lambda x: x.weight)
+            r = v.queue[0]
+            if sched.on_cancel(vfms, r):
+                self._terminal(r, "watchdog_shed", now, vfms=vfms)
+
+    def cancel(self, request_id: int, now: Optional[float] = None) -> bool:
+        """Client-initiated cancellation: unwind one request wherever it
+        lives. Queued → scheduler tag refund (no device work happened);
+        deferred/preempted in the engine's pending queue → popped, never
+        charged (admission charges land at actual admission); live slot →
+        retired through ``leave`` (pages, COW references and prefix-registry
+        entries released), partial tokens preserved, chunk charges already
+        billed stand (real device work). Returns True iff the request was
+        found live anywhere."""
+        now = time.perf_counter() if now is None else now
+        sched, vfms = self.sched, self._vfms()
+        for v in vfms.values():
+            for r in list(v.queue):
+                if r.rid == request_id:
+                    if sched.on_cancel(vfms, r):
+                        self._terminal(r, "cancelled", now, vfms=vfms)
+                        return True
+        eng = self._engine()
+        if eng is None:
+            return False
+        res = eng.cancel(request_id)
+        if res is None:
+            return False
+        kind, obj = res
+        r = self._inflight.get(request_id)
+        if r is None:
+            return True               # engine-direct stream, not loop-owned
+        if kind == "slot":
+            self._terminal(r, "cancelled", now, tokens=obj.tokens,
+                           t_first=obj.t_first, vfms=vfms)
+        else:
+            toks = obj.resume.tokens if obj.resume is not None else None
+            t_first = obj.resume.t_first if obj.resume is not None else None
+            self._terminal(r, "cancelled", now, tokens=toks,
+                           t_first=t_first, vfms=vfms)
+        return True
 
     # ---- drivers ----
     def warmup(self, *, pooled_task: Optional[str] = None,
@@ -313,7 +565,15 @@ class ServeLoop:
                     payload=rng.randint(0, cfg.vocab_size,
                                         plen).astype("int32"),
                     tokens=float(plen + 2), max_new_tokens=2))
-        self.run(trace)
+        # warmup requests inherit task-level SLOs at enqueue, and compiles
+        # take arbitrarily long: enforcement would shed the very requests
+        # meant to warm the executables
+        enforce = self.enforce_deadlines
+        self.enforce_deadlines = False
+        try:
+            self.run(trace)
+        finally:
+            self.enforce_deadlines = enforce
 
     def _work_left(self) -> bool:
         eng = self._engine()
@@ -323,12 +583,14 @@ class ServeLoop:
                 or any(v.queue for v in self._vfms().values()))
 
     def run(self, trace, *, drain: bool = True,
-            max_wall: Optional[float] = None) -> list[Request]:
+            max_wall: Optional[float] = None, on_tick=None) -> list[Request]:
         """Replay a trace (``Request.arrival`` = offset seconds from start)
         against the wall clock: requests are submitted when their arrival
         time passes (rebased to ``perf_counter`` so latency stats line up)
-        and the loop ticks between arrivals. Returns the requests served by
-        THIS call (``self.served`` accumulates across calls)."""
+        and the loop ticks between arrivals. ``on_tick(loop, rel)`` runs
+        before every tick — the chaos-injection harness's hook
+        (``serving.faults``). Returns the requests served by THIS call
+        (``self.served`` accumulates across calls)."""
         trace = sorted(trace, key=lambda r: r.arrival)
         t0 = time.perf_counter()
         n0 = len(self.served)
@@ -338,6 +600,8 @@ class ServeLoop:
             if max_wall is not None and now - t0 > max_wall:
                 break
             rel = now - t0
+            if on_tick is not None:
+                on_tick(self, rel)
             while i < len(trace) and trace[i].arrival <= rel:
                 r = trace[i]
                 r.arrival = t0 + r.arrival          # rebase to wall clock
@@ -383,6 +647,7 @@ class ServeLoop:
             results.update(self._drain_gen(gen, sched, vfms))
         if pend is not None:
             results.update(pend.resolve())
+        self._stamp_head_failures(batch, results)
         self.srv.on_complete(self.fm_id, batch, time.perf_counter())
         for r in batch.requests:
             r.result = results[r.rid]
@@ -419,7 +684,14 @@ class ServeLoop:
                 sched.charge_tokens(
                     vfms, {t: n * eng.chunk for t, n in loop_active.items()},
                     now)
+            # loop-admitted deferred joins that got in during this chunk
+            # still bill their prompt at admission; OURS are skipped inside
+            # (full arrival price, see the docstring above)
+            self._charge_admissions(sched, vfms, now)
             done_t = time.perf_counter()
+            # terminal rejections (deadline sweep inside step_chunk) of OUR
+            # requests must land in `out` or the while-loop never ends
+            self._handle_rejected(eng, vfms, done_t, mine=mine, out=out)
             for s in retired:
                 r = mine.get(s.rid)
                 if r is None:         # a loop-admitted stream retired too
@@ -430,5 +702,9 @@ class ServeLoop:
                 # long one finishes at ITS retire chunk (on_complete keeps an
                 # already-stamped finish_time)
                 r.finish_time = done_t
+                if s.status != "ok":
+                    r.status = s.status
+                    r.error = f"stream {s.status}"
+                    self.failures[s.status] += 1
                 out[s.rid] = np.asarray(s.tokens, np.int32)
         return out

@@ -161,7 +161,12 @@ class FMplexServer:
                 r.finish_time = now       # completion at its retire chunk
             v = self.vfms.get(r.task_id)
             if v is not None:
-                v.acct.completed += 1
+                # terminal failures (head_failed, quarantined, ...) count
+                # dropped; service is billed either way — the device ran
+                if r.ok:
+                    v.acct.completed += 1
+                else:
+                    v.acct.dropped += 1
                 v.acct.service_time += \
                     sched.profile.effective_per_request(batch.size)
         sched.on_complete(batch, self.vfms_on(fm_id), now)

@@ -23,7 +23,7 @@ from repro.serving.metrics import jain_fairness, latency_stats
 
 def build_server(n_tasks: int, *, arch: str = "moment-large", seed: int = 0,
                  scheduler: str = "bfq", input_len: int = 32,
-                 weights=None):
+                 weights=None, slo_s: float | None = 1.0):
     cfg = reduced(get_config(arch))
     fm = PhysicalFM(cfg, seed=seed, input_len=input_len, lora_rank=4)
     fm.calibrate(sizes=(1, 2, 4, 8))
@@ -37,7 +37,11 @@ def build_server(n_tasks: int, *, arch: str = "moment-large", seed: int = 0,
         ext = TaskExtensions(decoder=head, adapter_id=f"lora{i}",
                              adapter_weights=None)
         w = weights[i] if weights else 1.0
-        srv.bind_task(f"task{i}", "fm0", weight=w, slo=SLO(1.0), extensions=ext)
+        # slo_s=None binds tasks without deadlines: the serving plane now
+        # ENFORCES task SLOs (shedding/cancelling infeasible work), which a
+        # demo measuring cold-compile runs usually does not want
+        srv.bind_task(f"task{i}", "fm0", weight=w,
+                      slo=SLO(slo_s), extensions=ext)
     return srv, cfg
 
 

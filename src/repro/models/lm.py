@@ -246,6 +246,17 @@ def loss_fn(params, cfg: ModelConfig, batch: dict, shard=NO_SHARD,
 
 # ---------------- serving steps ----------------
 
+def finite_logits(logits) -> jnp.ndarray:
+    """Per-row numeric-health flag: ``(B,)`` bool, True iff every logit in
+    the row is finite. Computed IN-GRAPH so the decode engine's quarantine
+    check rides the chunk's existing host sync (same pattern as the paged
+    pool's scale-drift flag — zero extra D2H round trips, no new jit keys):
+    a NaN/Inf adapter or activation poisons only its own row's flag, and the
+    engine retires that stream with a ``quarantined`` status while co-batched
+    rows keep exact token parity."""
+    return jnp.all(jnp.isfinite(logits.astype(jnp.float32)), axis=-1)
+
+
 def prefill(params, cfg: ModelConfig, *, tokens=None, embeds=None, enc_embeds=None,
             pos3=None, cache, shard=NO_SHARD, lora=None, adapter_idx=None,
             lora_impl: str = "gather", lora_seg=None, seq_lens=None):

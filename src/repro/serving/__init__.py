@@ -1,1 +1,1 @@
-from repro.serving import loadgen, metrics, simulator  # noqa
+from repro.serving import faults, loadgen, metrics, simulator  # noqa

@@ -1,0 +1,198 @@
+"""Chaos-injection harness for the serving plane (robustness counterpart of
+``distributed.fault``, which owns the TRAINING loop's failure machinery —
+``InjectedFailure`` is shared so both planes raise the same marker type).
+
+Deterministic fault injection against a live ``ServeLoop``: each
+``ChaosEvent`` arms a fault at a fixed offset into ``ServeLoop.run`` (driven
+from the loop's ``on_tick`` hook, so injection lands between scheduling
+decisions — never mid-jit) and optionally restores it after a fixed duration.
+Determinism matters more than realism here: the chaos bench asserts EXACT
+token parity for clean streams against a fault-free run, which requires the
+fault schedule to be a pure function of the trace clock.
+
+Faults and the isolation layer each one exercises:
+
+  * ``NaNAdapterFault``    — poisons one task's LoRA adapter with NaNs in the
+    FM's ``AdapterStore`` (stack rebuilt, same shapes: no new jit keys). The
+    engine's in-graph finite-logits flag quarantines ONLY that task's
+    streams; co-batched streams keep exact token parity.
+  * ``RaisingHeadFault``   — swaps one task's decoder head for one that
+    raises ``InjectedFailure``. The executor's per-task isolation fails only
+    that task's rows (``HeadFailure`` → ``status == "head_failed"``) after
+    bounded retries; restore puts the original head back and the executor
+    re-probes it from scratch.
+  * ``PagePressureFault``  — steals a fraction of the paged KV arena's free
+    pages, forcing deferrals/preemptions through the memory-aware admission
+    gate; restore returns them. Never wedges: stolen pages only shrink the
+    FREE list, not ``total_pages``, so viability checks still hold.
+  * ``StallFault``         — replaces ``step_chunk`` with a no-op for the
+    duration: the engine stops making progress while work stays queued,
+    which is exactly the signature the loop watchdog fires on.
+
+``ChaosInjector`` is the scheduler: pass ``inj.on_tick`` to
+``ServeLoop.run(on_tick=...)``; call ``restore_all`` after the run so
+one-shot experiments cannot leak a poisoned store into later runs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.distributed.fault import InjectedFailure
+
+
+class Fault:
+    """One injectable fault: ``inject`` arms it against the loop's serving
+    state, ``restore`` undoes it completely (same object identity where the
+    executor caches by identity, so restored components re-probe)."""
+
+    name = "fault"
+
+    def inject(self, loop):       # pragma: no cover - interface
+        raise NotImplementedError
+
+    def restore(self, loop):
+        pass
+
+
+class NaNAdapterFault(Fault):
+    def __init__(self, adapter_id: str):
+        self.adapter_id = adapter_id
+        self.name = f"nan_adapter:{adapter_id}"
+        self._orig = None
+
+    def inject(self, loop):
+        import jax
+        import jax.numpy as jnp
+        store = loop.srv.fms[loop.fm_id].adapters
+        if self.adapter_id not in store.ids:
+            return
+        i = store.ids.index(self.adapter_id)
+        self._orig = store._trees[i]
+        store._trees[i] = jax.tree.map(
+            lambda x: jnp.full_like(x, jnp.nan), self._orig)
+        # drop the incremental stack cache: same shapes (no new jit keys),
+        # next stacked() rebuild carries the poison
+        store._stacked = None
+
+    def restore(self, loop):
+        if self._orig is None:
+            return
+        store = loop.srv.fms[loop.fm_id].adapters
+        if self.adapter_id in store.ids:
+            store._trees[store.ids.index(self.adapter_id)] = self._orig
+            store._stacked = None
+        self._orig = None
+
+
+class RaisingHeadFault(Fault):
+    def __init__(self, task_id: str):
+        self.task_id = task_id
+        self.name = f"raising_head:{task_id}"
+        self._orig = None
+
+    def inject(self, loop):
+        fm = loop.srv.fms[loop.fm_id]
+        if self.task_id not in fm.heads:
+            return
+        self._orig = fm.heads[self.task_id]
+        tid = self.task_id
+
+        def raising_head(x):
+            raise InjectedFailure(f"injected head crash for task {tid}")
+
+        fm.heads[tid] = raising_head
+
+    def restore(self, loop):
+        if self._orig is None:
+            return
+        fm = loop.srv.fms[loop.fm_id]
+        if self.task_id in fm.heads:
+            fm.heads[self.task_id] = self._orig
+        self._orig = None
+
+
+class PagePressureFault(Fault):
+    def __init__(self, frac: float = 0.5):
+        self.frac = float(frac)
+        self.name = f"page_pressure:{frac}"
+        self._stolen: list[int] = []
+
+    def inject(self, loop):
+        eng = loop._engine()
+        if eng is None or not getattr(eng, "paged", False):
+            return
+        n = int(len(eng._free_pages) * self.frac)
+        self._stolen = [eng._free_pages.pop() for _ in range(n)]
+
+    def restore(self, loop):
+        if not self._stolen:
+            return
+        eng = loop._engine()
+        if eng is not None:
+            eng._free_pages.extend(self._stolen)
+        self._stolen = []
+
+
+class StallFault(Fault):
+    name = "stall"
+
+    def __init__(self):
+        self._orig = None
+
+    def inject(self, loop):
+        eng = loop._engine()
+        if eng is None or self._orig is not None:
+            return
+        self._orig = eng.step_chunk
+        eng.step_chunk = lambda: []     # work queued, zero progress
+
+    def restore(self, loop):
+        if self._orig is None:
+            return
+        eng = loop._engine()
+        if eng is not None:
+            eng.step_chunk = self._orig
+        self._orig = None
+
+
+@dataclasses.dataclass
+class ChaosEvent:
+    """Arm ``fault`` ``at`` seconds into the run; restore it after
+    ``duration`` seconds (None = never, the fault stays for the run —
+    ``restore_all`` still cleans it up afterwards)."""
+    at: float
+    fault: Fault
+    duration: Optional[float] = None
+    armed: bool = False
+    restored: bool = False
+
+
+class ChaosInjector:
+    """Deterministic fault scheduler driven by ``ServeLoop.run``'s
+    ``on_tick(loop, rel)`` hook. ``log`` records (rel, fault name, action)
+    for every transition — the chaos bench embeds it in its report."""
+
+    def __init__(self, events):
+        self.events = sorted(events, key=lambda e: e.at)
+        self.log: list[tuple[float, str, str]] = []
+
+    def on_tick(self, loop, rel: float):
+        for ev in self.events:
+            if not ev.armed and rel >= ev.at:
+                ev.fault.inject(loop)
+                ev.armed = True
+                self.log.append((round(rel, 4), ev.fault.name, "inject"))
+            if ev.armed and not ev.restored and ev.duration is not None \
+                    and rel >= ev.at + ev.duration:
+                ev.fault.restore(loop)
+                ev.restored = True
+                self.log.append((round(rel, 4), ev.fault.name, "restore"))
+
+    def restore_all(self, loop):
+        """Undo every still-armed fault (end-of-run cleanup — a poisoned
+        adapter must not leak into the next experiment)."""
+        for ev in self.events:
+            if ev.armed and not ev.restored:
+                ev.fault.restore(loop)
+                ev.restored = True
+                self.log.append((-1.0, ev.fault.name, "restore_all"))

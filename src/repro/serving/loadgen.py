@@ -23,7 +23,9 @@ def poisson_trace(task_id: str, rps: float, horizon: float, *, seed: int = 0,
 def token_trace(task_id: str, rps: float, horizon: float, *, prompt_len: int,
                 vocab: int, max_new: int = 8, seed: int = 0,
                 slo_s: float | None = None, start: float = 0.0,
-                min_prompt_len: int | None = None) -> list[Request]:
+                min_prompt_len: int | None = None,
+                infeasible_frac: float = 0.0,
+                infeasible_slo_s: float = 1e-4) -> list[Request]:
     """Generative (prefill+decode) Poisson trace for the DecodeEngine path.
 
     Each request carries a random prompt (``payload``: int32 token ids) and a
@@ -33,7 +35,10 @@ def token_trace(task_id: str, rps: float, horizon: float, *, prompt_len: int,
     uniformly in [min, max] (exercising the engine's bucketed variable-length
     admission); by default all prompts are ``prompt_len`` long.
     ``Request.tokens`` carries prompt + output work units so BFQ's
-    token-based accounting (§4.2) prices heavy requests proportionally."""
+    token-based accounting (§4.2) prices heavy requests proportionally.
+    ``infeasible_frac`` marks that fraction of requests with a deadline no
+    admission could meet (``infeasible_slo_s``, default 0.1 ms) — the chaos
+    harness's fodder for the loop's pre-admission deadline shedding."""
     rng = np.random.RandomState(seed)
     lo = prompt_len if min_prompt_len is None else max(1, min_prompt_len)
     t, out = start, []
@@ -43,9 +48,11 @@ def token_trace(task_id: str, rps: float, horizon: float, *, prompt_len: int,
             break
         new = int(rng.randint(1, max_new + 1))
         plen = int(rng.randint(lo, prompt_len + 1))
+        slo = SLO(infeasible_slo_s) if rng.rand() < infeasible_frac \
+            else SLO(slo_s)
         out.append(Request(
             task_id, t, payload=rng.randint(0, vocab, plen).astype("int32"),
-            tokens=float(plen + new), max_new_tokens=new, slo=SLO(slo_s)))
+            tokens=float(plen + new), max_new_tokens=new, slo=slo))
     return out
 
 

@@ -26,26 +26,38 @@ def latency_stats(requests) -> dict:
 def decode_stats(requests) -> dict:
     """Token-level serving metrics for generative (prefill+decode) requests:
     TTFT (arrival -> first generated token), TPOT (per-token decode interval
-    after the first token), and aggregate generated-token throughput."""
+    after the first token), and aggregate generated-token throughput.
+    Latency/throughput aggregates cover SUCCESSFUL requests only — a shed or
+    quarantined stream's zero-token "completion" would otherwise deflate
+    TTFT and inflate throughput; failed terminations are counted separately
+    (``n_failed``) and goodput (tokens of requests that finished ok WITHIN
+    their deadline, per second) reports what the SLO-carrying client actually
+    received."""
     done = [r for r in requests
             if r.finish_time is not None and r.max_new_tokens > 0]
-    if not done:
-        return {"n": 0}
-    ttft = [r.first_token_time - r.arrival for r in done
+    ok = [r for r in done if getattr(r, "status", "ok") == "ok"]
+    if not ok:
+        return {"n": 0, "n_failed": len(done)}
+    ttft = [r.first_token_time - r.arrival for r in ok
             if r.first_token_time is not None]
     tpot = []
     total_tokens = 0
-    for r in done:
+    good_tokens = 0
+    for r in ok:
         n = len(r.result) if r.result is not None else r.max_new_tokens
         total_tokens += n
+        if r.met_deadline():
+            good_tokens += n
         if r.first_token_time is not None and n > 1:
             tpot.append((r.finish_time - r.first_token_time) / (n - 1))
-    span = (max(r.finish_time for r in done)
-            - min(r.arrival for r in done)) or 1e-9
+    span = (max(r.finish_time for r in ok)
+            - min(r.arrival for r in ok)) or 1e-9
     return {
-        "n": len(done),
+        "n": len(ok),
+        "n_failed": len(done) - len(ok),
         "tokens_out": total_tokens,
         "tokens_per_s": total_tokens / span,
+        "goodput_tokens_per_s": good_tokens / span,
         "ttft_p50_ms": 1e3 * percentile(ttft, 50),
         "ttft_p99_ms": 1e3 * percentile(ttft, 99),
         "tpot_p50_ms": 1e3 * percentile(tpot, 50),
@@ -76,7 +88,41 @@ def page_gauges(engine) -> dict:
     }
 
 
-def mixed_stats(requests, page_samples=None, shared_samples=None) -> dict:
+def failure_counters(requests=(), *, loop=None, engine=None,
+                     executor=None) -> dict:
+    """Failure-plane counters: terminal statuses tallied over ``requests``
+    plus the serving components' own tallies — the loop's watchdog trips and
+    wedge recoveries, the engine's quarantine/deadline/cancel counts, the
+    executor's head failures and retry attempts. Everything here is a count
+    of a FAULT HANDLED gracefully; a crash would have produced none of them."""
+    from repro.core.request import FAILURE_STATUSES
+    out = {s: 0 for s in FAILURE_STATUSES}
+    for r in requests:
+        s = getattr(r, "status", "ok")
+        if s != "ok":
+            out[s] = out.get(s, 0) + 1
+    if loop is not None:
+        out["watchdog_trips"] = int(loop.failures.get("watchdog_trips", 0))
+        out["wedge_recoveries"] = int(
+            loop.failures.get("wedge_recoveries", 0))
+    if engine is not None:
+        out["engine_quarantines"] = int(getattr(engine, "quarantines", 0))
+        out["engine_deadline_cancels"] = int(
+            getattr(engine, "deadline_cancels", 0))
+        out["engine_deadline_sheds"] = int(
+            getattr(engine, "deadline_sheds", 0))
+        out["engine_stranded_rejections"] = int(
+            getattr(engine, "stranded_rejections", 0))
+        out["engine_cancels"] = int(getattr(engine, "cancels", 0))
+    if executor is not None:
+        out["head_failures"] = int(
+            sum(getattr(executor, "head_failures", {}).values()))
+        out["head_retries"] = int(getattr(executor, "retries", 0))
+    return out
+
+
+def mixed_stats(requests, page_samples=None, shared_samples=None,
+                failures=None) -> dict:
     """Split per-plane report for mixed pooled + generative serving (the
     event-loop plane): request-level latency for the pooled side, token-level
     TTFT/TPOT/throughput for the generative side. ``page_samples`` (the
@@ -85,10 +131,13 @@ def mixed_stats(requests, page_samples=None, shared_samples=None) -> dict:
     actually ran, the signal for sizing ``total_pages``. ``shared_samples``
     (per-decode-tick dedup fractions: pages saved by prefix sharing over
     logical page mappings) adds a sharing section — how much effective
-    capacity COW prefix sharing is buying on this workload."""
+    capacity COW prefix sharing is buying on this workload. ``failures`` (a
+    ``failure_counters`` dict) adds the failure-plane section."""
     pooled = [r for r in requests if r.max_new_tokens <= 0]
     gen = [r for r in requests if r.max_new_tokens > 0]
     out = {"pooled": latency_stats(pooled), "decode": decode_stats(gen)}
+    if failures:
+        out["failures"] = failures
     if page_samples:
         out["kv_pages"] = {
             "samples": len(page_samples),

@@ -191,6 +191,40 @@ def test_charge_tokens_advances_vtime_and_rechains():
     assert fifo.task_vtime("A") == 0.0
 
 
+def test_on_cancel_refunds_tags_and_rechains():
+    """Cancel/shed refund (Eq. 3 re-chain): removing a still-queued request
+    restores the task's tag chain to what it would have been had the request
+    never arrived — a shed 100-token request must not leave a permanent
+    hole in the task's fair share."""
+    sched, vfms = make(weight_a=2.0)
+    l1 = sched.profile.l(1)
+    r1 = Request("A", 0.0, tokens=4.0)
+    r2 = Request("A", 0.0, tokens=100.0)          # the one we cancel
+    r3 = Request("A", 0.0, tokens=4.0)
+    for r in (r1, r2, r3):
+        sched.on_arrival(vfms["A"], r, 0.0)
+    assert r3.start_tag == pytest.approx(r2.finish_tag)
+    assert sched.on_cancel(vfms, r2)
+    # r3 re-chained directly behind r1: the 100-token slice is refunded
+    assert r3.start_tag == pytest.approx(r1.finish_tag)
+    assert r3.finish_tag == pytest.approx(r1.finish_tag + l1 * 4.0 / 2.0)
+    assert sched._tail["A"] == pytest.approx(r3.finish_tag)
+    assert list(vfms["A"].queue) == [r1, r3]
+    # not queued (already dispatched / unknown): nothing to unwind
+    assert not sched.on_cancel(vfms, r2)
+    # deferred-charge dispatch + drop: admission into the engine advances
+    # virtual time only to the START tag, and the actual prompt/chunk work
+    # is charged at real admission — so a join shed while still deferred
+    # in the engine's pending queue carried NO charge to refund
+    b = sched.next_batch(vfms, 0.0, pred=lambda r: r is r1, limit=1,
+                         defer_charge=True)
+    assert [r.rid for r in b.requests] == [r1.rid]
+    assert sched.task_vtime("A") == pytest.approx(r1.start_tag)
+    # ...and r1 is then shed while pending: no charge_tokens ever lands,
+    # so the task's virtual time still reflects zero device work
+    assert sched.task_vtime("A") == pytest.approx(0.0)
+
+
 def test_weighted_shares_hold_at_token_granularity():
     """Mixed-plane colocation, scheduler level: task A streams decode chunks
     (charged via charge_tokens), task B holds a pooled backlog. Replaying

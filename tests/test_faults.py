@@ -1,0 +1,371 @@
+"""Fault-tolerant serving plane: per-stream numeric quarantine with exact
+co-batch token parity, deadline enforcement (mid-flight cancel + pending
+shed), client cancellation across every request state, per-task head-failure
+isolation with recovery, the loop watchdog under an injected stall,
+stranded-sharer wedge recovery, and the chaos-injection scheduler itself."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.physical import PhysicalFM
+from repro.core.request import FAILURE_STATUSES, Request
+from repro.core.server import FMplexServer
+from repro.core.vfm import TaskExtensions
+from repro.serving.faults import (ChaosEvent, ChaosInjector, Fault,
+                                  NaNAdapterFault, PagePressureFault,
+                                  RaisingHeadFault, StallFault)
+
+
+@pytest.fixture(scope="module")
+def served():
+    """One warmed server + PAGED loop shared by the module (the paged pool
+    exposes the full failure surface: pending queue, stranding, pages)."""
+    cfg = reduced(get_config("stablelm-1.6b"))
+    fm = PhysicalFM(cfg, seed=0, input_len=8, lora_rank=4)
+    fm.calibrate(sizes=(1, 2, 4))
+    srv = FMplexServer("s0")
+    srv.deploy_fm("fm0", fm, scheduler="bfq")
+    rng = np.random.RandomState(0)
+    for i in range(3):
+        w = rng.randn(cfg.d_model, 2).astype(np.float32) * 0.1
+        head = (lambda ww: (lambda f: f @ ww))(w)
+        fm.adapters.new(f"lora{i}", seed=i)
+        srv.bind_task(f"task{i}", "fm0", weight=float(i + 1),
+                      extensions=TaskExtensions(decoder=head,
+                                                adapter_id=f"lora{i}"))
+    loop = srv.serve_loop("fm0", engine_kwargs=dict(
+        num_slots=2, prompt_len=8, max_new=16, chunk=2,
+        paged=True, page_size=4))
+    loop.warmup(pooled_task="task0", gen_task="task1")
+    return srv, cfg, loop, rng
+
+
+def _pooled(cfg, rng, tid="task0", t=0.0):
+    return Request(tid, t, payload=rng.randn(8, cfg.d_model).astype(np.float32))
+
+
+def _gen(cfg, rng, tid="task1", t=0.0, new=6, plen=8):
+    return Request(tid, t,
+                   payload=rng.randint(0, cfg.vocab_size, plen).astype("int32"),
+                   tokens=float(plen + new), max_new_tokens=new)
+
+
+def _run_stream(eng, rid):
+    """Step the engine until stream ``rid`` retires; return its slot."""
+    for _ in range(64):
+        for s in eng.step_chunk():
+            if s.rid == rid:
+                return s
+    raise AssertionError(f"stream {rid} never retired")
+
+
+# ---------------- numeric-fault quarantine ----------------
+
+def test_quarantine_isolates_poisoned_stream_with_exact_parity(served):
+    """A NaN'd adapter quarantines ONLY its own stream — at admission,
+    before any page allocation or prefix registration — while a co-batched
+    clean stream's tokens match a fault-free solo run bit for bit, with
+    zero new compiles."""
+    srv, cfg, loop, rng = served
+    eng = srv.engines["fm0"]
+    rng = np.random.RandomState(7)
+    clean_prompt = rng.randint(0, cfg.vocab_size, 8).astype(np.int32)
+    bad_prompt = rng.randint(0, cfg.vocab_size, 8).astype(np.int32)
+
+    # fault-free baseline: the clean stream alone
+    eng.join("task1", clean_prompt, adapter_id="lora1", max_new_tokens=6,
+             rid=9001)
+    solo = _run_stream(eng, 9001).tokens
+    assert not eng.active_count()
+
+    q0, compiles, free0 = eng.quarantines, eng.compile_count(), \
+        eng.free_page_count()
+    fault = NaNAdapterFault("lora0")
+    fault.inject(loop)
+    try:
+        eng.join("task1", clean_prompt, adapter_id="lora1", max_new_tokens=6,
+                 rid=9002)
+        eng.join("task0", bad_prompt, adapter_id="lora0", max_new_tokens=6,
+                 rid=9003)
+        retired = {s.rid: s for s in eng.step_chunk()}
+        for _ in range(32):
+            if 9002 in retired and 9003 in retired:
+                break
+            retired.update({s.rid: s for s in eng.step_chunk()})
+    finally:
+        fault.restore(loop)
+    assert retired[9003].status == "quarantined"
+    assert eng.quarantines == q0 + 1
+    # quarantined at ADMISSION: one garbage prefill token, nothing decoded
+    assert len(retired[9003].tokens) == 1
+    # the poisoned prompt never entered the COW prefix registry
+    assert eng._match_prefix("lora0", bad_prompt) == []
+    # exact parity for the clean co-batched stream, no recompiles
+    assert retired[9002].status == "ok"
+    assert retired[9002].tokens == solo
+    assert eng.compile_count() == compiles
+    assert not eng.active_count() and eng.free_page_count() == free0
+    eng.take_admitted()
+
+    # restored adapter serves cleanly again (loop-level status plumbing)
+    r = _gen(cfg, rng, tid="task0", new=4)
+    loop.run([r], max_wall=60)
+    assert r.ok and len(r.result) == 4
+
+
+def test_loop_stamps_quarantined_status(served):
+    srv, cfg, loop, rng = served
+    fail0 = loop.failures["quarantined"]
+    fault = NaNAdapterFault("lora2")
+    fault.inject(loop)
+    try:
+        r = _gen(cfg, np.random.RandomState(11), tid="task2", new=4)
+        loop.run([r], max_wall=60)
+    finally:
+        fault.restore(loop)
+    assert r.status == "quarantined" and not r.ok
+    assert r.error and not r.met_deadline()
+    assert loop.failures["quarantined"] == fail0 + 1
+
+
+# ---------------- deadline enforcement ----------------
+
+def test_deadline_cancels_live_and_sheds_pending(served):
+    srv, cfg, loop, _ = served
+    eng = srv.engines["fm0"]
+    rng = np.random.RandomState(13)
+    c0, s0 = eng.deadline_cancels, eng.deadline_sheds
+
+    # live slot past its deadline: retired with its partial tokens
+    p = rng.randint(0, cfg.vocab_size, 8).astype(np.int32)
+    eng.join("task1", p, adapter_id="lora1", max_new_tokens=8, rid=9101,
+             deadline=time.perf_counter() - 1.0)
+    s = _run_stream(eng, 9101)
+    assert s.status == "deadline_cancelled"
+    assert 1 <= len(s.tokens) < 8                # partial output preserved
+    assert eng.deadline_cancels == c0 + 1
+
+    # expired PENDING entry: terminally shed, never admitted, never charged
+    for rid in (9102, 9103):                     # fill both slots
+        eng.join("task1", rng.randint(0, cfg.vocab_size, 8).astype(np.int32),
+                 adapter_id="lora1", max_new_tokens=16, rid=rid)
+    admitted_rids = {rid for rid, _, _ in eng.take_admitted()}
+    eng.join("task2", rng.randint(0, cfg.vocab_size, 8).astype(np.int32),
+             adapter_id="lora2", max_new_tokens=16, rid=9104,
+             deadline=time.perf_counter() - 1.0)
+    assert eng.pending_count() == 1              # no free slot: deferred
+    eng.step_chunk()
+    rej = eng.take_rejected()
+    assert [p.rid for p in rej] == [9104]
+    assert rej[0].status == "deadline_shed"
+    assert eng.deadline_sheds == s0 + 1
+    # charged at ACTUAL admission: the shed rid never hit the admitted log
+    admitted_rids |= {rid for rid, _, _ in eng.take_admitted()}
+    assert 9104 not in admitted_rids
+    for rid in (9102, 9103):                     # cleanup
+        assert eng.cancel(rid) is not None
+    assert not eng.active_count() and not eng.pending_count()
+    eng.take_admitted()
+
+
+def test_loop_sheds_infeasible_deadline_before_prefill(served):
+    """Queued requests whose predicted TTFT (l(1)·prompt_len) already busts
+    the deadline are shed pre-admission with a BFQ tag refund."""
+    srv, cfg, loop, _ = served
+    from repro.core.request import SLO
+    rng = np.random.RandomState(17)
+    r = _gen(cfg, rng, tid="task1", new=8)
+    r.slo = SLO(1e-6)                            # infeasible by construction
+    shed0 = loop.failures["deadline_shed"]
+    loop.run([r], max_wall=60)
+    assert r.status == "deadline_shed" and r.result is None
+    assert loop.failures["deadline_shed"] == shed0 + 1
+    # the refund re-chained the task's tail: a follow-up request is priced
+    # as if the shed one never arrived, and still serves normally
+    r2 = _gen(cfg, rng, tid="task1", new=4)
+    loop.run([r2], max_wall=60)
+    assert r2.ok and len(r2.result) == 4
+
+
+# ---------------- client cancellation ----------------
+
+def test_loop_cancel_unwinds_queued_and_live(served):
+    srv, cfg, loop, _ = served
+    eng = srv.engines["fm0"]
+    sched = loop.sched
+    rng = np.random.RandomState(19)
+
+    # queued (never dispatched): tag refund, terminal status, no result
+    r = _gen(cfg, rng, tid="task2", new=8)
+    loop.submit(r, time.perf_counter())
+    assert loop.cancel(r.rid)
+    assert r.status == "cancelled" and r.finish_time is not None
+    assert not any(v.queue for v in srv.vfms_on("fm0").values())
+    # the queue tail re-chained to the last DISPATCHED finish (Eq. 3 refund)
+    assert sched._tail.get("task2", 0.0) == pytest.approx(
+        sched._last_dispatched.get("task2", 0.0))
+    assert not loop.cancel(r.rid)                # already terminal
+
+    # live slot: partial tokens preserved, pages released, slot freed
+    free0 = eng.free_page_count()
+    r2 = _gen(cfg, rng, tid="task1", new=16)
+    loop.submit(r2, time.perf_counter())
+    while not eng.active_count():
+        loop.tick()
+    assert loop.cancel(r2.rid)
+    assert r2.status == "cancelled"
+    assert r2.result is not None and len(r2.result) >= 1
+    assert r2.first_token_time is not None
+    assert not eng.active_count() and eng.free_page_count() == free0
+    assert not loop.cancel(10 ** 9)              # unknown rid
+    while loop._work_left():
+        loop.tick()
+
+
+# ---------------- per-task head-failure isolation ----------------
+
+def test_head_failure_isolates_task_and_recovers(served):
+    """A raising decoder head fails ONLY its own task's requests (bounded
+    retries, then HeadFailure → status "head_failed"); co-batched tasks
+    resolve normally, and the restored head re-probes from scratch."""
+    srv, cfg, loop, _ = served
+    ex = srv.executors["fm0"]
+    rng = np.random.RandomState(23)
+    hf0, retries0 = ex.head_failures["task2"], ex.retries
+    fault = RaisingHeadFault("task2")
+    fault.inject(loop)
+    try:
+        r_ok = _pooled(cfg, rng, tid="task0")
+        r_bad = _pooled(cfg, rng, tid="task2")
+        loop.run([r_ok, r_bad], max_wall=60)
+    finally:
+        fault.restore(loop)
+    assert r_bad.status == "head_failed" and r_bad.result is None
+    assert r_bad.error and "InjectedFailure" in r_bad.error
+    assert r_ok.ok and np.all(np.isfinite(np.asarray(r_ok.result)))
+    assert ex.head_failures["task2"] == hf0 + 1
+    assert ex.retries == retries0 + ex.head_retries
+    # recovery: the restored head re-probes and serves again
+    r_again = _pooled(cfg, rng, tid="task2")
+    loop.run([r_again], max_wall=60)
+    assert r_again.ok and np.all(np.isfinite(np.asarray(r_again.result)))
+
+
+# ---------------- watchdog + stall ----------------
+
+def test_watchdog_trips_on_stall_then_stream_recovers(served):
+    """A stalled engine (step_chunk no-op) with live work trips the loop
+    watchdog — no crash, no hang — and the stream finishes exactly once the
+    stall lifts."""
+    srv, cfg, loop, _ = served
+    eng = srv.engines["fm0"]
+    rng = np.random.RandomState(29)
+    old = loop.watchdog_stall_s
+    loop.watchdog_stall_s = 0.05
+    trips0 = loop.failures["watchdog_trips"]
+    stream = _gen(cfg, rng, tid="task1", new=12)
+    loop.submit(stream, time.perf_counter())
+    while not eng.active_count():
+        loop.tick()
+    fault = StallFault()
+    fault.inject(loop)
+    t0 = time.perf_counter()
+    try:
+        while loop.failures["watchdog_trips"] == trips0:
+            loop.tick()
+            assert time.perf_counter() - t0 < 10.0, "watchdog never tripped"
+    finally:
+        fault.restore(loop)
+        loop.watchdog_stall_s = old
+    while stream.finish_time is None:
+        loop.tick()
+    assert stream.ok and len(stream.result) == 12
+    while loop._work_left():
+        loop.tick()
+
+
+def test_page_pressure_fault_steals_and_returns(served):
+    srv, cfg, loop, _ = served
+    eng = srv.engines["fm0"]
+    free0 = eng.free_page_count()
+    assert free0 > 0
+    fault = PagePressureFault(1.0)
+    fault.inject(loop)
+    try:
+        assert eng.free_page_count() == 0
+        assert not eng.can_admit(8)              # memory gate closed
+    finally:
+        fault.restore(loop)
+    assert eng.free_page_count() == free0
+    assert eng.can_admit(8)
+
+
+# ---------------- stranded-sharer wedge recovery ----------------
+
+def test_stranded_sharer_wedge_sheds_terminally(served):
+    """A deferred join admitted on the strength of a prefix discount whose
+    sharer retires becomes stranded; with nothing live the engine raises the
+    wedge error for direct users, and ``shed_stranded`` converts the entry
+    to a terminal ``rejected_stranded`` (the serve loop's recovery path)."""
+    srv, cfg, loop, _ = served
+    from repro.core.decode_engine import DecodeEngine
+    fm = srv.fms["fm0"]
+    eng = DecodeEngine(fm, num_slots=2, prompt_len=16, max_new=4, chunk=2,
+                       paged=True, page_size=4, total_pages=5,
+                       prompt_buckets=(8, 16))
+    rng = np.random.RandomState(31)
+    prefix = rng.randint(0, cfg.vocab_size, 8).astype(np.int32)
+    # A registers 2 full prefix pages (bucket 8: 2 pages + 1 chunk headroom
+    # fits the 4-page arena)
+    assert eng.join("t", prefix, adapter_id="lora0", max_new_tokens=4,
+                    rid=1) >= 0
+    # B (bucket 16: 4 pages) only fits BECAUSE the discount covers 2 of
+    # them — with A holding pages it defers instead of admitting
+    sfx = rng.randint(0, cfg.vocab_size, 4).astype(np.int32)
+    assert eng.join("t", np.concatenate([prefix, sfx]), adapter_id="lora0",
+                    max_new_tokens=4, rid=2) == -1
+    assert eng.pending_count() == 1
+    # the sharer cancels: registry entry released, B can never fit again
+    assert eng.cancel(1) is not None
+    with pytest.raises(ValueError, match="no longer fit"):
+        eng.step_chunk()                         # wedged: loud for direct use
+    assert eng.shed_stranded() == 1
+    rej = eng.take_rejected()
+    assert [p.rid for p in rej] == [2]
+    assert rej[0].status == "rejected_stranded"
+    assert rej[0].status in FAILURE_STATUSES
+    assert eng.step_chunk() == []                # unwedged, serving again
+    assert eng.free_page_count() == eng.total_pages - 1
+
+
+# ---------------- chaos-injection scheduler ----------------
+
+def test_chaos_injector_schedule_is_deterministic():
+    class Rec(Fault):
+        def __init__(self, name):
+            self.name, self.state = name, "idle"
+
+        def inject(self, loop):
+            self.state = "armed"
+
+        def restore(self, loop):
+            self.state = "restored"
+
+    f1, f2 = Rec("f1"), Rec("f2")
+    inj = ChaosInjector([ChaosEvent(0.5, f2, duration=1.0),
+                         ChaosEvent(0.0, f1)])
+    inj.on_tick(None, 0.0)
+    assert f1.state == "armed" and f2.state == "idle"
+    inj.on_tick(None, 0.6)
+    assert f2.state == "armed"
+    inj.on_tick(None, 1.4)
+    assert f2.state == "armed"                   # duration not elapsed
+    inj.on_tick(None, 1.6)
+    assert f2.state == "restored"
+    inj.restore_all(None)                        # cleans up f1, not f2 twice
+    assert f1.state == "restored"
+    assert [(n, a) for _, n, a in inj.log] == [
+        ("f1", "inject"), ("f2", "inject"), ("f2", "restore"),
+        ("f1", "restore_all")]

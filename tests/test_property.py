@@ -182,13 +182,17 @@ def _check_page_invariants(eng):
 
 
 @settings(max_examples=8, deadline=None)
-@given(ops=st.lists(st.tuples(st.integers(0, 3), st.integers(0, 7)),
+@given(ops=st.lists(st.tuples(st.integers(0, 5), st.integers(0, 7)),
                     min_size=4, max_size=18))
 def test_paged_refcounts_never_leak_or_double_free(ops):
-    """Randomized join/decode/preempt/cancel sequences over shared-prefix
-    prompts: the refcounted free list never double-frees or leaks a page,
-    preempting/cancelling a sharer never touches another stream's mapped
-    pages, and a final drain returns the arena to fully free."""
+    """Randomized join/decode/preempt/retire sequences over shared-prefix
+    prompts, now interleaved with the FAULT plane (client cancel by rid,
+    mid-flight deadline expiry): the refcounted free list never double-frees
+    or leaks a page, unwinding a sharer through ANY exit path never touches
+    another stream's mapped pages, terminally rejected entries always carry
+    a failure status, and a final drain returns the arena to fully free."""
+    import time
+
     from repro.core.decode_engine import DecodeEngine
     fm = _paged_fm()
     cfg = fm.cfg
@@ -211,8 +215,16 @@ def test_paged_refcounts_never_leak_or_double_free(ops):
             eng.step_chunk()
         elif op == 2 and live:                       # preempt a stream
             eng._preempt(live[a % len(live)])
-        elif op == 3 and live:                       # cancel a stream
+        elif op == 3 and live:                       # retire a stream
             eng.leave(live[a % len(live)])
+        elif op == 4:                                # client cancel by rid
+            rids = [s.rid for s in eng.slots if s is not None] \
+                + eng.pending_rids()
+            if rids:
+                assert eng.cancel(rids[a % len(rids)]) is not None
+        elif op == 5 and live:                       # deadline expiry
+            eng.slots[live[a % len(live)]].deadline = 0.0
+            eng._expire_deadlines(time.perf_counter())
         _check_page_invariants(eng)
     for _ in range(200):
         if not (eng.active_count() or eng.pending_count()):
@@ -223,3 +235,4 @@ def test_paged_refcounts_never_leak_or_double_free(ops):
     assert eng.free_page_count() == eng.total_pages - 1
     assert (eng._page_refs[1:] == 0).all()
     assert not eng._prefix_registry and not eng._page_key
+    assert all(p.status != "ok" for p in eng.take_rejected())
