@@ -1,0 +1,265 @@
+"""Recovery benchmark: durable serving state under a device reset + the
+host-RAM KV spill tier vs re-prefill resume.
+
+Two experiments, both against the same built server:
+
+  * ``reset`` — one generative trace runs twice: fault-free, and with a
+    ``DeviceResetFault`` injected mid-trace (snapshot -> scramble the old
+    arena -> digest-verified restore). The arena is sized so NEITHER run
+    preempts, making every token divergence attributable to the restore
+    path alone. Hard asserts:
+      - zero request loss: every trace request reaches a terminal state in
+        both runs, and the reset run completes them all ``ok``;
+      - bit-exact token parity for EVERY stream vs the fault-free run
+        (greedy decoding: restore must reproduce the exact KV state);
+      - ``resets_survived`` lands on the loop and every in-flight request,
+        with zero ``digest_failures``;
+      - zero steady-state recompiles across snapshot/restore after a
+        one-time priming restart (restored engines reuse the old engine's
+        jit caches — executables are code, not device state).
+
+  * ``spill_resume`` — two sampled long streams on an arena that holds only
+    one, forcing preemption, run three ways: big-arena reference (never
+    preempts), small arena with the spill tier, small arena without. Hard
+    asserts:
+      - the spill run's tokens match the never-preempted reference EXACTLY
+        (lossless preemption: pages + scales + PRNG key round-trip D2H/H2D);
+      - every spill-run resume went through the spill path, and its mean
+        resume cost beats the re-prefill resume's mean (restoring pages by
+        DMA must be cheaper than recomputing them through the model).
+
+Results land under the "recovery" section of ``BENCH_serving.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import warnings
+
+import numpy as np
+
+from common import write_serving_section
+from repro.configs import get_config, reduced
+from repro.core.decode_engine import DecodeEngine
+from repro.core.physical import PhysicalFM
+from repro.core.request import SLO, Request
+from repro.core.server import FMplexServer
+from repro.core.vfm import TaskExtensions
+from repro.serving.faults import ChaosEvent, ChaosInjector, DeviceResetFault
+from repro.serving.loadgen import token_trace
+from repro.serving.metrics import failure_counters
+
+PROMPT_LEN = 16
+MAX_NEW = 16
+HORIZON = 1.5
+GEN_RPS = 6.0
+
+
+def build(seed: int = 0):
+    cfg = reduced(get_config("stablelm-1.6b"))
+    fm = PhysicalFM(cfg, seed=seed, input_len=PROMPT_LEN, lora_rank=4)
+    fm.calibrate(sizes=(1, 2, 4))
+    srv = FMplexServer("s0")
+    srv.deploy_fm("fm0", fm, scheduler="bfq")
+    for i, tid in enumerate(("gen0", "gen1")):
+        fm.adapters.new(f"lora{i}", seed=i)
+        srv.bind_task(tid, "fm0", weight=1.0,
+                      extensions=TaskExtensions(adapter_id=f"lora{i}"))
+    # arena sized so the reset trace never preempts: parity must be
+    # attributable to the restore path, not to preemption/resume noise
+    srv.decode_engine("fm0", num_slots=4, prompt_len=PROMPT_LEN,
+                      max_new=MAX_NEW, chunk=4, paged=True, page_size=8,
+                      total_pages=96, spill_bytes=64 << 20)
+    loop = srv.serve_loop("fm0")
+    return srv, cfg, loop
+
+
+def build_trace(cfg):
+    return [r for r in token_trace(
+        "gen0", GEN_RPS, HORIZON, prompt_len=PROMPT_LEN,
+        vocab=cfg.vocab_size, max_new=MAX_NEW, seed=1, min_prompt_len=4,
+    )] + [r for r in token_trace(
+        "gen1", GEN_RPS, HORIZON, prompt_len=PROMPT_LEN,
+        vocab=cfg.vocab_size, max_new=MAX_NEW, seed=2, min_prompt_len=4,
+    )]
+
+
+def _clone(r: Request) -> Request:
+    return Request(r.task_id, r.arrival, payload=r.payload, tokens=r.tokens,
+                   max_new_tokens=r.max_new_tokens,
+                   slo=SLO(r.slo.deadline_s))
+
+
+def run_once(loop, trace, max_wall, injector=None):
+    clones = [_clone(r) for r in trace]
+    keymap = {c.rid: i for i, c in enumerate(clones)}
+    served = loop.run(clones, max_wall=max_wall,
+                      on_tick=injector.on_tick if injector else None)
+    if injector is not None:
+        injector.restore_all(loop)
+    return {keymap[r.rid]: r for r in served if r.rid in keymap}
+
+
+def bench_reset(srv, cfg, loop, max_wall):
+    fm = srv.fms["fm0"]
+    trace = build_trace(cfg)
+
+    # priming: warmup compiled the spill gather/restore scatters; one
+    # checkpoint_restart exercises the snapshot/restore round trip itself.
+    # Everything after must reuse jit caches — a device reset re-uploads
+    # state, it does not re-derive executables.
+    loop.checkpoint_restart()
+    eng = srv.decode_engine("fm0")
+    compiles = eng.compile_count() + fm.compile_count()
+
+    base = run_once(loop, trace, max_wall)
+    p_base = srv.decode_engine("fm0").preemptions
+
+    loop.failures.clear()
+    fault = DeviceResetFault()
+    injector = ChaosInjector([ChaosEvent(at=HORIZON * 0.4, fault=fault)])
+    chaos_tick = injector.on_tick
+
+    def on_tick(lp, rel):
+        # hold the reset until streams are actually in flight, so the
+        # "survivors rode the reset" claim can't go vacuous on a fast tick
+        if lp._inflight:
+            chaos_tick(lp, rel)
+
+    injector.on_tick = on_tick
+    hit = run_once(loop, trace, max_wall, injector=injector)
+    eng = srv.decode_engine("fm0")             # identity changed at restore
+    recompiles = eng.compile_count() + fm.compile_count() - compiles
+    fails = failure_counters(hit.values(), loop=loop, engine=eng)
+
+    # zero request loss, everything terminal and ok in BOTH runs
+    assert len(base) == len(trace) and len(hit) == len(trace), \
+        f"dropped requests: base={len(base)} reset={len(hit)}/{len(trace)}"
+    for i, r in hit.items():
+        assert r.finish_time is not None, f"non-terminal request {i}"
+        assert r.ok, f"request {i} lost to the reset: {r.status}"
+    assert fault.resets == 1 and fails["resets_survived"] >= 1
+    assert fails["digest_failures"] == 0
+    survivors = sum(1 for r in hit.values() if r.resets_survived > 0)
+    assert survivors >= 1, "no in-flight stream actually rode the reset"
+    # parity is attributable to restore only if neither run preempted
+    p_hit = eng.preemptions
+    assert p_base == 0 and p_hit == 0, (p_base, p_hit)
+
+    mismatched = 0
+    for i in base:
+        if not np.array_equal(np.asarray(base[i].result),
+                              np.asarray(hit[i].result)):
+            mismatched += 1
+    assert mismatched == 0, \
+        f"{mismatched}/{len(base)} streams lost token parity over the reset"
+    assert recompiles == 0, \
+        f"snapshot/restore added {recompiles} jit keys after priming"
+
+    print(f"reset: {len(hit)}/{len(trace)} served ok, "
+          f"{survivors} streams rode the reset, parity exact, "
+          f"recompiles={recompiles}")
+    return {
+        "trace_len": len(trace),
+        "served_ok": len(hit),
+        "resets_survived": fails["resets_survived"],
+        "streams_riding_reset": survivors,
+        "digest_failures": fails["digest_failures"],
+        "parity_mismatched": mismatched,
+        "steady_state_recompiles": recompiles,
+        "spilled_pages": fails["spilled_pages"],
+        "restored_pages": fails["restored_pages"],
+    }
+
+
+def bench_spill_resume(srv, cfg, max_new):
+    fm = srv.fms["fm0"]
+    rng = np.random.RandomState(11)
+    prompts = [rng.randint(0, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(2)]
+
+    def run(total_pages, spill_bytes):
+        eng = DecodeEngine(fm, num_slots=2, prompt_len=8, max_new=max_new,
+                           chunk=4, paged=True, page_size=4,
+                           total_pages=total_pages, spill_bytes=spill_bytes,
+                           temperature=0.7, top_k=8)
+        if spill_bytes:
+            # resume cost must time the H2D copy, not the one-time compile
+            eng.warm_spill()
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            for i, p in enumerate(prompts):
+                eng.join(f"g{i}", p, adapter_id="lora0",
+                         max_new_tokens=max_new, rid=i)
+            done = eng.drain()
+        return eng, {d.rid: d.tokens for d in done}
+
+    ref_eng, ref = run(48, 0)                    # big arena: never preempts
+    assert ref_eng.preemptions == 0
+    spill_eng, spill = run(10, 64 << 20)         # starved arena, spill tier
+    plain_eng, plain = run(10, 0)                # starved arena, re-prefill
+    assert spill_eng.preemptions > 0 and plain_eng.preemptions > 0
+    assert spill_eng.spill_resumes > 0
+    assert all(kind == "spill" for kind, _ in spill_eng.resume_costs)
+    assert spill_eng.digest_failures == 0
+
+    # lossless preemption: the spill run IS the never-preempted run
+    for rid, toks in ref.items():
+        assert spill[rid] == toks, f"stream {rid} lost parity through spill"
+
+    spill_costs = [c for _, c in spill_eng.resume_costs]
+    plain_costs = [c for _, c in plain_eng.resume_costs]
+    assert plain_costs, "re-prefill run recorded no resume costs"
+    m_spill = float(np.mean(spill_costs))
+    m_plain = float(np.mean(plain_costs))
+    # restored-stream TTFT: a spill resume restores pages by DMA instead of
+    # recomputing the whole context through the model
+    assert m_spill < m_plain, \
+        f"spill resume ({m_spill:.4f}s) not faster than re-prefill " \
+        f"({m_plain:.4f}s)"
+
+    print(f"spill_resume: parity exact over {spill_eng.preemptions} "
+          f"preemptions; resume cost spill={m_spill * 1e3:.1f}ms "
+          f"vs re-prefill={m_plain * 1e3:.1f}ms "
+          f"(x{m_plain / max(m_spill, 1e-9):.2f})")
+    return {
+        "preemptions_spill": spill_eng.preemptions,
+        "preemptions_plain": plain_eng.preemptions,
+        "spill_resumes": spill_eng.spill_resumes,
+        "spilled_pages": spill_eng.spilled_pages,
+        "restored_pages": spill_eng.restored_pages,
+        "parity_exact": True,
+        "resume_cost_spill_ms": round(m_spill * 1e3, 3),
+        "resume_cost_reprefill_ms": round(m_plain * 1e3, 3),
+        "resume_speedup": round(m_plain / max(m_spill, 1e-9), 3),
+    }
+
+
+def run_all(out_path: str = None, smoke: bool = False):
+    global HORIZON, GEN_RPS
+    if smoke:
+        HORIZON, GEN_RPS = 0.8, 4.0
+    srv, cfg, loop = build()
+    max_wall = 60.0 if smoke else 300.0
+    loop.warmup(gen_task="gen0")
+
+    reset = bench_reset(srv, cfg, loop, max_wall)
+    spill = bench_spill_resume(srv, cfg, max_new=16 if smoke else 24)
+
+    out = {
+        "config": cfg.name,
+        "horizon_s": HORIZON,
+        "reset": reset,
+        "spill_resume": spill,
+    }
+    write_serving_section("recovery", out, out_path)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: short horizon, lighter rates")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    run_all(out_path=args.out, smoke=args.smoke)

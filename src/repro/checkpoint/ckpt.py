@@ -67,6 +67,37 @@ def latest_step(ckpt_dir: str | Path) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def save_snapshot(path: str | Path, snap) -> Path:
+    """Persist an ``EngineSnapshot`` (core.spill) to ``<path>.npz`` +
+    ``<path>.meta.json`` with the same atomic-publish discipline as ``save``.
+    The snapshot's host spill arena is deliberately NOT serialized — it is a
+    RAM cache whose misses fall back to recompute, so a cross-process restore
+    starts with an empty one and loses nothing but warm-up time."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    arrays, meta = snap.to_host_payload()
+    tmp = path.parent / f".tmp-{path.name}.npz"
+    np.savez(tmp, **arrays)
+    path.with_suffix(path.suffix + ".meta.json").write_text(json.dumps(meta))
+    out = path.with_suffix(path.suffix + ".npz")
+    os.replace(tmp, out)            # atomic publish
+    return out
+
+
+def load_snapshot(path: str | Path):
+    """Load an ``EngineSnapshot`` written by ``save_snapshot``. Digest
+    verification happens in ``DecodeEngine.restore``, not here — a snapshot
+    corrupted on disk restores with its bad pages dropped and their streams
+    requeued, never with poisoned KV."""
+    from repro.core.spill import EngineSnapshot
+    path = Path(path)
+    data = np.load(path.with_suffix(path.suffix + ".npz"))
+    meta = json.loads(
+        path.with_suffix(path.suffix + ".meta.json").read_text())
+    return EngineSnapshot.from_host_payload(
+        {k: data[k] for k in data.files}, meta)
+
+
 def restore(ckpt_dir: str | Path, tree_like, *, step: Optional[int] = None,
             shardings=None):
     """Restore into the structure of ``tree_like``. ``shardings``: matching

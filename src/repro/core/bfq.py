@@ -119,6 +119,14 @@ class SchedulerBase:
         v.queue.remove(req)
         return True
 
+    def snapshot_tags(self) -> Optional[dict]:
+        """Virtual-time state for an engine snapshot (durability layer).
+        Baselines carry no cross-request tag state — nothing to capture."""
+        return None
+
+    def restore_tags(self, tags: Optional[dict]):
+        return None
+
     @staticmethod
     def _pop(vfms, selected):
         for r in selected:
@@ -135,6 +143,20 @@ class BFQ(SchedulerBase):
         self.v = 0.0                          # global virtual tag
         self._tail: dict[str, float] = {}     # F of task's last ENQUEUED request
         self._last_dispatched: dict[str, float] = {}  # F of last DISPATCHED
+
+    def snapshot_tags(self) -> dict:
+        """Capture the virtual-time state (global tag + per-task finish-tag
+        chains) for the durability layer: a restored engine resumes with the
+        SAME fair-share history, so a reset cannot reset anyone's share."""
+        return {"v": self.v, "tail": dict(self._tail),
+                "last_dispatched": dict(self._last_dispatched)}
+
+    def restore_tags(self, tags: Optional[dict]):
+        if not tags:
+            return
+        self.v = float(tags["v"])
+        self._tail = dict(tags["tail"])
+        self._last_dispatched = dict(tags["last_dispatched"])
 
     def on_arrival(self, vfm: VFM, req: Request, now: float):
         """Eqs. 1-2. Token-based FMs (paper §4.2): the expected service time

@@ -173,6 +173,40 @@ Admissions are recorded in ``admitted_log`` (drained by
 ``ServeLoop.take_admitted``-style callers) so schedulers can charge prompt
 tokens when the prefill ACTUALLY runs — a request cancelled or shed while
 deferred was never charged and cannot distort fair shares.
+
+**Durability plane** (paged pool with ``spill_bytes > 0``): device-state
+loss is allowed to cost time, never tokens. Three paths move KV state
+across the device boundary, all digest-guarded:
+
+  * *spill on eviction* — a preemption victim's pages, per-page scales,
+    running drift trackers, last token and PRNG key are captured D2H into
+    the bounded host arena (``core.spill.HostSpillArena``, LRU by bytes)
+    before release; a registered prefix whose LAST sharer releases spills
+    its pages the same way (keyed by the chained prefix digest) instead of
+    evaporating. Over-budget entries are SKIPPED, not force-fit — the spill
+    tier is an accelerator, losing it only costs a re-prefill.
+  * *restore on re-entry* — a deferred resume whose spill entry survived
+    restores by H2D page write-back (no re-prefill, exact token AND
+    sampling parity: ``spill_resumes``/``resume_costs``); a joining prompt
+    whose prefix chain lives only in the spill arena restores those pages
+    and re-registers them (``spill_prefix_hits``). The pending gate sizes
+    a spill-backed resume by its TRUE restored page count (spill-entry
+    meta), not its admission bucket, so the restore and its re-prefill
+    fallback are both viable at admission time.
+  * *snapshot/restore* — ``snapshot()`` captures the engine's full logical
+    state (used pages D2H, slots, pending, registry, counters, PRNG keys)
+    with a sha256 digest per page; ``restore()`` rebuilds a FRESH arena
+    from it, verifying every page digest. ``reuse_jits_from`` shares the
+    dead engine's jit caches (executables are code, not device state) so
+    an in-process device reset is recompile-free; ``checkpoint.ckpt``
+    round-trips the snapshot through disk for cross-process restores.
+
+The digest contract on every path: bytes re-enter the arena only after
+their sha256 matches what was stamped at capture. A mismatch increments
+``digest_failures``, drops the entry (spill) or the page's registry entry
+plus the mapping streams via requeue (snapshot), and the affected stream
+falls back to lossless re-prefill from host-side tokens — corrupted
+durable state can never surface as wrong tokens.
 """
 from __future__ import annotations
 
@@ -187,6 +221,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.physical import PAD_SENTINEL, PhysicalFM, bucket_for
+from repro.core.spill import EngineSnapshot, HostSpillArena
 from repro.models import lm
 
 FREE = PAD_SENTINEL   # free-slot adapter sentinel (same as run_batch padding)
@@ -270,7 +305,10 @@ class DecodeEngine:
                  sample_seed: int = 0, paged: bool = False,
                  page_size: int = 16, total_pages: Optional[int] = None,
                  prefix_sharing: bool = True, scale_refresh: float = 2.0,
-                 pending_lookahead: int = 4, hol_skip_cap: int = 4):
+                 pending_lookahead: int = 4, hol_skip_cap: int = 4,
+                 spill_bytes: int = 0,
+                 spill_arena: Optional[HostSpillArena] = None,
+                 deadline_clamp: bool = True):
         cfg = fm.cfg
         assert cfg.vocab_size > 0 and not cfg.is_representation, \
             "DecodeEngine serves generative decoder LMs (vocab head required)"
@@ -345,7 +383,13 @@ class DecodeEngine:
             self.hol_skip_cap = max(1, int(hol_skip_cap))
             self._hol_skips = 0
             self.hol_bypasses = 0
+            # host-RAM spill tier (module docstring, durability section):
+            # preemption victims and last-sharer prefix evictions spill D2H
+            # instead of being destroyed; resume/re-join restore by H2D copy
+            self.spill = spill_arena if spill_arena is not None else (
+                HostSpillArena(spill_bytes) if spill_bytes > 0 else None)
         else:
+            self.spill = None
             # the persistent pool: allocated once, updated in place (donated)
             self.pool = lm.init_cache(cfg, self.num_slots, self.s_max,
                                       kv_quant=kv_quant)
@@ -369,6 +413,22 @@ class DecodeEngine:
         self.deadline_sheds = 0      # pending entries expired unadmitted
         self.stranded_rejections = 0  # stranded entries terminally rejected
         self.cancels = 0             # client cancel() unwinds
+        # durability-layer state (spill tier + snapshot/restore)
+        self.spilled_pages = 0       # pages captured D2H into the host arena
+        self.restored_pages = 0      # pages restored H2D from the host arena
+        self.digest_failures = 0     # corrupted spill/snapshot pages detected
+        self.spill_resumes = 0       # preempted streams resumed without prefill
+        self.spill_prefix_hits = 0   # joins that restored >= 1 spilled prefix page
+        self.resume_costs: list[tuple[str, float]] = []  # ("spill"|"reprefill", s)
+        self._jit_gather = None       # padded fixed-width D2H page capture
+        self._jit_page_restore = None  # padded H2D page write-back
+        self._jit_slot_restore = None  # per-slot scale/len write-back
+        # deadline overrun clamp: EMA of per-token decode seconds, used to
+        # shrink the next chunk to a ladder size when a live deadline is
+        # nearer than a full chunk (satellite; see step_chunk)
+        self.deadline_clamp = bool(deadline_clamp)
+        self._step_ema = 0.0
+        self.deadline_clamps = 0     # chunks shortened by the clamp
 
     # ---- occupancy ----
     def free_slots(self) -> list[int]:
@@ -392,8 +452,10 @@ class DecodeEngine:
         fns = (list(self._jit_prefill.values()) +
                list(self._jit_decode.values()) +
                list(self._jit_write.values()))
-        if getattr(self, "_jit_rescale", None) is not None:
-            fns.append(self._jit_rescale)
+        for name in ("_jit_rescale", "_jit_gather", "_jit_page_restore",
+                     "_jit_slot_restore"):
+            if getattr(self, name, None) is not None:
+                fns.append(getattr(self, name))
         return sum(f._cache_size() if hasattr(f, "_cache_size") else 1
                    for f in fns)
 
@@ -504,7 +566,13 @@ class DecodeEngine:
 
     def _release_pages(self, pages):
         """Drop one reference per page; pages whose refcount reaches zero
-        return to the free list and fall out of the prefix registry."""
+        return to the free list and fall out of the prefix registry. With a
+        spill arena attached, registered pages losing their LAST sharer are
+        captured D2H (keyed by their chained digest) before the id is
+        recycled — the prefix survives the idle gap in host RAM. The
+        capture happens before any later allocation can rewrite the page;
+        within this call the device content is still intact."""
+        spillable = []
         for p in pages:
             p = int(p)
             r = self._page_refs[p] = self._page_refs[p] - 1
@@ -514,6 +582,10 @@ class DecodeEngine:
                 key = self._page_key.pop(p, None)
                 if key is not None and self._prefix_registry.get(key) == p:
                     del self._prefix_registry[key]
+                    if self.spill is not None:
+                        spillable.append((p, key))
+        if spillable:
+            self._spill_prefix_pages(spillable)
 
     def _release_slot_pages(self, slot: int):
         self._release_pages(self._ptab[slot, :self._held[slot]])
@@ -584,6 +656,246 @@ class DecodeEngine:
                     np.broadcast_to(self._ptab[None],
                                     (nper,) + self._ptab.shape))
         self._ptab_dirty = False
+
+    # ---- host-RAM spill tier (paged layout) ----
+    def _paged_subs(self):
+        return [sub for sub in self.pool
+                if isinstance(sub, dict) and "page_table" in sub]
+
+    def _gather_fn(self):
+        """D2H capture of up to ``pages_per_slot`` pages plus one slot's
+        running scales/drift trackers in ONE dispatch. The page-id vector is
+        padded to the fixed width with the trash page, so the gather
+        compiles exactly once — spill traffic never retraces."""
+        if self._jit_gather is None:
+            def gather(pool, page_idx, slot):
+                out = []
+                for sub in pool:
+                    if not (isinstance(sub, dict) and "page_table" in sub):
+                        continue
+                    out.append({
+                        "k": sub["k"][:, page_idx],
+                        "v": sub["v"][:, page_idx],
+                        "k_scale": sub["k_scale"][:, page_idx],
+                        "v_scale": sub["v_scale"][:, page_idx],
+                        "slot_k_scale": sub["slot_k_scale"][:, slot],
+                        "slot_v_scale": sub["slot_v_scale"][:, slot],
+                        "k_max": sub["k_max"][:, slot],
+                        "v_max": sub["v_max"][:, slot],
+                    })
+                return out
+            self._jit_gather = jax.jit(gather)
+        return self._jit_gather
+
+    def _page_restore_fn(self):
+        """H2D write-back of up to ``pages_per_slot`` pages' int8 codes and
+        per-page scales. Padded page ids point at the trash page (whose
+        content is garbage by contract), so duplicate trash writes from the
+        padding are harmless and the write compiles exactly once."""
+        if self._jit_page_restore is None:
+            donate = self._donate(0)
+
+            def write(pool, data, page_idx):
+                out, i = [], 0
+                for sub in pool:
+                    if not (isinstance(sub, dict) and "page_table" in sub):
+                        out.append(sub)
+                        continue
+                    d_, i = data[i], i + 1
+                    d = dict(sub)
+                    d["k"] = sub["k"].at[:, page_idx].set(d_["k"])
+                    d["v"] = sub["v"].at[:, page_idx].set(d_["v"])
+                    d["k_scale"] = sub["k_scale"].at[:, page_idx].set(
+                        d_["k_scale"])
+                    d["v_scale"] = sub["v_scale"].at[:, page_idx].set(
+                        d_["v_scale"])
+                    out.append(d)
+                return out
+
+            self._jit_page_restore = jax.jit(write, donate_argnums=donate)
+        return self._jit_page_restore
+
+    def _slot_restore_fn(self):
+        """H2D write-back of one slot's running scales, drift trackers and
+        true length — the second half of a spill resume."""
+        if self._jit_slot_restore is None:
+            donate = self._donate(0)
+
+            def write(pool, state, slot, true_len):
+                out, i = [], 0
+                for sub in pool:
+                    if not (isinstance(sub, dict) and "page_table" in sub):
+                        out.append(sub)
+                        continue
+                    st, i = state[i], i + 1
+                    d = dict(sub)
+                    d["slot_k_scale"] = sub["slot_k_scale"].at[:, slot].set(
+                        st["slot_k_scale"])
+                    d["slot_v_scale"] = sub["slot_v_scale"].at[:, slot].set(
+                        st["slot_v_scale"])
+                    d["k_max"] = sub["k_max"].at[:, slot].set(st["k_max"])
+                    d["v_max"] = sub["v_max"].at[:, slot].set(st["v_max"])
+                    d["len"] = sub["len"].at[:, slot].set(true_len)
+                    out.append(d)
+                return out
+
+            self._jit_slot_restore = jax.jit(write, donate_argnums=donate)
+        return self._jit_slot_restore
+
+    def _capture_pages(self, pages: np.ndarray, slot: int) -> list:
+        """Pull ``pages`` (and ``slot``'s running state) to host arrays:
+        one padded gather dispatch, one host sync."""
+        n = len(pages)
+        idx = np.full((self.pages_per_slot,), TRASH_PAGE, np.int32)
+        idx[:n] = pages
+        dev = self._gather_fn()(self.pool, jnp.asarray(idx), jnp.int32(slot))
+        host = []
+        for sub in jax.device_get(dev):      # one transfer for the whole blob
+            host.append({
+                "k": np.asarray(sub["k"][:, :n]),
+                "v": np.asarray(sub["v"][:, :n]),
+                "k_scale": np.asarray(sub["k_scale"][:, :n]),
+                "v_scale": np.asarray(sub["v_scale"][:, :n]),
+                "slot_k_scale": np.asarray(sub["slot_k_scale"]),
+                "slot_v_scale": np.asarray(sub["slot_v_scale"]),
+                "k_max": np.asarray(sub["k_max"]),
+                "v_max": np.asarray(sub["v_max"]),
+            })
+        return host
+
+    def _restore_pages(self, blob: list, pages: np.ndarray):
+        """Write captured page content back into arena pages ``pages``
+        (freshly allocated — possibly different ids than at capture)."""
+        n = len(pages)
+        W = self.pages_per_slot
+        idx = np.full((W,), TRASH_PAGE, np.int32)
+        idx[:n] = pages
+        data = []
+        for sub in blob:
+            d = {}
+            for k in ("k", "v", "k_scale", "v_scale"):
+                a = np.asarray(sub[k])
+                pad = np.zeros((a.shape[0], W) + a.shape[2:], a.dtype)
+                pad[:, :n] = a[:, :n]
+                d[k] = pad
+            data.append(d)
+        self.pool = self._page_restore_fn()(self.pool, data,
+                                            jnp.asarray(idx))
+
+    def _spill_stream(self, slot: int, s: DecodeSlot):
+        """Capture a preemption victim's full KV state D2H before its pages
+        are released: pages + scales + drift trackers + last token + PRNG
+        key. Resume restores all of it — no re-prefill, no re-quantization,
+        exact token AND sampling parity with a never-preempted run."""
+        n = int(self._held[slot])
+        if n == 0:
+            return
+        pages = self._ptab[slot, :n]
+        blob = self._capture_pages(pages, slot)
+        meta = {
+            "n_pages": n,
+            "true_len": int(self._lens[slot]),
+            "last_token": int(np.asarray(self._tokens[slot])),
+            "key": np.asarray(self._keys[slot]),
+        }
+        if self.spill.put(("stream", s.rid), blob, meta):
+            self.spilled_pages += n
+
+    def _drop_stream_spill(self, rid: int):
+        if self.spill is not None:
+            self.spill.pop(("stream", rid))
+
+    def _try_spill_resume(self, req: _PendingJoin) -> Optional[int]:
+        """Resume a preempted stream from its host-RAM spill: allocate fresh
+        pages, H2D-restore its int8 codes/scales/trackers/PRNG key, rebuild
+        the page table and re-register its prefix — skipping the re-prefill
+        entirely. Returns the slot, or None to fall back to re-prefill
+        (spill missing/evicted, digest mismatch, or not enough free pages
+        for the exact restored length)."""
+        entry = self.spill.get(("stream", req.rid))
+        if entry is None:
+            return None
+        if not entry.verify():
+            self.spill.pop(("stream", req.rid))
+            self.digest_failures += 1
+            return None
+        n = int(entry.meta["n_pages"])
+        if len(self._free_pages) < n or not self.free_slots():
+            return None
+        t0 = time.perf_counter()
+        self.spill.pop(("stream", req.rid))
+        s = req.resume
+        slot = self.free_slots()[0]
+        pages = self._take_pages(n)
+        true_len = int(entry.meta["true_len"])
+        self._restore_pages(entry.blob, pages)
+        state = [{k: sub[k] for k in ("slot_k_scale", "slot_v_scale",
+                                      "k_max", "v_max")}
+                 for sub in entry.blob]
+        self.pool = self._slot_restore_fn()(self.pool, state,
+                                            jnp.int32(slot),
+                                            jnp.int32(true_len))
+        self._ptab[slot, :n] = pages
+        self._held[slot] = n
+        self._lens[slot] = true_len
+        self._ptab_dirty = True
+        self._tokens = self._tokens.at[slot].set(
+            jnp.int32(int(entry.meta["last_token"])))
+        self._keys = self._keys.at[slot].set(
+            jnp.asarray(entry.meta["key"]))
+        self.slots[slot] = s
+        aslot = self.fm.adapters.index(req.adapter_id)
+        self._slot_adapters[slot] = aslot
+        self._seg_key = None
+        # restored prompt pages sit at their original page-table positions,
+        # so re-registration republishes the prefix for future sharers
+        if s.prompt is not None:
+            self._register_prefix(s.adapter_id, np.asarray(s.prompt),
+                                  slot, s.prompt_tokens)
+        self.admissions += 1      # progress signal (watchdog); not re-logged
+        self.spill_resumes += 1
+        self.restored_pages += n
+        self.resume_costs.append(("spill", time.perf_counter() - t0))
+        return slot
+
+    def _spill_prefix_pages(self, pairs: list):
+        """Capture last-sharer prefix pages D2H as they leave the registry,
+        keyed by their chained digest — a later join whose prompt chain
+        reaches the digest restores them by DMA instead of recompute."""
+        pages = np.array([p for p, _ in pairs], np.int32)
+        blob = self._capture_pages(pages, 0)    # slot state ignored
+        for j, (p, key) in enumerate(pairs):
+            per_page = [{k: sub[k][:, j:j + 1]
+                         for k in ("k", "v", "k_scale", "v_scale")}
+                        for sub in blob]
+            if self.spill.put(("prefix", key), per_page, {}):
+                self.spilled_pages += 1
+
+    def _match_spilled_prefix(self, adapter_id: Optional[str], prompt,
+                              skip: int) -> list[tuple[bytes, object]]:
+        """Continue a prompt's digest chain past the live registry into the
+        spill arena: (key, entry) pairs for consecutive spilled full pages
+        starting at page index ``skip``. A digest mismatch ends the chain
+        (the corrupt entry is dropped and counted)."""
+        if self.spill is None or not (self.paged and self.prefix_sharing) \
+                or prompt is None:
+            return []
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) > self.prompt_len:
+            prompt = prompt[-self.prompt_len:]
+        out = []
+        for j, key in enumerate(self._prefix_keys(adapter_id, prompt)):
+            if j < skip:
+                continue
+            entry = self.spill.get(("prefix", key))
+            if entry is None:
+                break
+            if not entry.verify():
+                self.spill.pop(("prefix", key))
+                self.digest_failures += 1
+                break
+            out.append((key, entry))
+        return out
 
     # ---- jitted planes ----
     @staticmethod
@@ -928,6 +1240,11 @@ class DecodeEngine:
         return self._admit_now(req)
 
     def _admit_now(self, req: _PendingJoin) -> int:
+        if req.resume is not None and self.paged and self.spill is not None:
+            slot = self._try_spill_resume(req)
+            if slot is not None:
+                return slot
+        t_adm = time.perf_counter()
         prompt = req.prompt
         if len(prompt) > self.prompt_len:
             warnings.warn(
@@ -977,6 +1294,16 @@ class DecodeEngine:
             npages = self._pages_for(self._adm_s_max(plen))
             shared = self._match_prefix(req.adapter_id, true_prompt)
             m = len(shared)
+            # continue the digest chain into the spill arena: spilled
+            # prefix pages are restored by DMA into this admission's own
+            # freshly allocated pages (positions m..m+k-1), verified
+            # against their digests, and re-registered below — the prefill
+            # still ran (chunked shared-prefix prefill is a separate open
+            # item) but its recomputed content for those positions is
+            # discarded in favor of the restored bit-exact pages
+            spilled = self._match_spilled_prefix(req.adapter_id, true_prompt,
+                                                 m)
+            k = len(spilled)
             priv = self._take_pages(npages - m)
             pages = priv
             if m:
@@ -985,12 +1312,25 @@ class DecodeEngine:
                 self.shared_pages_mapped += m
                 pages = np.concatenate(
                     [np.asarray(shared, np.int32), priv])
+            if k:
+                blob = [
+                    {key: np.concatenate([e.blob[j][key] for _, e in spilled],
+                                         axis=1)
+                     for key in ("k", "v", "k_scale", "v_scale")}
+                    for j in range(len(spilled[0][1].blob))]
+                self._restore_pages(blob, priv[:k])
+                for key, _ in spilled:
+                    self.spill.pop(("prefix", key))
+                self.spill_prefix_hits += 1
+                self.restored_pages += k
             # COW admission: the slot MAPS the shared prefix pages, but the
             # scatter points those positions at the trash page — their
             # (bit-identical) content is already in the arena and must not
-            # be rewritten while other streams read it
+            # be rewritten while other streams read it; restored spilled
+            # positions are likewise masked so the scatter cannot overwrite
+            # the restored content
             scatter = pages.copy()
-            scatter[:m] = TRASH_PAGE
+            scatter[:m + k] = TRASH_PAGE
             self.pool = self._paged_write_fn(npages)(
                 self.pool, cache, jnp.int32(slot), jnp.asarray(scatter),
                 jnp.int32(true_len))
@@ -1028,6 +1368,10 @@ class DecodeEngine:
             if not fin_ok:
                 s.status = "quarantined"
             self.slots[slot] = s
+            # a stale spill entry (free pages or budget forced the fallback)
+            # no longer matches the stream's state once it decodes again
+            self._drop_stream_spill(s.rid)
+            self.resume_costs.append(("reprefill", now - t_adm))
         else:
             self.slots[slot] = DecodeSlot(
                 rid=req.rid, task_id=req.task_id, adapter_slot=aslot,
@@ -1062,10 +1406,16 @@ class DecodeEngine:
     def _preempt(self, slot: int):
         """Evict a live stream to reclaim its pages: it re-queues at the
         FRONT of the pending queue with its generated prefix folded into the
-        prompt (re-admission also refreshes its int8 scales). Sampling
-        streams lose PRNG continuity across a preemption; greedy streams
-        resume exactly."""
+        prompt (re-admission also refreshes its int8 scales). With a spill
+        arena attached, the victim's pages/scales/trackers/PRNG key are
+        captured D2H first and resume restores them by H2D copy — exact
+        token AND sampling-stream parity; the folded prompt is kept as the
+        recompute fallback for when the host budget evicts the spill.
+        Without an arena, sampling streams lose PRNG continuity across a
+        preemption; greedy streams resume exactly."""
         s = self.slots[slot]
+        if self.spill is not None:
+            self._spill_stream(slot, s)
         prompt = np.concatenate([
             np.asarray(s.prompt if s.prompt is not None else [], np.int32),
             np.asarray(s.tokens, np.int32)])
@@ -1142,6 +1492,24 @@ class DecodeEngine:
         return [i for i, r in enumerate(self.pending)
                 if not self._never_fits(r)]
 
+    def _spill_resume_need(self, req: _PendingJoin) -> Optional[int]:
+        """Gate-level page need to resume ``req`` from its stream spill, or
+        None when no usable entry exists (nothing spilled / budget evicted
+        it / it could never fit even an empty arena — the gate then prices
+        the legacy re-prefill instead). A spill resume restores the TRUE
+        page count held at preemption, which can exceed the re-prefill
+        bucket's (truncated) estimate — pricing it honestly is what lets
+        ``_try_spill_resume`` actually find its pages free."""
+        if self.spill is None or req.resume is None:
+            return None
+        entry = self.spill.peek(("stream", req.rid))
+        if entry is None:
+            return None
+        n = int(entry.meta["n_pages"])
+        if n + self._pages_for(self.chunk) > self.total_pages - 1:
+            return None
+        return n + self._pages_for(self.chunk) + self._imminent_page_need()
+
     def _next_admissible_pending(self) -> Optional[int]:
         """Index of the next deferred join the pool can take: the (viable)
         head, or — bounded lookahead — a smaller prompt within
@@ -1157,9 +1525,15 @@ class DecodeEngine:
             self.pending_lookahead
         for idx in viable[:window]:
             req = self.pending[idx]
-            if len(self._free_pages) >= self._admission_need(
-                    len(req.prompt), prompt=req.prompt,
-                    adapter_id=req.adapter_id):
+            need = self._admission_need(len(req.prompt), prompt=req.prompt,
+                                        adapter_id=req.adapter_id)
+            spill_need = self._spill_resume_need(req)
+            if spill_need is not None:
+                # both resume paths must be viable: the spill restore (its
+                # true page count) AND the re-prefill fallback it degrades
+                # to on a digest mismatch discovered at restore time
+                need = max(need, spill_need)
+            if len(self._free_pages) >= need:
                 return idx
         return None
 
@@ -1192,6 +1566,7 @@ class DecodeEngine:
         if p.resume is not None:
             p.resume.status = status
             p.resume.done = True
+            self._drop_stream_spill(p.rid)
         self.rejected.append(p)
 
     def _expire_deadlines(self, now: float):
@@ -1246,6 +1621,7 @@ class DecodeEngine:
                 if p.resume is not None:
                     p.resume.status = "cancelled"
                     p.resume.done = True
+                    self._drop_stream_spill(p.rid)
                 self.cancels += 1
                 return ("pending", p)
         return None
@@ -1294,6 +1670,76 @@ class DecodeEngine:
                 f"nothing is left to free; raise total_pages or shrink "
                 f"prompt_buckets/chunk")
 
+    # ---- deadline overrun clamp (satellite) ----
+    def chunk_ladder(self) -> tuple[int, ...]:
+        """The only chunk lengths the clamp ever dispatches (descending):
+        full, half, single-step. A small fixed ladder keeps the set of
+        decode jit keys bounded — ``warm_decode_ladder`` can precompile all
+        of them so deadline traffic never recompiles in steady state."""
+        return tuple(sorted({self.chunk, max(1, self.chunk // 2), 1},
+                            reverse=True))
+
+    def _effective_chunk(self, live: list[int], now: float) -> int:
+        """Deadlines are only checked on chunk entry, so a full chunk can
+        overrun a tight SLO by ``chunk - 1`` steps. When the nearest live
+        deadline is closer than a full chunk (measured against the per-step
+        EMA), shrink this dispatch to the largest ladder length that still
+        lands within ~one step of the deadline."""
+        if not self.deadline_clamp or self._step_ema <= 0.0:
+            return self.chunk
+        tight = min((self.slots[i].deadline for i in live), default=float("inf"))
+        if tight == float("inf"):
+            return self.chunk
+        room = max(1, int(np.ceil((tight - now) / self._step_ema)))
+        if room >= self.chunk:
+            return self.chunk
+        for c in self.chunk_ladder():
+            if c <= room:
+                self.deadline_clamps += 1
+                return c
+        self.deadline_clamps += 1
+        return 1
+
+    def warm_decode_ladder(self):
+        """Precompile (and dispatch once) every ladder chunk length against
+        the live pool so the deadline clamp never recompiles in steady
+        state. Only callable while no stream is live: the garbage rows this
+        steps land in the trash page (paged) or in regions the next
+        admission overwrites wholesale (dense) — the same free-slots-keep-
+        stepping contract the engine already relies on. Sampling PRNG keys
+        DO advance (they advance every chunk for every slot anyway)."""
+        assert self.active_count() == 0, \
+            "warm_decode_ladder must run on an idle engine"
+        if self.paged:
+            self._sync_page_table()
+        cap = self.fm.adapters.capacity()
+        perm, inv, blocks = self._segments(cap)
+        for c in self.chunk_ladder():
+            self.pool, self._tokens, self._keys, _, _, _ = \
+                self._decode_fn(cap, c)(
+                    self.fm.params, self.pool, self._tokens, self._keys,
+                    self.fm.adapters.stacked(),
+                    jnp.asarray(self._slot_adapters), perm, inv, blocks)
+
+    def warm_spill(self):
+        """Precompile the spill tier's D2H gather and H2D restore scatters
+        so spill traffic, spilled-prefix restores and spill resumes never
+        retrace in steady state. The warm round trip is a no-op: an empty
+        capture reads only the trash page (garbage by contract), the
+        restore scatters zeros back into it, and slot 0's running state is
+        written back to itself unchanged."""
+        assert self.active_count() == 0, \
+            "warm_spill must run on an idle engine"
+        if self.spill is None or not self.paged:
+            return
+        none_ = np.empty((0,), np.int32)
+        blob = self._capture_pages(none_, 0)
+        self._restore_pages(blob, none_)
+        state = [{k: sub[k] for k in ("slot_k_scale", "slot_v_scale",
+                                      "k_max", "v_max")} for sub in blob]
+        self.pool = self._slot_restore_fn()(self.pool, state, jnp.int32(0),
+                                            jnp.int32(int(self._lens[0])))
+
     def step_chunk(self) -> list[DecodeSlot]:
         """Advance every occupied slot by up to ``chunk`` tokens under one
         jitted scan; retire and return the slots that finished. Paged:
@@ -1326,24 +1772,29 @@ class DecodeEngine:
         if live:
             if self.paged:
                 self._sync_page_table()
+            eff = self._effective_chunk(live, t0)
             cap = self.fm.adapters.capacity()
             perm, inv, blocks = self._segments(cap)
+            t_disp = time.perf_counter()
             self.pool, self._tokens, self._keys, out, drift, fin = \
-                self._decode_fn(cap, self.chunk)(
+                self._decode_fn(cap, eff)(
                     self.fm.params, self.pool, self._tokens, self._keys,
                     self.fm.adapters.stacked(),
                     jnp.asarray(self._slot_adapters), perm, inv, blocks)
             out = np.asarray(out)               # one host sync per chunk
             fin = np.asarray(fin)               # rides the same sync
-            self.steps += self.chunk
+            dt = (time.perf_counter() - t_disp) / eff
+            self._step_ema = dt if self._step_ema == 0.0 \
+                else 0.5 * self._step_ema + 0.5 * dt
+            self.steps += eff
             if self.paged:
                 for i, s in enumerate(self.slots):
                     if s is not None:
-                        self._lens[i] += self.chunk
+                        self._lens[i] += eff
             now = time.perf_counter()
             for i in live:
                 s = self.slots[i]
-                take = min(self.chunk, s.max_new - len(s.tokens))
+                take = min(eff, s.max_new - len(s.tokens))
                 for t in out[i, :take]:
                     s.tokens.append(int(t))
                     if s.eos_id is not None and int(t) == s.eos_id:
@@ -1372,3 +1823,163 @@ class DecodeEngine:
         while self.active_count() or self.pending:
             out += self.step_chunk()
         return out
+
+    # ---- engine snapshot / restore (durability layer) ----
+    _COUNTERS = ("steps", "admissions", "deferrals", "preemptions",
+                 "prefix_hits", "shared_pages_mapped", "scale_refreshes",
+                 "hol_bypasses", "_hol_skips", "quarantines",
+                 "deadline_cancels", "deadline_sheds", "stranded_rejections",
+                 "cancels", "spilled_pages", "restored_pages",
+                 "digest_failures", "spill_resumes", "spill_prefix_hits",
+                 "deadline_clamps")
+
+    def _config_dict(self) -> dict:
+        """Constructor kwargs that rebuild an identical engine."""
+        return {
+            "num_slots": self.num_slots, "max_new": self.max_new,
+            "chunk": self.chunk, "kv_quant": self.kv_quant,
+            "eos_id": self.eos_id, "prompt_buckets": self.prompt_buckets,
+            "temperature": self.temperature, "top_k": self.top_k,
+            "paged": True, "page_size": self.page_size,
+            "total_pages": self.total_pages,
+            "prefix_sharing": self.prefix_sharing,
+            "scale_refresh": self.scale_refresh,
+            "pending_lookahead": self.pending_lookahead,
+            "hol_skip_cap": self.hol_skip_cap,
+            "deadline_clamp": self.deadline_clamp,
+        }
+
+    def snapshot(self) -> EngineSnapshot:
+        """Capture the engine's FULL logical state between chunks: used-page
+        contents (D2H) with per-page sha256 digests, page tables, refcounts,
+        the chained-digest prefix registry, per-slot sampling/PRNG/deadline
+        state, the pending queue and counters. The snapshot is isolated
+        (deep copies) — the live engine can keep running — and the spill
+        arena rides along BY REFERENCE (it is host RAM already). Paged-only:
+        the dense layout has no allocator state worth surviving a reset."""
+        import copy
+        assert self.paged, "snapshot/restore is a paged-arena feature"
+        used = np.nonzero(self._page_refs > 0)[0].astype(np.int32)
+        idx = jnp.asarray(used)
+        pages, slot_state = [], []
+        for sub in self._paged_subs():
+            host = jax.device_get({
+                "k": sub["k"][:, idx], "v": sub["v"][:, idx],
+                "k_scale": sub["k_scale"][:, idx],
+                "v_scale": sub["v_scale"][:, idx],
+                "slot_k_scale": sub["slot_k_scale"],
+                "slot_v_scale": sub["slot_v_scale"],
+                "k_max": sub["k_max"], "v_max": sub["v_max"],
+            })
+            pages.append({k: np.asarray(host[k])
+                          for k in ("k", "v", "k_scale", "v_scale")})
+            slot_state.append({k: np.asarray(host[k])
+                               for k in ("slot_k_scale", "slot_v_scale",
+                                         "k_max", "v_max")})
+        snap = EngineSnapshot(
+            config=self._config_dict(),
+            used_pages=used, pages=pages, page_digests={},
+            slot_state=slot_state,
+            ptab=self._ptab.copy(), held=self._held.copy(),
+            lens=self._lens.copy(), page_refs=self._page_refs.copy(),
+            slot_adapters=self._slot_adapters.copy(),
+            tokens=np.asarray(self._tokens), keys=np.asarray(self._keys),
+            slots=copy.deepcopy(self.slots),
+            pending=copy.deepcopy(list(self.pending)),
+            rejected=copy.deepcopy(self.rejected),
+            registry=dict(self._prefix_registry),
+            page_key=dict(self._page_key),
+            counters={k: getattr(self, k) for k in self._COUNTERS},
+            spill=self.spill)
+        snap.counters["admitted_log"] = list(self.admitted_log)
+        snap.page_digests = {int(p): snap.page_digest(i)
+                             for i, p in enumerate(used)}
+        return snap
+
+    @classmethod
+    def restore(cls, fm: PhysicalFM, snap: EngineSnapshot, *,
+                reuse_jits_from: Optional["DecodeEngine"] = None
+                ) -> "DecodeEngine":
+        """Rebuild a fresh engine (and device arena) from a snapshot. Every
+        restored page's sha256 digest is recomputed and verified BEFORE any
+        stream can decode against it: a corrupted page drops out of the
+        registry and every live stream mapping it is requeued through the
+        lossless fold-and-re-prefill path (``digest_failures`` counted) —
+        recovery can recompute, but it can never serve poisoned KV.
+
+        ``reuse_jits_from`` shares the old engine's jit caches when its
+        config matches (an in-process restore after a device reset — the
+        executables are code, not device state), making the restored engine
+        recompile-free from the first chunk. A cross-process restore (via
+        ``checkpoint.ckpt.load_snapshot``) recompiles on first use like any
+        fresh engine."""
+        import copy
+        eng = cls(fm, **snap.config)
+        if reuse_jits_from is not None and \
+                reuse_jits_from._config_dict() == snap.config and \
+                reuse_jits_from.fm is fm:
+            for name in ("_jit_prefill", "_jit_decode", "_jit_write",
+                         "_jit_rescale", "_jit_gather", "_jit_page_restore",
+                         "_jit_slot_restore"):
+                setattr(eng, name, getattr(reuse_jits_from, name))
+        used = np.asarray(snap.used_pages)
+        bad = [int(p) for i, p in enumerate(used)
+               if snap.page_digest(i) != snap.page_digests[int(p)]]
+        # rebuild the device arena from the host capture: full-shape host
+        # arrays (zeros outside used pages), one upload per leaf
+        for j, sub in enumerate(eng._paged_subs()):
+            cap, st = snap.pages[j], snap.slot_state[j]
+            for k in ("k", "v", "k_scale", "v_scale"):
+                full = np.zeros(sub[k].shape, np.asarray(cap[k]).dtype)
+                if len(used):
+                    full[:, used] = cap[k]
+                sub[k] = jnp.asarray(full)
+            for k in ("slot_k_scale", "slot_v_scale", "k_max", "v_max"):
+                sub[k] = jnp.asarray(st[k])
+            sub["len"] = jnp.asarray(np.broadcast_to(
+                snap.lens[None].astype(np.int32),
+                (sub["len"].shape[0], len(snap.lens))))
+        eng._ptab = snap.ptab.copy()
+        eng._held = snap.held.copy()
+        eng._lens = snap.lens.copy()
+        eng._page_refs = snap.page_refs.copy()
+        eng._free_pages = [p for p in range(eng.total_pages - 1, TRASH_PAGE,
+                                            -1) if eng._page_refs[p] == 0]
+        eng._prefix_registry = dict(snap.registry)
+        eng._page_key = dict(snap.page_key)
+        eng._ptab_dirty = True
+        eng._slot_adapters = snap.slot_adapters.copy()
+        eng._seg_key = None
+        eng._tokens = jnp.asarray(snap.tokens)
+        eng._keys = jnp.asarray(snap.keys)
+        eng.slots = copy.deepcopy(snap.slots)
+        eng.pending = collections.deque(copy.deepcopy(snap.pending))
+        eng.rejected = copy.deepcopy(snap.rejected)
+        counters = dict(snap.counters)
+        eng.admitted_log = list(counters.pop("admitted_log", []))
+        for k in cls._COUNTERS:
+            setattr(eng, k, counters.get(k, getattr(eng, k)))
+        if snap.spill is not None:
+            eng.spill = snap.spill
+        # digest-verification contract: streams mapping a corrupted page
+        # requeue through the fold (their tokens are host state and intact);
+        # the corrupt page's registry entry is gone before any join can map
+        # it — the spill capture inside the requeue is suppressed because
+        # the device content being captured is exactly what failed to verify
+        for p in bad:
+            eng.digest_failures += 1
+            key = eng._page_key.pop(p, None)
+            if key is not None:
+                eng._prefix_registry.pop(key, None)
+        if bad:
+            badset = set(bad)
+            for i, s in enumerate(eng.slots):
+                if s is None or s.done:
+                    continue
+                if badset & {int(x) for x in eng._ptab[i, :eng._held[i]]}:
+                    sp, eng.spill = eng.spill, None
+                    try:
+                        eng._preempt(i)
+                    finally:
+                        eng.spill = sp
+        return eng

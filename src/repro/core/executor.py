@@ -44,6 +44,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
+import zlib
 
 import jax
 import numpy as np
@@ -87,7 +88,8 @@ class PendingBatch:
 
 class Executor:
     def __init__(self, fm: PhysicalFM, *, head_retries: int = 2,
-                 head_backoff_s: float = 0.005):
+                 head_backoff_s: float = 0.005, retry_jitter: float = 0.5,
+                 retry_seed: int = 0):
         self.fm = fm
         # task_id -> (head object, mode); the head is stored so a rebound task
         # with a NEW head re-probes (id()-keyed caching would let a recycled
@@ -101,6 +103,17 @@ class Executor:
         self.head_backoff_s = float(head_backoff_s)
         self.head_failures = collections.Counter()  # task_id -> give-ups
         self.retries = 0                            # head re-attempts (all)
+        # bounded seeded retry jitter: a purely deterministic exponential
+        # backoff retries co-failing tasks in LOCKSTEP (every victim of one
+        # transient fault hammers the recovering dependency at the same
+        # instants); each task's delays are scaled by a per-task seeded
+        # factor in [1-jitter, 1+jitter] so retry schedules desynchronize
+        # while staying reproducible and bounded
+        self.retry_jitter = min(max(float(retry_jitter), 0.0), 0.95)
+        self.retry_seed = int(retry_seed)
+        self._retry_rng: dict[str, np.random.RandomState] = {}
+        self.retry_delays: dict[str, list[float]] = collections.defaultdict(
+            list)                                   # task_id -> slept delays
 
     @staticmethod
     def _bucketed_rows(feats_dev, idxs: list[int]):
@@ -182,6 +195,19 @@ class Executor:
             return list(y)                    # reuse the probed batched output
         return [head(feats[i]) for i in idxs]
 
+    def _retry_factor(self, tid: str) -> float:
+        """Per-task jitter multiplier in [1 - retry_jitter, 1 + retry_jitter),
+        drawn from a stream seeded by (task id, retry_seed) — stable across
+        processes (crc32, not the salted builtin hash) so retry schedules
+        are reproducible yet distinct per task."""
+        if self.retry_jitter <= 0.0:
+            return 1.0
+        rng = self._retry_rng.get(tid)
+        if rng is None:
+            seed = (zlib.crc32(tid.encode()) ^ self.retry_seed) & 0xFFFFFFFF
+            rng = self._retry_rng[tid] = np.random.RandomState(seed)
+        return 1.0 + self.retry_jitter * (2.0 * rng.random_sample() - 1.0)
+
     def _apply_head_isolated(self, tid: str, head, feats_dev, feats_fn,
                              idxs: list[int]):
         """Failure-isolation wrapper around ``_apply_head``: a raising head
@@ -190,7 +216,10 @@ class Executor:
         that keeps raising fails ONLY this task's rows with ``HeadFailure``
         sentinels. The cached probe verdict and jit are dropped on every
         failure so a head that recovers later re-probes from scratch instead
-        of replaying a stale mode."""
+        of replaying a stale mode. Backoff delays carry bounded per-task
+        seeded jitter (``retry_jitter``) so tasks co-failing on one shared
+        transient fault do not retry in lockstep; delays are recorded in
+        ``retry_delays`` per task."""
         delay = self.head_backoff_s
         err: Exception = RuntimeError("head failed")
         for attempt in range(self.head_retries + 1):
@@ -202,7 +231,9 @@ class Executor:
                 self._head_jit.pop(tid, None)
                 if attempt < self.head_retries:
                     self.retries += 1
-                    time.sleep(delay)
+                    d = delay * self._retry_factor(tid)
+                    self.retry_delays[tid].append(d)
+                    time.sleep(d)
                     delay *= 2
         self.head_failures[tid] += 1
         fail = HeadFailure(task_id=tid,

@@ -26,6 +26,10 @@ _ids = itertools.count()
 #   watchdog_shed      - the loop watchdog shed queued work of the lowest-
 #                        weight task to degrade gracefully under an engine
 #                        stall.
+# Durability note: surviving a device reset is NOT a status — a request that
+# rides through ``ServeLoop.checkpoint_restart`` keeps whatever terminal
+# status it ends with (usually "ok", token-for-token identical to a fault-
+# free run) and counts the reset in ``resets_survived`` instead.
 STATUS_OK = "ok"
 FAILURE_STATUSES = ("deadline_shed", "deadline_cancelled", "cancelled",
                     "quarantined", "head_failed", "rejected_stranded",
@@ -62,6 +66,9 @@ class Request:
     # error carries the human-readable cause for non-ok terminations
     status: str = STATUS_OK
     error: Optional[str] = None
+    # engine restores this request lived through while in flight (stamped by
+    # ServeLoop.checkpoint_restart; 0 for the overwhelming common case)
+    resets_survived: int = 0
 
     @property
     def ok(self) -> bool:

@@ -66,6 +66,21 @@ for the full catalogue). The exit paths and what each one unwinds:
     (the engine's wedge error is caught and converted into terminal
     rejections).
 
+**Durable serving state.** The loop also owns the recovery sequence that
+makes every path above stateful rather than best-effort:
+``snapshot_state`` quiesces (flushes the double-buffered pooled batch) and
+captures the engine snapshot + the scheduler's virtual-time tags + the
+in-flight request map; ``restore_state`` rebuilds the engine from it
+(every restored page sha256-verified — see ``DecodeEngine.restore``) and
+re-applies the tags so fair shares resume where they left off; and
+``checkpoint_restart`` chains quiesce → snapshot → teardown → restore →
+resume, counting ``resets_survived`` on the loop AND on every in-flight
+request. A mid-trace device reset therefore loses zero requests: live
+streams resume bit-exactly from their restored pages, pending/preempted
+entries keep their queue positions, and a request whose restored page
+fails digest verification re-prefills losslessly from its host-side
+tokens instead of decoding against poisoned KV.
+
 Non-ok terminations count ``acct.dropped`` (never ``completed``) and feed
 ``ServeLoop.failures`` — ``serving.metrics.failure_counters`` reports them.
 """
@@ -520,6 +535,59 @@ class ServeLoop:
                            t_first=t_first, vfms=vfms)
         return True
 
+    # ---- durable serving state (snapshot / restore / device reset) ----
+    def snapshot_state(self) -> dict:
+        """Quiesce (resolve the double-buffered pooled batch) and capture
+        everything a restore needs: the engine snapshot (page contents,
+        tables, refcounts, registry, slot/PRNG/deadline state, pending
+        queue), the scheduler's virtual-time tags, and the in-flight
+        request map. Host-side objects (requests, spill arena) ride by
+        reference — they are exactly the state a device reset cannot
+        touch."""
+        self._flush()
+        eng = self._engine()
+        tags = self.sched.snapshot_tags() \
+            if hasattr(self.sched, "snapshot_tags") else None
+        return {"engine": None if eng is None else eng.snapshot(),
+                "sched": tags, "inflight": dict(self._inflight)}
+
+    def restore_state(self, state: dict, *, reuse_jits_from=None):
+        """Rebuild the engine from a snapshot (digest-verified; see
+        ``DecodeEngine.restore``), swap it into the server, and re-apply
+        the scheduler's virtual-time tags so fair shares resume where they
+        left off. In-flight requests keep their identities — the retire
+        path finds them by rid exactly as before the reset."""
+        from repro.core.decode_engine import DecodeEngine
+        self._flush()
+        snap = state.get("engine")
+        if snap is not None:
+            eng = DecodeEngine.restore(self.srv.fms[self.fm_id], snap,
+                                       reuse_jits_from=reuse_jits_from)
+            self.srv.engines[self.fm_id] = eng
+        if state.get("sched") is not None \
+                and hasattr(self.sched, "restore_tags"):
+            self.sched.restore_tags(state["sched"])
+        self._inflight.update(state.get("inflight", {}))
+        # restored streams must re-arm the watchdog from NOW, not from the
+        # pre-reset progress mark
+        self._progress_mark = None
+        self._last_progress_t = time.perf_counter()
+
+    def checkpoint_restart(self) -> dict:
+        """The full recovery sequence: quiesce -> snapshot -> teardown (the
+        old engine is dropped from the server; its jit caches are reused —
+        executables are code, not device state) -> restore -> resume.
+        Returns the snapshot used. ``DeviceResetFault`` drives this with a
+        scrambled arena in between to prove restore reads nothing from the
+        dead device state."""
+        state = self.snapshot_state()
+        old = self.srv.engines.pop(self.fm_id, None)
+        self.restore_state(state, reuse_jits_from=old)
+        self.failures["resets_survived"] += 1
+        for r in self._inflight.values():
+            r.resets_survived += 1
+        return state
+
     # ---- drivers ----
     def warmup(self, *, pooled_task: Optional[str] = None,
                gen_task: Optional[str] = None, pooled_n: int = 4):
@@ -574,6 +642,16 @@ class ServeLoop:
             self.run(trace)
         finally:
             self.enforce_deadlines = enforce
+        # the deadline clamp dispatches shortened chunks from a fixed
+        # ladder, and the spill tier gathers/scatters pages with fixed-width
+        # jits; compile both now so deadline traffic, spills and restores
+        # never recompile in steady state
+        eng = self._engine()
+        if eng is not None and eng.active_count() == 0:
+            if getattr(eng, "deadline_clamp", False):
+                eng.warm_decode_ladder()
+            if getattr(eng, "spill", None) is not None:
+                eng.warm_spill()
 
     def _work_left(self) -> bool:
         eng = self._engine()

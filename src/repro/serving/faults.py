@@ -28,6 +28,15 @@ Faults and the isolation layer each one exercises:
   * ``StallFault``         — replaces ``step_chunk`` with a no-op for the
     duration: the engine stops making progress while work stays queued,
     which is exactly the signature the loop watchdog fires on.
+  * ``DeviceResetFault``   — kills the device arena mid-trace: snapshots the
+    loop's state, SCRAMBLES every pool leaf of the old engine (proving the
+    restore path reads nothing from dead device state), then drives
+    ``ServeLoop.checkpoint_restart``'s restore half. Every restored page is
+    sha256-verified; surviving streams resume token-for-token.
+  * ``SpillCorruptionFault`` — flips bits in host-RAM spill arena entries.
+    The engine detects the corruption at restore time (digest mismatch →
+    ``digest_failures``), drops the entry and falls back to lossless
+    re-prefill — corrupted spill can never surface as wrong tokens.
 
 ``ChaosInjector`` is the scheduler: pass ``inj.on_tick`` to
 ``ServeLoop.run(on_tick=...)``; call ``restore_all`` after the run so
@@ -36,6 +45,8 @@ from __future__ import annotations
 
 import dataclasses
 from typing import Optional
+
+import numpy as np
 
 from repro.distributed.fault import InjectedFailure
 
@@ -153,6 +164,73 @@ class StallFault(Fault):
         if eng is not None:
             eng.step_chunk = self._orig
         self._orig = None
+
+
+class DeviceResetFault(Fault):
+    """Simulated accelerator reset: the durability layer's headline fault.
+
+    Inject = quiesce + snapshot the loop's full serving state, scramble the
+    OLD engine's device arena (int8 codes to a constant, scales/page tables
+    to zero — any restore path that still read the dead device state would
+    produce garbage tokens and fail the bench's parity assert), drop the
+    engine from the server and restore from the snapshot. The restored
+    engine's pages are rebuilt from the snapshot's host copies, each one
+    verified against its sha256 digest. Zero requests are lost: live slots,
+    pending/preempted entries and scheduler tags all ride the snapshot."""
+
+    name = "device_reset"
+
+    def __init__(self):
+        self.resets = 0
+
+    def inject(self, loop):
+        import jax.numpy as jnp
+        eng = loop._engine()
+        if eng is None or not getattr(eng, "paged", False):
+            return
+        state = loop.snapshot_state()
+        old = loop.srv.engines.pop(loop.fm_id)
+        for sub in old.pool:
+            if isinstance(sub, dict) and "page_table" in sub:
+                sub["k"] = jnp.full_like(sub["k"], 77)
+                sub["v"] = jnp.full_like(sub["v"], -77)
+                sub["k_scale"] = jnp.zeros_like(sub["k_scale"])
+                sub["v_scale"] = jnp.zeros_like(sub["v_scale"])
+                sub["page_table"] = jnp.zeros_like(sub["page_table"])
+        loop.restore_state(state, reuse_jits_from=old)
+        loop.failures["resets_survived"] += 1
+        for r in loop._inflight.values():
+            r.resets_survived += 1
+        self.resets += 1
+
+
+class SpillCorruptionFault(Fault):
+    """Flip bits in a fraction of the host spill arena's entries (stream and
+    prefix alike). Deterministic: entries are corrupted in insertion order.
+    The engine's digest verification turns each corrupted entry into a
+    counted miss + recompute fallback — never into wrong tokens."""
+
+    def __init__(self, frac: float = 1.0):
+        self.frac = float(frac)
+        self.name = f"spill_corruption:{frac}"
+        self.corrupted = 0
+
+    def inject(self, loop):
+        eng = loop._engine()
+        spill = getattr(eng, "spill", None) if eng is not None else None
+        if spill is None or not len(spill):
+            return
+        keys = list(spill._entries)
+        for key in keys[:max(1, int(len(keys) * self.frac))]:
+            d = spill._entries[key].blob[0]
+            name = next(iter(d))
+            # spilled arrays can be non-contiguous device_get slices, where
+            # an in-place view XOR would silently mutate a reshape COPY —
+            # corrupt a contiguous copy and swap it in
+            a = np.ascontiguousarray(d[name])
+            a.view(np.uint8).reshape(-1)[::7] ^= 0xFF
+            d[name] = a
+            self.corrupted += 1
 
 
 @dataclasses.dataclass

@@ -85,6 +85,11 @@ def page_gauges(engine) -> dict:
         "prefix_hits": getattr(engine, "prefix_hits", 0),
         "hol_bypasses": getattr(engine, "hol_bypasses", 0),
         "scale_refreshes": getattr(engine, "scale_refreshes", 0),
+        "spilled_pages": getattr(engine, "spilled_pages", 0),
+        "restored_pages": getattr(engine, "restored_pages", 0),
+        "spill_bytes_in_use": getattr(
+            getattr(engine, "spill", None), "bytes_in_use", 0),
+        "spill_entries": len(getattr(engine, "spill", None) or ()),
     }
 
 
@@ -105,6 +110,8 @@ def failure_counters(requests=(), *, loop=None, engine=None,
         out["watchdog_trips"] = int(loop.failures.get("watchdog_trips", 0))
         out["wedge_recoveries"] = int(
             loop.failures.get("wedge_recoveries", 0))
+        out["resets_survived"] = int(
+            loop.failures.get("resets_survived", 0))
     if engine is not None:
         out["engine_quarantines"] = int(getattr(engine, "quarantines", 0))
         out["engine_deadline_cancels"] = int(
@@ -114,6 +121,13 @@ def failure_counters(requests=(), *, loop=None, engine=None,
         out["engine_stranded_rejections"] = int(
             getattr(engine, "stranded_rejections", 0))
         out["engine_cancels"] = int(getattr(engine, "cancels", 0))
+        # durability plane: host-spill traffic and the digest-verification
+        # contract's violation count (corrupted spill/snapshot pages dropped)
+        out["spilled_pages"] = int(getattr(engine, "spilled_pages", 0))
+        out["restored_pages"] = int(getattr(engine, "restored_pages", 0))
+        out["digest_failures"] = int(getattr(engine, "digest_failures", 0))
+        out["spill_resumes"] = int(getattr(engine, "spill_resumes", 0))
+        out["deadline_clamps"] = int(getattr(engine, "deadline_clamps", 0))
     if executor is not None:
         out["head_failures"] = int(
             sum(getattr(executor, "head_failures", {}).values()))

@@ -182,27 +182,34 @@ def _check_page_invariants(eng):
 
 
 @settings(max_examples=8, deadline=None)
-@given(ops=st.lists(st.tuples(st.integers(0, 5), st.integers(0, 7)),
+@given(ops=st.lists(st.tuples(st.integers(0, 7), st.integers(0, 7)),
                     min_size=4, max_size=18))
 def test_paged_refcounts_never_leak_or_double_free(ops):
     """Randomized join/decode/preempt/retire sequences over shared-prefix
-    prompts, now interleaved with the FAULT plane (client cancel by rid,
-    mid-flight deadline expiry): the refcounted free list never double-frees
-    or leaks a page, unwinding a sharer through ANY exit path never touches
-    another stream's mapped pages, terminally rejected entries always carry
-    a failure status, and a final drain returns the arena to fully free."""
+    prompts, interleaved with the FAULT plane (client cancel by rid,
+    mid-flight deadline expiry) and the DURABILITY plane (host spill on
+    every preemption, snapshot/restore with a scrambled old arena — a
+    simulated device reset — and spill-entry corruption): the refcounted
+    free list never double-frees or leaks a page, unwinding a sharer
+    through ANY exit path never touches another stream's mapped pages, the
+    prefix registry only ever references live pages, restored engines
+    uphold all of it, terminally rejected entries always carry a failure
+    status, and a final drain returns the arena to fully free."""
     import time
+
+    import jax.numpy as jnp
 
     from repro.core.decode_engine import DecodeEngine
     fm = _paged_fm()
     cfg = fm.cfg
     eng = DecodeEngine(fm, num_slots=4, prompt_len=16, max_new=6, chunk=2,
                        paged=True, page_size=4, total_pages=17,
-                       prompt_buckets=(4, 16))
+                       prompt_buckets=(4, 16), spill_bytes=32 << 20)
     rng = np.random.RandomState(0)
     prefixes = [rng.randint(0, cfg.vocab_size, 8).astype(np.int32)
                 for _ in range(2)]
     rid = 0
+    rejected = []
     for op, a in ops:
         live = [i for i, s in enumerate(eng.slots) if s is not None]
         if op == 0:                                  # join (shared prefix)
@@ -213,7 +220,7 @@ def test_paged_refcounts_never_leak_or_double_free(ops):
             rid += 1
         elif op == 1:
             eng.step_chunk()
-        elif op == 2 and live:                       # preempt a stream
+        elif op == 2 and live:                       # preempt (spills D2H)
             eng._preempt(live[a % len(live)])
         elif op == 3 and live:                       # retire a stream
             eng.leave(live[a % len(live)])
@@ -225,6 +232,22 @@ def test_paged_refcounts_never_leak_or_double_free(ops):
         elif op == 5 and live:                       # deadline expiry
             eng.slots[live[a % len(live)]].deadline = 0.0
             eng._expire_deadlines(time.perf_counter())
+        elif op == 6:                                # device reset mid-churn
+            snap = eng.snapshot()
+            old, eng = eng, None
+            for sub in old.pool:                     # scramble dead arena
+                if isinstance(sub, dict) and "page_table" in sub:
+                    sub["k"] = jnp.full_like(sub["k"], 77)
+                    sub["k_scale"] = jnp.zeros_like(sub["k_scale"])
+            eng = DecodeEngine.restore(fm, snap, reuse_jits_from=old)
+        elif op == 7 and len(eng.spill):             # corrupt a spill entry
+            key = list(eng.spill._entries)[a % len(eng.spill)]
+            d = eng.spill._entries[key].blob[0]
+            name = next(iter(d))
+            arr = np.ascontiguousarray(d[name])
+            arr.view(np.uint8).reshape(-1)[::3] ^= 0xFF
+            d[name] = arr
+        rejected += eng.take_rejected()
         _check_page_invariants(eng)
     for _ in range(200):
         if not (eng.active_count() or eng.pending_count()):
@@ -235,4 +258,5 @@ def test_paged_refcounts_never_leak_or_double_free(ops):
     assert eng.free_page_count() == eng.total_pages - 1
     assert (eng._page_refs[1:] == 0).all()
     assert not eng._prefix_registry and not eng._page_key
-    assert all(p.status != "ok" for p in eng.take_rejected())
+    rejected += eng.take_rejected()
+    assert all(p.status != "ok" for p in rejected)

@@ -1,0 +1,439 @@
+"""Durable serving state: host-RAM spill tier (lossless preemption resume
+with PRNG continuity, prefix pages surviving idle gaps, corruption falling
+back to recompute), engine snapshot/restore (mid-flight token parity, jit
+reuse, digest tamper detection, disk round trip), the serve loop's
+checkpoint_restart under load with the device-reset chaos fault, the
+deadline-clamp chunk ladder, retry-jitter desynchronization, and BFQ
+virtual-time tag persistence."""
+import time
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config, reduced
+from repro.core.bfq import BFQ
+from repro.core.decode_engine import DecodeEngine
+from repro.core.executor import Executor
+from repro.core.physical import PhysicalFM
+from repro.core.profile import FMProfile
+from repro.core.request import Request
+from repro.core.spill import HostSpillArena
+from repro.distributed.fault import InjectedFailure
+from repro.serving.faults import DeviceResetFault, SpillCorruptionFault
+from repro.serving.metrics import failure_counters
+
+_FM = {}
+
+
+def _fm():
+    if "fm" not in _FM:
+        cfg = reduced(get_config("stablelm-1.6b"))
+        fm = PhysicalFM(cfg, seed=0, input_len=8, lora_rank=4,
+                        lora_impl="segmented", seg_block_t=8)
+        tree = fm.adapters._mod.init_single_adapter(
+            jax.random.PRNGKey(0), fm.cfg, fm.adapters.rank)
+        leaves, tdef = jax.tree.flatten(tree)
+        ks = jax.random.split(jax.random.PRNGKey(100), len(leaves))
+        fm.adapters.add("lora0", jax.tree.unflatten(tdef, [
+            jax.random.normal(k, l.shape, l.dtype) * 0.05
+            for k, l in zip(ks, leaves)]))
+        _FM["fm"] = (cfg, fm)
+    return _FM["fm"]
+
+
+def _prompts(seed=1, n=2, plen=8):
+    cfg, _ = _fm()
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size, plen).astype(np.int32)
+            for _ in range(n)]
+
+
+def _run_pair(total_pages, *, spill_bytes=0, max_new=24, temperature=0.7):
+    """Two long sampled streams on a ``total_pages`` arena; returns the
+    engine and {rid: tokens}."""
+    _, fm = _fm()
+    eng = DecodeEngine(fm, num_slots=2, prompt_len=8, max_new=max_new,
+                       chunk=4, paged=True, page_size=4,
+                       total_pages=total_pages, spill_bytes=spill_bytes,
+                       temperature=temperature, top_k=8)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        for i, p in enumerate(_prompts()):
+            eng.join(f"t{i}", p, adapter_id="lora0", max_new_tokens=max_new,
+                     rid=i)
+        done = eng.drain()
+    return eng, {d.rid: d.tokens for d in done}
+
+
+# ---------------- host-RAM spill tier ----------------
+
+def test_spill_resume_exact_parity_with_sampling():
+    """A preempted SAMPLED stream resumed from its host spill produces the
+    exact token sequence of a never-preempted run — pages, int8 scales,
+    drift trackers, last token and PRNG key all survive the D2H/H2D round
+    trip. The legacy re-prefill resume cannot do this (re-quantization +
+    PRNG restart), which is the spill tier's whole claim."""
+    ref_eng, ref = _run_pair(40)
+    assert ref_eng.preemptions == 0              # reference never preempts
+    eng, got = _run_pair(10, spill_bytes=64 << 20)
+    assert eng.preemptions > 0 and eng.spill_resumes > 0
+    assert eng.spilled_pages > 0 and eng.restored_pages > 0
+    assert eng.digest_failures == 0
+    for rid, toks in ref.items():
+        assert got[rid] == toks
+    # every resume went through the spill path, and the arena drained clean
+    assert all(kind == "spill" for kind, _ in eng.resume_costs)
+    assert eng.free_page_count() == eng.total_pages - 1
+
+
+def test_spill_budget_eviction_falls_back_to_reprefill():
+    """A spill arena too small for any stream entry skips the capture and
+    the engine degrades to the legacy lossy-but-correct re-prefill resume —
+    budget pressure is a performance event, never an error."""
+    eng, got = _run_pair(10, spill_bytes=1, temperature=0.0)
+    assert eng.preemptions > 0 and eng.spill_resumes == 0
+    assert eng.spill.skips > 0
+    assert all(kind == "reprefill" for kind, _ in eng.resume_costs)
+    assert all(len(t) == 24 for t in got.values())
+    assert eng.free_page_count() == eng.total_pages - 1
+
+
+def test_spill_corruption_detected_and_recomputed():
+    """Bit-flipped stream spill entries fail digest verification at resume:
+    the entry is dropped, ``digest_failures`` counts it, and the stream
+    completes through the re-prefill fallback — corruption can never
+    surface as silently wrong tokens."""
+    _, fm = _fm()
+    eng = DecodeEngine(fm, num_slots=2, prompt_len=8, max_new=24, chunk=4,
+                       paged=True, page_size=4, total_pages=10,
+                       spill_bytes=64 << 20, temperature=0.0)
+
+    class _Loop:                                 # faults.py's view of a loop
+        def _engine(self):
+            return eng
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        for i, p in enumerate(_prompts()):
+            eng.join(f"t{i}", p, adapter_id="lora0", max_new_tokens=24,
+                     rid=i)
+        corrupted = 0
+        done = []
+        for _ in range(200):
+            if len(eng.spill) and not corrupted:
+                fault = SpillCorruptionFault(1.0)
+                fault.inject(_Loop())
+                corrupted = fault.corrupted
+            done += eng.step_chunk()
+            if len(done) == 2:
+                break
+    assert corrupted > 0 and eng.preemptions > 0
+    assert eng.digest_failures >= 1
+    assert sorted(d.rid for d in done) == [0, 1]
+    assert all(len(d.tokens) == 24 for d in done)
+    assert eng.free_page_count() == eng.total_pages - 1
+
+
+def test_prefix_spill_survives_idle_gap_and_rededuplicates():
+    """A registered prefix whose last sharer retires spills to host RAM;
+    a later join whose prompt chains to the same digests restores it
+    (bit-exact: same tokens as the first pass) and RE-REGISTERS it, so a
+    third join deduplicates against live pages again."""
+    cfg, fm = _fm()
+    eng = DecodeEngine(fm, num_slots=2, prompt_len=16, max_new=6, chunk=2,
+                       paged=True, page_size=4, total_pages=20,
+                       spill_bytes=64 << 20, prompt_buckets=(8, 16))
+    (pfx,) = _prompts(seed=5, n=1)
+    eng.join("a", pfx, adapter_id="lora0", max_new_tokens=4, rid=10)
+    (d1,) = eng.drain()
+    assert len(eng._prefix_registry) == 0        # last sharer gone...
+    assert eng.spilled_pages >= 2                # ...but the pages moved D2H
+    eng.join("b", pfx, adapter_id="lora0", max_new_tokens=4, rid=11)
+    assert eng.spill_prefix_hits == 1 and eng.restored_pages >= 2
+    assert len(eng._prefix_registry) > 0         # re-registered
+    # third joiner shares the LIVE restored pages (no further restore)
+    eng.join("c", pfx, adapter_id="lora0", max_new_tokens=4, rid=12)
+    assert eng.prefix_hits >= 1
+    done = {d.rid: d for d in eng.drain()}
+    assert done[11].tokens == d1.tokens == done[12].tokens
+    assert eng.free_page_count() == eng.total_pages - 1
+
+
+# ---------------- engine snapshot / restore ----------------
+
+def _midflight(spill_bytes=0, temperature=0.7):
+    _, fm = _fm()
+    eng = DecodeEngine(fm, num_slots=2, prompt_len=8, max_new=12, chunk=2,
+                       paged=True, page_size=4, total_pages=20,
+                       temperature=temperature, top_k=8,
+                       spill_bytes=spill_bytes)
+    for i, p in enumerate(_prompts()):
+        eng.join(f"t{i}", p, adapter_id="lora0", max_new_tokens=12,
+                 rid=100 + i)
+    eng.step_chunk()
+    eng.step_chunk()
+    return eng
+
+
+def test_snapshot_restore_midflight_parity_and_jit_reuse():
+    """snapshot() between chunks + restore() into a fresh engine resumes
+    every live stream token-for-token against an uninterrupted run, with
+    ZERO digest failures and zero new compiles (the old engine's jit caches
+    are reused — executables are code, not device state)."""
+    ref = {d.rid: d.tokens for d in _midflight().drain()}
+    eng = _midflight()
+    snap = eng.snapshot()
+    eng2 = DecodeEngine.restore(_fm()[1], snap, reuse_jits_from=eng)
+    compiles = eng2.compile_count()
+    got = {d.rid: d.tokens for d in eng2.drain()}
+    assert got == ref
+    assert eng2.digest_failures == 0
+    assert eng2.compile_count() == compiles      # nothing recompiled
+    assert eng2.free_page_count() == eng2.total_pages - 1
+
+
+def test_snapshot_digest_detects_tampered_page():
+    """A snapshot page whose content no longer matches its digest is never
+    served: the mapping stream is requeued through the lossless fold path
+    and still completes its full budget."""
+    eng = _midflight(spill_bytes=64 << 20, temperature=0.0)
+    snap = eng.snapshot()
+    snap.pages[0] = dict(snap.pages[0])
+    snap.pages[0]["k"] = np.array(snap.pages[0]["k"])
+    snap.pages[0]["k"][:, 0] ^= 1                # flip bits in one used page
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        eng2 = DecodeEngine.restore(_fm()[1], snap)
+        assert eng2.digest_failures >= 1
+        done = {d.rid: d for d in eng2.drain()}
+    assert sorted(done) == [100, 101]
+    assert all(len(d.tokens) == 12 for d in done.values())
+    assert eng2.free_page_count() == eng2.total_pages - 1
+
+
+def test_snapshot_disk_round_trip(tmp_path):
+    """save_snapshot/load_snapshot round-trips through npz+json: the loaded
+    snapshot restores to the same continuation as the in-memory one."""
+    ref = {d.rid: d.tokens for d in _midflight().drain()}
+    eng = _midflight()
+    snap = eng.snapshot()
+    out = ckpt.save_snapshot(tmp_path / "snap", snap)
+    assert out.exists()
+    loaded = ckpt.load_snapshot(tmp_path / "snap")
+    assert loaded.page_digests == snap.page_digests
+    eng2 = DecodeEngine.restore(_fm()[1], loaded, reuse_jits_from=eng)
+    assert {d.rid: d.tokens for d in eng2.drain()} == ref
+    assert eng2.digest_failures == 0
+
+
+# ---------------- serve loop: checkpoint_restart + device reset ----------
+
+
+@pytest.fixture(scope="module")
+def served():
+    from repro.core.server import FMplexServer
+    from repro.core.vfm import TaskExtensions
+    cfg, fm = _fm()
+    fm.calibrate(sizes=(1, 2))
+    srv = FMplexServer("s0")
+    srv.deploy_fm("fm0", fm, scheduler="bfq")
+    rng = np.random.RandomState(0)
+    w = rng.randn(cfg.d_model, 2).astype(np.float32) * 0.1
+    srv.bind_task("task0", "fm0", weight=1.0,
+                  extensions=TaskExtensions(decoder=lambda f: f @ w,
+                                            adapter_id="lora0"))
+    loop = srv.serve_loop("fm0", engine_kwargs=dict(
+        num_slots=2, prompt_len=8, max_new=16, chunk=2,
+        paged=True, page_size=4, spill_bytes=64 << 20))
+    loop.warmup(pooled_task="task0", gen_task="task0")
+    return srv, cfg, loop
+
+
+def _gen(cfg, rng, t=0.0, new=8):
+    return Request("task0", t,
+                   payload=rng.randint(0, cfg.vocab_size, 8).astype("int32"),
+                   tokens=float(8 + new), max_new_tokens=new)
+
+
+def test_loop_checkpoint_restart_under_load(served):
+    """checkpoint_restart mid-flight loses nothing: in-flight streams
+    complete ok with full budgets and carry ``resets_survived`` stamps;
+    the loop's failure counters and metrics surface the reset."""
+    srv, cfg, loop = served
+    rng = np.random.RandomState(3)
+    reqs = [_gen(cfg, rng, new=10) for _ in range(3)]
+    for r in reqs:
+        loop.submit(r, time.perf_counter())
+    while not srv.engines["fm0"].active_count():
+        loop.tick()
+    r0 = loop.failures["resets_survived"]
+    inflight = set(loop._inflight)               # stamped: in flight at reset
+    loop.checkpoint_restart()
+    while loop._work_left():
+        loop.tick()
+    assert loop.failures["resets_survived"] == r0 + 1
+    assert all(r.ok and len(r.result) == 10 for r in reqs)
+    assert inflight and all(
+        r.resets_survived == (1 if r.rid in inflight else 0) for r in reqs)
+    fc = failure_counters(reqs, loop=loop, engine=srv.engines["fm0"])
+    assert fc["resets_survived"] >= 1
+    assert fc["digest_failures"] == 0
+
+
+def test_device_reset_fault_scrambles_then_survives(served):
+    """DeviceResetFault scrambles every pool leaf of the OLD engine before
+    restore — the restored streams' correctness proves the recovery path
+    reads nothing from dead device state. Token parity vs a fault-free run
+    is exact."""
+    srv, cfg, loop = served
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(0, cfg.vocab_size, 8).astype("int32")
+               for _ in range(2)]
+
+    def run(reset: bool):
+        reqs = [Request("task0", 0.0, payload=p, tokens=16.0,
+                        max_new_tokens=8) for p in prompts]
+        for r in reqs:
+            loop.submit(r, time.perf_counter())
+        while srv.engines["fm0"].active_count() < 2:
+            loop.tick()                          # both streams live
+        if reset:
+            fault = DeviceResetFault()
+            fault.inject(loop)
+            assert fault.resets == 1
+        while loop._work_left():
+            loop.tick()
+        return reqs
+
+    clean = run(reset=False)
+    hit = run(reset=True)
+    assert all(r.ok for r in clean + hit)
+    for rc, rh in zip(clean, hit):
+        # bit-exact token parity across the reset
+        assert list(rh.result) == list(rc.result)
+        assert rh.resets_survived == 1 and rc.resets_survived == 0
+    assert srv.engines["fm0"].digest_failures == 0
+
+
+# ---------------- deadline clamp ----------------
+
+def test_deadline_clamp_shortens_chunk_from_warm_ladder():
+    """A live stream close to its deadline gets a SHORTENED chunk from the
+    precompiled ladder — it still makes progress (partial tokens beat zero)
+    without paying for steps past the cancel point, and the clamp never
+    compiles anything new after ``warm_decode_ladder``."""
+    _, fm = _fm()
+    eng = DecodeEngine(fm, num_slots=2, prompt_len=8, max_new=16, chunk=4,
+                       paged=True, page_size=4, total_pages=20)
+    assert eng.chunk_ladder() == (4, 2, 1)
+    eng.warm_decode_ladder()
+    assert eng.active_count() == 0               # ladder warmup left no state
+    (p,) = _prompts(seed=9, n=1)
+    eng.join("t", p, adapter_id="lora0", max_new_tokens=16, rid=0)
+    compiles = eng.compile_count()               # admission compiles done
+    eng._step_ema = 1.0                          # pretend decode steps take 1s
+    s = next(x for x in eng.slots if x is not None)
+    s.deadline = time.perf_counter() + 2.5       # room for ~2 steps, not 4
+    n0 = len(s.tokens)
+    eng.step_chunk()
+    assert len(s.tokens) - n0 == 2               # ladder picked 2, not 4
+    assert eng.deadline_clamps == 1
+    assert eng.compile_count() == compiles       # ladder was already warm
+    s.deadline = float("inf")
+    eng.drain()
+
+
+def test_deadline_clamp_off_dispatches_full_chunk():
+    _, fm = _fm()
+    eng = DecodeEngine(fm, num_slots=2, prompt_len=8, max_new=8, chunk=4,
+                       paged=True, page_size=4, total_pages=20,
+                       deadline_clamp=False)
+    (p,) = _prompts(seed=9, n=1)
+    eng.join("t", p, adapter_id="lora0", max_new_tokens=8, rid=0)
+    eng._step_ema = 1.0
+    s = next(x for x in eng.slots if x is not None)
+    s.deadline = time.perf_counter() + 2.5
+    n0 = len(s.tokens)
+    eng.step_chunk()
+    assert len(s.tokens) - n0 == 4               # full chunk, clamp disabled
+    assert eng.deadline_clamps == 0
+    s.deadline = float("inf")
+    eng.drain()
+
+
+# ---------------- retry jitter ----------------
+
+def test_retry_jitter_desynchronizes_cofailing_tasks():
+    """Two tasks whose heads fail on the same tick back off on DIFFERENT
+    schedules: per-task seeded jitter bounds every delay within
+    [1-j, 1+j) x base and is reproducible for a given seed."""
+    cfg = reduced(get_config("moment-large"))
+    fm = PhysicalFM(cfg, seed=0, input_len=8, lora_rank=4)
+
+    def raising(f):
+        raise InjectedFailure("boom")
+
+    for t in ("ta", "tb"):
+        fm.attach_head(t, raising)
+    ex = Executor(fm, head_retries=2, head_backoff_s=0.001,
+                  retry_jitter=0.5, retry_seed=42)
+    from repro.core.request import Batch
+    rng = np.random.RandomState(0)
+    reqs = [Request(t, 0.0, payload=rng.randn(8, cfg.d_model)
+                    .astype(np.float32)) for t in ("ta", "tb")]
+    ex.execute(Batch(reqs, [(None, reqs)]), {})
+    da, db = ex.retry_delays["ta"], ex.retry_delays["tb"]
+    assert len(da) == len(db) == ex.head_retries
+    assert da != db                              # desynchronized
+    for delays in (da, db):
+        for i, d in enumerate(delays):
+            base = 0.001 * (2 ** i)
+            assert 0.5 * base <= d < 1.5 * base  # bounded jitter
+    # same seed -> same schedule; different seed -> different schedule
+    ex2 = Executor(fm, head_retries=2, head_backoff_s=0.001,
+                   retry_jitter=0.5, retry_seed=42)
+    assert [ex2._retry_factor("ta") for _ in range(2)] == \
+        pytest.approx([d / (0.001 * 2 ** i) for i, d in enumerate(da)])
+    ex3 = Executor(fm, retry_jitter=0.5, retry_seed=43)
+    assert ex3._retry_factor("ta") != pytest.approx(da[0] / 0.001)
+
+
+# ---------------- scheduler tag persistence ----------------
+
+def test_bfq_tags_snapshot_round_trip():
+    sched = BFQ(FMProfile("fm", alpha=10e-3, beta=2e-3, b_max=8))
+    sched.v = 3.5
+    sched._tail.update({"a": 4.0, "b": 2.0})
+    sched._last_dispatched.update({"a": 3.0})
+    tags = sched.snapshot_tags()
+    fresh = BFQ(FMProfile("fm", alpha=10e-3, beta=2e-3, b_max=8))
+    fresh.restore_tags(tags)
+    assert fresh.v == 3.5
+    assert fresh._tail == {"a": 4.0, "b": 2.0}
+    assert fresh._last_dispatched == {"a": 3.0}
+    fresh.restore_tags(None)                     # no-op, never raises
+    assert fresh.v == 3.5
+
+
+def test_spill_arena_lru_accounting():
+    """Pure host-side arena semantics: byte budget, LRU eviction order,
+    same-key replacement, hit/miss counters."""
+    a = HostSpillArena(100)
+    blob = lambda n: [{"x": np.zeros(n, np.uint8)}]
+    assert a.put("k1", blob(40)) and a.put("k2", blob(40))
+    assert a.bytes_in_use == 80 and len(a) == 2
+    a.get("k1")                                  # k1 now MRU -> k2 evicts
+    assert a.put("k3", blob(40))
+    assert "k2" not in a and "k1" in a and a.evictions == 1
+    assert not a.put("big", blob(1000))          # over-budget: skipped
+    assert a.skips == 1 and "big" not in a
+    assert a.put("k1", blob(10))                 # same-key replace
+    assert a.bytes_in_use == 50
+    assert a.get("missing") is None and a.misses == 1
+    e = a.pop("k1")
+    assert e is not None and e.verify()
+    a.peek("k3")
+    assert a.hits == 1                           # peek counted nothing
