@@ -18,6 +18,11 @@ SAME paged engine with sharing disabled (so the only variable is COW):
   * **zero steady-state recompiles** — sharer join/leave/preemption churn
     reuses the warmed executables: page ids (shared positions pointed at
     the trash page), tables and lengths are all traced operands.
+  * **TTFT (chunked shared-prefix prefill)** — a prefix-hit join prefills
+    only its private tail (attending the mapped pages' float sidecars), so
+    its admission latency drops >= 2x against the full-prefill path on the
+    identical trace, at bit-identical first tokens and zero recompiles
+    after ``warm_chunked``. Lands under ``prefix.ttft``.
 
 Results land under the "prefix" section of ``BENCH_serving.json`` with the
 same backend/jax-version stamping as the other serving sections.
@@ -36,7 +41,7 @@ from repro.core.decode_engine import DecodeEngine
 from repro.core.physical import PhysicalFM
 
 PAGE_SIZE = 16
-PREFIX_LEN = 96               # 6 pages of shared few-shot/system prompt
+PREFIX_LEN = 480              # 30 pages of shared few-shot/system prompt
 SUFFIX_MAX = 16               # unique user tail
 PROMPT_LEN = PREFIX_LEN + SUFFIX_MAX
 MAX_NEW = 8
@@ -45,7 +50,8 @@ N_STREAMS = 32
 N_PREFIXES = 1
 SHARED_FRAC = 0.8
 NUM_SLOTS = 32
-TOTAL_PAGES = 1 + 56          # fixed KV memory: 56 usable pages = 896 tokens
+TOTAL_PAGES = 1 + 256         # fixed KV memory: 256 usable pages = 4096
+                              # tokens — 8 full unshared streams
 
 
 def _fm(cfg, num_adapters: int = 2) -> PhysicalFM:
@@ -81,30 +87,32 @@ def shared_prefix_workload(cfg, n: int, seed: int = 0):
                 rng.randint(PREFIX_LEN // 2, PROMPT_LEN + 1))).astype(
                 np.int32)
         out.append((prompt, new))
-    return out
+    return prefixes, out
 
 
-def make_engine(fm, *, sharing: bool) -> DecodeEngine:
+def make_engine(fm, *, sharing: bool, chunked: bool = True) -> DecodeEngine:
     # the deep pending-queue lookahead lets the drain admit every stream
     # the pages can serve during the burst (a CI-sized fairness cap would
     # throttle the measurement, not the memory)
     return DecodeEngine(fm, num_slots=NUM_SLOTS, prompt_len=PROMPT_LEN,
                         max_new=MAX_NEW, chunk=CHUNK, paged=True,
                         page_size=PAGE_SIZE, total_pages=TOTAL_PAGES,
-                        prefix_sharing=sharing,
+                        prefix_sharing=sharing, chunked_prefill=chunked,
                         prompt_buckets=(PROMPT_LEN,),
                         pending_lookahead=2 * N_STREAMS,
                         hol_skip_cap=2 * N_STREAMS)
 
 
 def warm(eng, cfg, seed: int = 123):
-    """Compile every executable a run can touch (prefill per bucket, pool
-    write, decode chunk) with a throwaway stream."""
+    """Compile every executable a run can touch (prefill per bucket, the
+    chunked tail planes per tail bucket, pool write, decode chunk) with a
+    throwaway stream."""
     rng = np.random.RandomState(seed)
     for plen in eng.prompt_buckets:
         eng.join("warm", rng.randint(0, cfg.vocab_size, plen),
                  adapter_id="lora0", max_new_tokens=2, rid=-1)
         eng.drain()
+    eng.warm_chunked()                  # no-op unless chunked_prefill
 
 
 def drive(eng: DecodeEngine, work) -> dict:
@@ -140,13 +148,68 @@ def drive(eng: DecodeEngine, work) -> dict:
             "tokens": done}
 
 
+def bench_ttft(fm, cfg, prefixes, work) -> dict:
+    """Admission TTFT (join wall time: prefill + sample + page scatter) for
+    every stream of the trace, measured one join at a time against a LIVE
+    holder per prefix — on the chunked engine and on an engine identical
+    except ``chunked_prefill=False``. Prefix-hit joins on the chunked
+    engine prefill only their private tail; the full engine recomputes the
+    whole prompt (while still mapping the shared pages — the COW dedup is
+    held constant, so the delta is purely the skipped prefill compute)."""
+    is_hit = [len(p) > PREFIX_LEN
+              and any((p[:PREFIX_LEN] == pre).all() for pre in prefixes)
+              for p, _ in work]
+    stats, firsts = {}, {}
+    for name, chunked in (("chunked", True), ("full", False)):
+        eng = make_engine(fm, sharing=True, chunked=chunked)
+        warm(eng, cfg)
+        before = eng.compile_count()
+        hrng = np.random.RandomState(9)
+        for j, pre in enumerate(prefixes):   # keep the prefix registered
+            eng.join(f"hold{j}", np.concatenate(
+                [pre, hrng.randint(0, cfg.vocab_size, 1).astype(np.int32)]),
+                adapter_id="lora0", max_new_tokens=MAX_NEW, rid=-10 - j)
+        dts, first = [], []
+        for i, (p, new) in enumerate(work):
+            t0 = time.perf_counter()
+            slot = eng.join(f"m{i}", p, adapter_id="lora0",
+                            max_new_tokens=new, rid=10_000 + i)
+            dts.append(time.perf_counter() - t0)
+            first.append(int(eng.slots[slot].tokens[0]))
+            eng.leave(slot)                  # join/leave churn by design
+        assert eng.compile_count() == before, "TTFT churn recompiled"
+        eng.drain()
+        assert eng.free_page_count() == eng.total_pages - 1
+        stats[name] = dts
+        firsts[name] = first
+    hit_ms = {n: 1e3 * float(np.median(
+        [d for d, h in zip(dts, is_hit) if h]))
+        for n, dts in stats.items()}
+    miss = [d for d, h in zip(stats["chunked"], is_hit) if not h]
+    miss_full = [d for d, h in zip(stats["full"], is_hit) if not h]
+    reduction = hit_ms["full"] / max(hit_ms["chunked"], 1e-9)
+    return {
+        "prefix_hit_joins": int(sum(is_hit)),
+        "prefix_miss_joins": int(len(work) - sum(is_hit)),
+        "chunked_hit_ttft_ms_p50": round(hit_ms["chunked"], 3),
+        "full_hit_ttft_ms_p50": round(hit_ms["full"], 3),
+        "chunked_miss_ttft_ms_p50": round(
+            1e3 * float(np.median(miss)), 3) if miss else None,
+        "full_miss_ttft_ms_p50": round(
+            1e3 * float(np.median(miss_full)), 3) if miss_full else None,
+        "hit_ttft_reduction": round(reduction, 2),
+        "first_token_parity": firsts["chunked"] == firsts["full"],
+        "ttft_2x_reduction": bool(reduction >= 2.0),
+    }
+
+
 def run_all(out_path: str = None, smoke: bool = False):
     global N_STREAMS
     if smoke:
         N_STREAMS = 12
     cfg = reduced(get_config("stablelm-1.6b"))
     fm = _fm(cfg)
-    work = shared_prefix_workload(cfg, N_STREAMS)
+    prefixes, work = shared_prefix_workload(cfg, N_STREAMS)
 
     results = {}
     compiles = {}
@@ -160,6 +223,9 @@ def run_all(out_path: str = None, smoke: bool = False):
 
     ratio = results["shared"]["peak_concurrent_streams"] / \
         max(results["unshared"]["peak_concurrent_streams"], 1)
+    # the shared engine runs CHUNKED admissions (the default): stream-level
+    # parity against the unshared full-prefill engine is ALSO the chunked
+    # vs full exactness check, over the whole trace's churn
     parity = results["shared"].pop("tokens") == \
         results["unshared"].pop("tokens")
     print(f"capacity @ {(TOTAL_PAGES - 1) * PAGE_SIZE} KV tokens: unshared "
@@ -170,6 +236,14 @@ def run_all(out_path: str = None, smoke: bool = False):
           f"token parity {parity}, recompiles {compiles}")
     assert parity, "prefix sharing changed a token stream"
     assert compiles == {"shared": 0, "unshared": 0}, compiles
+
+    ttft = bench_ttft(fm, cfg, prefixes, work)
+    print(f"ttft: prefix-hit joins p50 {ttft['chunked_hit_ttft_ms_p50']}ms "
+          f"chunked vs {ttft['full_hit_ttft_ms_p50']}ms full "
+          f"(x{ttft['hit_ttft_reduction']}), first-token parity "
+          f"{ttft['first_token_parity']}")
+    assert ttft["first_token_parity"], "chunked admission changed a token"
+    assert ttft["hit_ttft_reduction"] > (1.0 if smoke else 2.0), ttft
 
     out = {
         "config": cfg.name,
@@ -189,6 +263,7 @@ def run_all(out_path: str = None, smoke: bool = False):
         "token_parity": bool(parity),
         "recompiles_after_warm": compiles,
         "prefix_3x_streams_at_fixed_memory": bool(ratio >= 3.0),
+        "ttft": ttft,
     }
     write_serving_section("prefix", out, out_path)
     return out

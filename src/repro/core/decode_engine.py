@@ -41,9 +41,9 @@ per-step cost of multi-task isolation must be ~zero. The engine owns:
         beyond the stream's true prompt length — so shared pages are
         IMMUTABLE and the read path (the paged attention kernel) needs no
         change. The first divergent or partial page is the copy-on-write
-        boundary: the admission scatter points the shared positions at the
-        trash page and lands only the private tail in freshly allocated
-        pages.
+        boundary: shared positions before it are mapped, everything from it
+        on (including the partial boundary page itself, recomputed into a
+        PRIVATE copy) lands in freshly allocated pages.
       * *release* (``_release_pages``; retire / preempt / bucket-trim all
         route through it): decrement, and only a refcount that reaches zero
         returns the page to the free list (and drops its registry entry).
@@ -65,12 +65,37 @@ per-step cost of multi-task isolation must be ~zero. The engine owns:
     thereafter, so a recycled page's stale scale can never leak into a new
     owner.
 
+    **Chunked shared-prefix admission (two-phase: map, then tail-compute).**
+    A prefix hit saves COMPUTE as well as memory: when ``chunked_prefill``
+    is on (the default) an admission whose prompt maps >= 1 registered or
+    spill-restorable page runs the prefill ONLY over its private tail. The
+    *map phase* increments the shared pages' refcounts (restoring spilled
+    ones H2D first); the *tail-compute phase* feeds the tail tokens through
+    ``_tail_prefill_fn`` with the mapped pages' int8 content dequantized
+    per page (``kernels.ops.gather_prefix_kv``) riding in front of the
+    tail's own fresh K/V inside every attention sublayer — absolute RoPE
+    positions, causality and pad masking all offset by the prefix length.
+    Tail lengths bucket separately (powers of two of the page size, a
+    static jit key) so sharer churn with any mix of tail lengths stays
+    zero-recompile; the prefix page vector, prefix length and true tail
+    length are traced operands. The tail-page scatter quantizes the tail
+    from its FLOAT cache exactly like the full path, and folds the mapped
+    pages' stamped scales into the slot-wide running scale — bit-identical
+    to the slot scale a full prefill would have computed. A quarantined
+    tail rolls the map phase back (refcounts drop, nothing registered, the
+    spill entries survive). The full prefill remains the fallback whenever
+    nothing is shareable or free pages cannot cover restores + tail bucket,
+    and is always correct. ``tail_tokens_computed``/``prefill_tokens_saved``
+    count the split; ``admitted_log`` carries per-admission tail tokens so
+    fair-share schedulers charge the work actually done.
+
     Admission prefill scatters the prompt's private tail into freshly
     allocated pages, decode appends a page on demand (the host allocator
     tops slots up to ``len + chunk`` tokens before each chunk), and retire
     releases — so concurrency is bounded by TOTAL *deduplicated* TOKENS IN
     FLIGHT: co-resident streams carrying the same system prompt pay for it
-    once, not once per stream.
+    once, not once per stream; and prefix-hit TTFT drops with the tail
+    fraction (see ``BENCH_serving.json#prefix.ttft``).
 
   * **admission prefill** — a joining request's prompt runs a single jitted
     prefill (LoRA applied, K/V quantized in-graph) and is scattered into its
@@ -222,6 +247,7 @@ import numpy as np
 
 from repro.core.physical import PAD_SENTINEL, PhysicalFM, bucket_for
 from repro.core.spill import EngineSnapshot, HostSpillArena
+from repro.kernels import ops
 from repro.models import lm
 
 FREE = PAD_SENTINEL   # free-slot adapter sentinel (same as run_batch padding)
@@ -308,7 +334,8 @@ class DecodeEngine:
                  pending_lookahead: int = 4, hol_skip_cap: int = 4,
                  spill_bytes: int = 0,
                  spill_arena: Optional[HostSpillArena] = None,
-                 deadline_clamp: bool = True):
+                 deadline_clamp: bool = True,
+                 chunked_prefill: bool = True):
         cfg = fm.cfg
         assert cfg.vocab_size > 0 and not cfg.is_representation, \
             "DecodeEngine serves generative decoder LMs (vocab head required)"
@@ -374,6 +401,30 @@ class DecodeEngine:
             self._page_key: dict[int, tuple] = {}          # page id -> key
             self.prefix_hits = 0            # joins that mapped >= 1 page
             self.shared_pages_mapped = 0    # cumulative pages mapped, not copied
+            # chunked shared-prefix prefill (module docstring): a join whose
+            # prompt maps >= 1 registered (or spilled) page prefills ONLY its
+            # private tail. Tail lengths bucket separately from prompt
+            # lengths (powers of two of the page size) so sharer churn stays
+            # zero-recompile. Registered prefix pages keep a host-side FLOAT
+            # sidecar (the float prefill K/V the page was quantized from) so
+            # the tail attends the SAME values a full prefill would have —
+            # exact token parity; a page whose sidecar is gone (post-reset
+            # restore, spill-resume re-registration) is attended dequantized
+            # from its int8 arena content instead, trading ~0.4% K/V error
+            # for keeping the TTFT win.
+            self.chunked_prefill = bool(chunked_prefill) and self.prefix_sharing
+            self._page_float: dict[int, list] = {}   # page id -> float K/V
+            # assembled float-prefix operands memoized per mapped page-id
+            # tuple: sharers of one prefix reuse ONE host assembly + H2D
+            # upload; entries die with any constituent page (_release_pages)
+            self._prefix_fp_cache: dict[tuple, list] = {}
+            self._prefix_width = self._pages_for(self.prompt_len)
+            tb = {min(page_size, self.prompt_len)}
+            b = page_size
+            while b < self.prompt_len:
+                b *= 2
+                tb.add(min(b, self.prompt_len))
+            self.tail_buckets = tuple(sorted(tb))
             # proactive int8 scale refresh (module docstring, drift section)
             self.scale_refresh = float(scale_refresh)
             self.scale_refreshes = 0
@@ -390,6 +441,7 @@ class DecodeEngine:
                 HostSpillArena(spill_bytes) if spill_bytes > 0 else None)
         else:
             self.spill = None
+            self.chunked_prefill = False    # needs the paged arena
             # the persistent pool: allocated once, updated in place (donated)
             self.pool = lm.init_cache(cfg, self.num_slots, self.s_max,
                                       kv_quant=kv_quant)
@@ -406,8 +458,12 @@ class DecodeEngine:
         self.last_chunk_s = 0.0
         # failure-semantics state (module docstring, failure section)
         self.rejected: list[_PendingJoin] = []   # terminally rejected joins
-        self.admitted_log: list[tuple[int, str, int]] = []  # (rid, task, len)
+        # (rid, task, true_prompt_len, tail_tokens): tail_tokens is what the
+        # prefill ACTUALLY computed — schedulers charge it, not true_len
+        self.admitted_log: list[tuple[int, str, int, int]] = []
         self.admissions = 0          # streams admitted into slots (ever)
+        self.tail_tokens_computed = 0   # prompt tokens actually prefilled
+        self.prefill_tokens_saved = 0   # prompt tokens skipped (prefix mapped)
         self.quarantines = 0         # streams retired on non-finite logits
         self.deadline_cancels = 0    # mid-flight (slot/resume) expirations
         self.deadline_sheds = 0      # pending entries expired unadmitted
@@ -573,17 +629,28 @@ class DecodeEngine:
         capture happens before any later allocation can rewrite the page;
         within this call the device content is still intact."""
         spillable = []
+        freed = set()
         for p in pages:
             p = int(p)
             r = self._page_refs[p] = self._page_refs[p] - 1
             assert r >= 0, f"double free of page {p}"
             if r == 0:
                 self._free_pages.append(p)
+                freed.add(p)
                 key = self._page_key.pop(p, None)
                 if key is not None and self._prefix_registry.get(key) == p:
                     del self._prefix_registry[key]
                     if self.spill is not None:
+                        # the float sidecar rides into the spill blob
                         spillable.append((p, key))
+                        continue
+                self._page_float.pop(p, None)
+        if freed and self._prefix_fp_cache:
+            # a freed id may be recycled with new content: drop every
+            # assembled-prefix operand that referenced it
+            self._prefix_fp_cache = {
+                k: v for k, v in self._prefix_fp_cache.items()
+                if not freed.intersection(k)}
         if spillable:
             self._spill_prefix_pages(spillable)
 
@@ -630,18 +697,44 @@ class DecodeEngine:
         return shared
 
     def _register_prefix(self, adapter_id: Optional[str], prompt: np.ndarray,
-                         slot: int, true_len: int):
+                         slot: int, true_len: int, cache=None,
+                         cache_page0: int = 0):
         """Publish the slot's FULL prompt pages (the only immutable ones —
         decode never writes below ``true_len``) for future joins to map.
         An existing registration for the same prefix wins (first writer);
-        the duplicate page stays private to this slot."""
+        the duplicate page stays private to this slot.
+
+        ``cache`` (chunked prefill only): the admission's FLOAT prefill
+        cache, whose page ``j - cache_page0`` holds the exact pre-quantized
+        K/V of registered page ``j``. Winning registrations stash that slice
+        host-side (``_page_float``) so future sharers' tails can attend the
+        SAME float values a full prefill would have seen — exact token
+        parity instead of the int8 arena's ~0.4% dequantization error."""
         if not self.prefix_sharing:
             return
         keys = self._prefix_keys(adapter_id, prompt[:true_len])
+        stash = []
         for j, key in enumerate(keys):
             page = int(self._ptab[slot, j])
             if self._prefix_registry.setdefault(key, page) == page:
                 self._page_key[page] = key
+                if (self.chunked_prefill and cache is not None
+                        and j >= cache_page0
+                        and page not in self._page_float):
+                    stash.append((j - cache_page0, page))
+        if stash:
+            # one D2H pull of the whole admission cache, then numpy page
+            # slices: per-page device reads would sync once per page
+            ps = self.page_size
+            host = [{"k": np.asarray(csub["k"][:, 0]),
+                     "v": np.asarray(csub["v"][:, 0])}
+                    for csub, psub in zip(cache, self.pool)
+                    if isinstance(psub, dict) and "page_table" in psub]
+            for rel, page in stash:
+                self._page_float[page] = [
+                    {"k": sub["k"][:, rel * ps:(rel + 1) * ps].copy(),
+                     "v": sub["v"][:, rel * ps:(rel + 1) * ps].copy()}
+                    for sub in host]
 
     def _sync_page_table(self):
         """Push the host page table to every attention sublayer's device
@@ -868,6 +961,14 @@ class DecodeEngine:
             per_page = [{k: sub[k][:, j:j + 1]
                          for k in ("k", "v", "k_scale", "v_scale")}
                         for sub in blob]
+            # the float sidecar spills WITH the page, so a restored prefix
+            # keeps serving exact-parity chunked tails ("kf"/"vf" keys are
+            # ignored by _restore_pages, which only writes the arena keys)
+            fp = self._page_float.pop(p, None)
+            if fp is not None:
+                for sub, f in zip(per_page, fp):
+                    sub["kf"] = f["k"]
+                    sub["vf"] = f["v"]
             if self.spill.put(("prefix", key), per_page, {}):
                 self.spilled_pages += 1
 
@@ -948,6 +1049,96 @@ class DecodeEngine:
                 # sync: a non-finite prefill quarantines at admission, before
                 # any page allocation or prefix registration
                 return first, lm.finite_logits(logits), rng_key, cache
+
+            self._jit_prefill[key] = run
+        return self._jit_prefill[key]
+
+    def _tail_prefill_fn(self, cap: int, tlen: int, mode: str = "float"):
+        """Chunked shared-prefix admission prefill for one TAIL bucket: run
+        the model over only the prompt's private tail, with the tail's
+        queries attending the already-mapped prefix pages in front of the
+        tail's own fresh K/V. Two prefix sources, same attention plumbing:
+
+          * ``mode="float"`` — the prefix K/V arrive as an explicit operand
+            assembled host-side from the pages' float sidecars
+            (``_page_float`` / spilled ``kf``/``vf``). These are the EXACT
+            pre-quantization values a full prefill would have computed, so
+            the tail's logits (and cache) are bit-identical to the full
+            path's — exact token parity for sharer joins.
+          * ``mode="pages"`` — the prefix is gathered from the int8 arena
+            through the prefix page vector and dequantized per page
+            (``ops.gather_prefix_kv``). Fallback for pages whose sidecar is
+            gone (engine restored from a device-reset snapshot, prefix
+            re-registered by a spill resume): keeps the TTFT win at ~0.4%
+            K/V error.
+
+        True prefix length and tail length are traced operands — which
+        pages a sharer maps never retraces; only the tail BUCKET (and the
+        mode) is a jit key."""
+        key = ("tail", cap, tlen, mode)
+        if key not in self._jit_prefill:
+            cfg, bt = self.cfg, self.fm.seg_block_t
+            impl = self._impl(1, cap)
+            # like the full paged admission, the tail cache stays FLOAT: the
+            # tail-page scatter quantizes per page afterwards
+            s_max = self._pages_for(tlen) * self.page_size
+            sample = self._sample
+            # which pool entries are paged attention sublayers is static —
+            # the float variant takes its prefix operand without the pool
+            paged_mask = [isinstance(sub, dict) and "page_table" in sub
+                          for sub in self.pool]
+
+            def body(params, prefix, tokens, tail_len, prefix_len, rng_key,
+                     lora_stack, adapter_idx, perm, inv, blocks):
+                seg = None
+                if impl == "segmented":
+                    seg = {"perm": perm, "inv": inv, "block_adapter": blocks,
+                           "block_t": bt}
+                cache = lm.init_cache(cfg, 1, s_max, kv_quant=False)
+                # absolute positions: RoPE must see the tail at its true
+                # offset behind the prefix
+                pos = prefix_len[:, None] + jnp.arange(tokens.shape[1])[None]
+                logits, cache = lm.prefill(
+                    params, cfg, tokens=tokens, cache=cache, lora=lora_stack,
+                    adapter_idx=adapter_idx, lora_impl=impl, lora_seg=seg,
+                    seq_lens=tail_len, pos=pos, prefix=prefix,
+                    prefix_len=prefix_len)
+                first, rng_key = sample(logits, rng_key)
+                return first, lm.finite_logits(logits), rng_key, cache
+
+            if mode == "float":
+                @jax.jit
+                def run(params, prefix_fp, tokens, tail_len, prefix_len,
+                        rng_key, lora_stack, adapter_idx, perm, inv, blocks):
+                    it = iter(prefix_fp)
+                    prefix = [next(it) if paged else None
+                              for paged in paged_mask]
+                    return body(params, prefix, tokens, tail_len, prefix_len,
+                                rng_key, lora_stack, adapter_idx, perm, inv,
+                                blocks)
+            else:
+                @jax.jit
+                def run(params, pool, tokens, tail_len, prefix_pages,
+                        prefix_len, rng_key, lora_stack, adapter_idx, perm,
+                        inv, blocks):
+                    # dequantized prefix K/V per attention sublayer, gathered
+                    # from the arena through the explicit prefix page vector
+                    # (positions past prefix_len point at the trash page and
+                    # are masked out of attention by the validity mask)
+                    prefix = []
+                    for sub in pool:
+                        if isinstance(sub, dict) and "page_table" in sub:
+                            gk, gv = jax.vmap(
+                                lambda kp, vp, ks, vs: ops.gather_prefix_kv(
+                                    kp, vp, ks, vs, prefix_pages[None]))(
+                                sub["k"], sub["v"],
+                                sub["k_scale"], sub["v_scale"])
+                            prefix.append({"k": gk, "v": gv})
+                        else:
+                            prefix.append(None)
+                    return body(params, prefix, tokens, tail_len, prefix_len,
+                                rng_key, lora_stack, adapter_idx, perm, inv,
+                                blocks)
 
             self._jit_prefill[key] = run
         return self._jit_prefill[key]
@@ -1035,6 +1226,79 @@ class DecodeEngine:
 
             self._jit_write[npages] = jax.jit(write, donate_argnums=donate)
         return self._jit_write[npages]
+
+    def _paged_tail_write_fn(self, npages: int):
+        """Page scatter for a chunked (tail-only) admission: quantize the
+        tail's float cache per page exactly like ``_paged_write_fn``, but
+
+          * the prompt/decode boundary page index is a TRACED operand
+            (``boundary = true_len // page_size - skip``, relative to the
+            tail's first page — out of range when the prompt is
+            page-aligned, exactly like the full path's), and
+          * the slot-wide running scales fold in the mapped prefix pages'
+            stamped scales. A registered full page's scale IS its own
+            |K|max/127 (it is never the boundary page), and max-then-divide
+            equals divide-then-max for a positive constant, so the combined
+            slot scale is bit-identical to what a full prefill over the
+            whole prompt would have computed.
+        """
+        key = ("tail", npages)
+        if key not in self._jit_write:
+            donate = self._donate(0)
+            ps = self.page_size
+
+            def write(pool, cache, slot, page_idx, true_len, boundary,
+                      prefix_pages, prefix_np):
+                out = []
+                W = prefix_pages.shape[0]
+                pmask = (jnp.arange(W) < prefix_np)[None, :, None]
+                for psub, csub in zip(pool, cache):
+                    kf = csub["k"][:, 0].astype(jnp.float32)  # (nper,S,kv,hd)
+                    nper, _, kv, hd = kf.shape
+                    kf = kf.reshape(nper, npages, ps, kv, hd)
+                    vf = csub["v"][:, 0].astype(jnp.float32).reshape(
+                        nper, npages, ps, kv, hd)
+                    kmax = jnp.max(jnp.abs(kf), axis=(2, 4))  # (nper,np,kv)
+                    vmax = jnp.max(jnp.abs(vf), axis=(2, 4))
+                    ks = kmax / 127.0
+                    vs = vmax / 127.0
+                    # prefix page scales (trash-padded entries masked to 0)
+                    pks = jnp.where(pmask, psub["k_scale"][:, prefix_pages],
+                                    0.0)
+                    pvs = jnp.where(pmask, psub["v_scale"][:, prefix_pages],
+                                    0.0)
+                    slot_ks = jnp.maximum(
+                        jnp.maximum(jnp.max(kmax, axis=1), 1e-8) / 127.0,
+                        jnp.max(pks, axis=1))
+                    slot_vs = jnp.maximum(
+                        jnp.maximum(jnp.max(vmax, axis=1), 1e-8) / 127.0,
+                        jnp.max(pvs, axis=1))
+                    sel = (jnp.arange(npages) == boundary)[None, :, None]
+                    ks = jnp.where(sel, slot_ks[:, None, :], ks)
+                    vs = jnp.where(sel, slot_vs[:, None, :], vs)
+                    kq = jnp.clip(jnp.round(
+                        kf / jnp.maximum(ks, 1e-12)[:, :, None, :, None]),
+                        -127, 127).astype(psub["k"].dtype)
+                    vq = jnp.clip(jnp.round(
+                        vf / jnp.maximum(vs, 1e-12)[:, :, None, :, None]),
+                        -127, 127).astype(psub["v"].dtype)
+                    d = dict(psub)
+                    d["k"] = psub["k"].at[:, page_idx].set(kq)
+                    d["v"] = psub["v"].at[:, page_idx].set(vq)
+                    d["k_scale"] = psub["k_scale"].at[:, page_idx].set(ks)
+                    d["v_scale"] = psub["v_scale"].at[:, page_idx].set(vs)
+                    d["slot_k_scale"] = psub["slot_k_scale"].at[:, slot].set(
+                        slot_ks)
+                    d["slot_v_scale"] = psub["slot_v_scale"].at[:, slot].set(
+                        slot_vs)
+                    d["k_max"] = psub["k_max"].at[:, slot].set(0.0)
+                    d["v_max"] = psub["v_max"].at[:, slot].set(0.0)
+                    d["len"] = psub["len"].at[:, slot].set(true_len)
+                    out.append(d)
+                return out
+
+            self._jit_write[key] = jax.jit(write, donate_argnums=donate)
+        return self._jit_write[key]
 
     def _rescale_fn(self):
         """Proactive per-page scale refresh for ONE (slot, tail page): bump
@@ -1181,6 +1445,16 @@ class DecodeEngine:
                 return b
         return self.prompt_buckets[-1]
 
+    def bucket_for_tail(self, n: int) -> int:
+        """Smallest tail bucket holding an n-token private tail (chunked
+        shared-prefix admission). Tail buckets are powers of two of the
+        page size, capped at ``prompt_len`` — a static jit key, so any mix
+        of tail lengths across sharer churn reuses the same executables."""
+        for b in self.tail_buckets:
+            if n <= b:
+                return b
+        return self.tail_buckets[-1]
+
     # ---- serving surface ----
     def join(self, task_id: str, prompt: np.ndarray, *,
              adapter_id: Optional[str] = None, max_new_tokens: int = 8,
@@ -1270,6 +1544,11 @@ class DecodeEngine:
         slot = self.free_slots()[0]
         cap = self.fm.adapters.capacity()
         aslot = self.fm.adapters.index(req.adapter_id)
+        if self.paged and self.chunked_prefill:
+            admitted = self._try_admit_tail(req, true_prompt, true_len, slot,
+                                            cap, aslot, max_new_tokens, t_adm)
+            if admitted is not None:
+                return admitted
         perm, inv, blocks = self._prefill_segments(aslot, cap, plen)
         first, fin, key, cache = self._prefill_fn(cap, plen)(
             self.fm.params, jnp.asarray(prompt[None]),
@@ -1280,8 +1559,10 @@ class DecodeEngine:
         # the prefill consumed real device work whether or not the stream
         # survives it — record the admission for token-level charging
         self.admissions += 1
+        self.tail_tokens_computed += true_len   # full prefill: whole prompt
         if req.resume is None:
-            self.admitted_log.append((req.rid, req.task_id, true_len))
+            self.admitted_log.append((req.rid, req.task_id, true_len,
+                                      true_len))
         # numeric health rides the admission's existing host sync: a
         # non-finite prefill (poisoned adapter / Inf activations) quarantines
         # RIGHT HERE — no pages allocated, no pool write, and crucially no
@@ -1297,9 +1578,10 @@ class DecodeEngine:
             # continue the digest chain into the spill arena: spilled
             # prefix pages are restored by DMA into this admission's own
             # freshly allocated pages (positions m..m+k-1), verified
-            # against their digests, and re-registered below — the prefill
-            # still ran (chunked shared-prefix prefill is a separate open
-            # item) but its recomputed content for those positions is
+            # against their digests, and re-registered below — this full
+            # path is the fallback when the chunked tail admission above
+            # declined (nothing shareable, or not enough free pages), so
+            # the prefill recomputed those positions and its content is
             # discarded in favor of the restored bit-exact pages
             spilled = self._match_spilled_prefix(req.adapter_id, true_prompt,
                                                  m)
@@ -1346,10 +1628,183 @@ class DecodeEngine:
                 self._ptab[slot, keep:npages] = TRASH_PAGE
                 self._held[slot] = keep
             self._register_prefix(req.adapter_id, true_prompt, slot,
-                                  true_len)
+                                  true_len, cache=cache)
             self._ptab_dirty = True
         elif fin_ok:
             self.pool = self._write_fn()(self.pool, cache, slot)
+        return self._finish_admission(req, slot, aslot, first, fin_ok,
+                                      true_prompt, true_len, max_new_tokens,
+                                      t_adm)
+
+    def _try_admit_tail(self, req: _PendingJoin, true_prompt: np.ndarray,
+                        true_len: int, slot: int, cap: int, aslot: int,
+                        max_new_tokens: int, t_adm: float) -> Optional[int]:
+        """Chunked shared-prefix admission: when the prompt's leading pages
+        are already in the arena (registered by a live sharer, or restorable
+        from the prefix spill tier), MAP them and prefill only the private
+        tail — the tail's queries attend the mapped int8 pages dequantized
+        through the page vector. Returns the slot, or None to fall back to
+        the always-correct full prefill (nothing shareable, or the tail
+        bucket + restores need more free pages than the arena has right
+        now — the admission gate budgeted for the full path, not this
+        one)."""
+        ps = self.page_size
+        shared = self._match_prefix(req.adapter_id, true_prompt)
+        spilled = self._match_spilled_prefix(req.adapter_id, true_prompt,
+                                             len(shared))
+        # always leave >= 1 tail token: the first generated token needs a
+        # real last-position forward pass, and the boundary page decode
+        # appends into must be recomputed into a PRIVATE copy — a fully
+        # registered page-aligned prompt re-prefills its last page
+        skip = min(len(shared) + len(spilled), (true_len - 1) // ps)
+        if skip < 1:
+            return None
+        m_eff = min(len(shared), skip)
+        k_eff = skip - m_eff
+        spilled = spilled[:k_eff]
+        tail_len = true_len - skip * ps
+        tbucket = self.bucket_for_tail(tail_len)
+        npages = self._pages_for(tbucket)
+        if len(self._free_pages) < k_eff + npages:
+            return None
+        # ---- map phase: shared pages ref++, spilled pages restored H2D ----
+        shared_eff = np.asarray(shared[:m_eff], np.int32)
+        priv_restore = self._take_pages(k_eff)
+        priv_tail = self._take_pages(npages)
+        if m_eff:
+            self._share_pages(shared_eff)
+        if k_eff:
+            blob = [
+                {key: np.concatenate([e.blob[j][key] for _, e in spilled],
+                                     axis=1)
+                 for key in ("k", "v", "k_scale", "v_scale")}
+                for j in range(len(spilled[0][1].blob))]
+            self._restore_pages(blob, priv_restore)
+            # spill entries are popped only AFTER the numeric-health gate:
+            # a quarantined admission must not cost the arena its prefix
+        prefix_ids = np.full((self._prefix_width,), TRASH_PAGE, np.int32)
+        prefix_ids[:m_eff] = shared_eff
+        prefix_ids[m_eff:skip] = priv_restore
+        # ---- tail-compute phase ----
+        tail = true_prompt[skip * ps:]
+        if len(tail) < tbucket:
+            tail = np.concatenate(
+                [tail, np.zeros(tbucket - len(tail), np.int32)])
+        perm, inv, blocks = self._prefill_segments(aslot, cap, tbucket)
+        # exact-parity float path when EVERY mapped page still has its float
+        # sidecar (live pages in _page_float, spilled pages carrying kf/vf);
+        # otherwise attend the int8 arena content dequantized — correct to
+        # quantization error, and the only option once the floats are gone
+        use_float = (all(int(p) in self._page_float for p in shared_eff)
+                     and all("kf" in e.blob[0] for _, e in spilled))
+        if use_float:
+            # sharers of one live prefix reuse a single assembled + uploaded
+            # operand set: registered pages are immutable, so the key (the
+            # mapped page ids) fully determines the content, and
+            # _release_pages drops entries the moment any member id frees
+            fpkey = tuple(int(x) for x in prefix_ids[:skip])
+            prefix_fp = self._prefix_fp_cache.get(fpkey)
+            if prefix_fp is None:
+                srcs = [self._page_float[int(p)] for p in shared_eff] + \
+                       [[{"k": sub["kf"], "v": sub["vf"]} for sub in e.blob]
+                        for _, e in spilled]
+                prefix_fp = []
+                for i in range(len(srcs[0])):
+                    k0 = srcs[0][i]["k"]        # (nper, ps, kv, hd)
+                    bk = np.zeros((k0.shape[0], 1, self._prefix_width * ps)
+                                  + k0.shape[2:], k0.dtype)
+                    bv = np.zeros_like(bk)
+                    for j, src in enumerate(srcs):
+                        bk[:, 0, j * ps:(j + 1) * ps] = src[i]["k"]
+                        bv[:, 0, j * ps:(j + 1) * ps] = src[i]["v"]
+                    prefix_fp.append({"k": jnp.asarray(bk),
+                                      "v": jnp.asarray(bv)})
+                while len(self._prefix_fp_cache) >= 32:   # FIFO bound
+                    self._prefix_fp_cache.pop(
+                        next(iter(self._prefix_fp_cache)))
+                self._prefix_fp_cache[fpkey] = prefix_fp
+            first, fin, key, cache = self._tail_prefill_fn(
+                cap, tbucket, "float")(
+                self.fm.params, prefix_fp, jnp.asarray(tail[None]),
+                jnp.full((1,), tail_len, jnp.int32),
+                jnp.full((1,), skip * ps, jnp.int32), self._keys[slot][None],
+                self.fm.adapters.stacked(), jnp.full((1,), aslot, jnp.int32),
+                perm, inv, blocks)
+        else:
+            first, fin, key, cache = self._tail_prefill_fn(
+                cap, tbucket, "pages")(
+                self.fm.params, self.pool, jnp.asarray(tail[None]),
+                jnp.full((1,), tail_len, jnp.int32), jnp.asarray(prefix_ids),
+                jnp.full((1,), skip * ps, jnp.int32), self._keys[slot][None],
+                self.fm.adapters.stacked(), jnp.full((1,), aslot, jnp.int32),
+                perm, inv, blocks)
+        self._keys = self._keys.at[slot].set(key[0])
+        self.admissions += 1
+        self.tail_tokens_computed += tail_len
+        self.prefill_tokens_saved += skip * ps
+        if req.resume is None:
+            self.admitted_log.append((req.rid, req.task_id, true_len,
+                                      tail_len))
+        fin_ok = bool(np.asarray(fin)[0])
+        if not fin_ok:
+            # quarantined tail: roll the map phase back — shared refcounts
+            # drop to their pre-join values, restored/tail pages return to
+            # the free list (none were registered, so nothing re-spills),
+            # and the untouched spill entries keep the prefix restorable
+            self.quarantines += 1
+            if m_eff:
+                self._release_pages(shared_eff)
+            self._release_pages(priv_restore)
+            self._release_pages(priv_tail)
+        else:
+            # restored prefix pages get their float sidecars back from the
+            # spill blob (kept exact across the D2H round trip), so they
+            # keep serving float-mode tails to future sharers
+            for pg, (_, e) in zip(priv_restore, spilled):
+                if "kf" in e.blob[0]:
+                    self._page_float[int(pg)] = [
+                        {"k": sub["kf"], "v": sub["vf"]} for sub in e.blob]
+            for key_, _ in spilled:
+                self.spill.pop(("prefix", key_))
+            if k_eff:
+                self.spill_prefix_hits += 1
+                self.restored_pages += k_eff
+            if m_eff:
+                self.prefix_hits += 1
+                self.shared_pages_mapped += m_eff
+            boundary = true_len // ps - skip
+            self.pool = self._paged_tail_write_fn(npages)(
+                self.pool, cache, jnp.int32(slot), jnp.asarray(priv_tail),
+                jnp.int32(true_len), jnp.int32(boundary),
+                jnp.asarray(prefix_ids), jnp.int32(skip))
+            self._ptab[slot, :skip] = prefix_ids[:skip]
+            self._ptab[slot, skip:skip + npages] = priv_tail
+            self._held[slot] = skip + npages
+            self._lens[slot] = true_len
+            # trim tail-bucket padding beyond the true length (always
+            # private pages; the prefix never extends past the prompt)
+            keep = self._pages_for(true_len)
+            if keep < skip + npages:
+                self._release_pages(self._ptab[slot, keep:skip + npages])
+                self._ptab[slot, keep:skip + npages] = TRASH_PAGE
+                self._held[slot] = keep
+            # a float-mode tail's cache is exact, so its freshly registered
+            # pages earn sidecars of their own; a pages-mode tail carries
+            # the prefix dequantization error and must not seed sidecars
+            # that future sharers would trust as exact
+            self._register_prefix(req.adapter_id, true_prompt, slot,
+                                  true_len,
+                                  cache=cache if use_float else None,
+                                  cache_page0=skip)
+            self._ptab_dirty = True
+        return self._finish_admission(req, slot, aslot, first, fin_ok,
+                                      true_prompt, true_len, max_new_tokens,
+                                      t_adm)
+
+    def _finish_admission(self, req: _PendingJoin, slot: int, aslot: int,
+                          first, fin_ok: bool, true_prompt: np.ndarray,
+                          true_len: int, max_new_tokens: int,
+                          t_adm: float) -> int:
         self._tokens = self._tokens.at[slot].set(first[0])
         now = time.perf_counter()
         tok0 = int(first[0])
@@ -1648,10 +2103,14 @@ class DecodeEngine:
         out, self.rejected = self.rejected, []
         return out
 
-    def take_admitted(self) -> list[tuple[int, str, int]]:
-        """Drain the (rid, task_id, true_prompt_len) admission log — the
-        serve loop charges prompt tokens from HERE, at actual admission, so
-        a join that deferred and was later shed never carried a charge."""
+    def take_admitted(self) -> list[tuple[int, str, int, int]]:
+        """Drain the (rid, task_id, true_prompt_len, tail_tokens) admission
+        log — the serve loop charges prompt tokens from HERE, at actual
+        admission, so a join that deferred and was later shed never carried
+        a charge. ``tail_tokens`` is what the prefill ACTUALLY computed
+        (< true_prompt_len when a chunked admission mapped a shared prefix);
+        fair-share accounting charges it, not the full prompt — a sharer
+        must not be billed for compute the registry saved it."""
         out, self.admitted_log = self.admitted_log, []
         return out
 
@@ -1739,6 +2198,54 @@ class DecodeEngine:
                                       "k_max", "v_max")} for sub in blob]
         self.pool = self._slot_restore_fn()(self.pool, state, jnp.int32(0),
                                             jnp.int32(int(self._lens[0])))
+
+    def warm_chunked(self):
+        """Precompile the chunked-admission planes (one tail prefill + one
+        tail-page scatter per tail bucket) so sharer joins never recompile
+        in steady state, whatever tail length they arrive with. The warm
+        prefill attends only trash-page content behind a masked-out prefix
+        window and its outputs are DISCARDED — in particular the advanced
+        PRNG key, so a warmed engine's sampling streams stay bit-identical
+        to an unwarmed one's. The warm scatter targets the trash page at
+        slot 0 with a zero length (idle-engine garbage contract, same as
+        ``warm_decode_ladder``)."""
+        assert self.active_count() == 0, \
+            "warm_chunked must run on an idle engine"
+        if not (self.paged and self.chunked_prefill):
+            return
+        cap = self.fm.adapters.capacity()
+        aslot = self.fm.adapters.index(None)
+        prefix_ids = jnp.full((self._prefix_width,), TRASH_PAGE, jnp.int32)
+        # zero float-prefix operand at the fixed (prefix_width) shape every
+        # float-mode tail call uses — same dtype as the sidecar slices
+        # (native cache dtype), so the warm trace is the steady-state trace
+        warm_fp = [{"k": c["k"], "v": c["v"]}
+                   for c, p in zip(
+                       lm.init_cache(self.cfg, 1,
+                                     self._prefix_width * self.page_size,
+                                     kv_quant=False), self.pool)
+                   if isinstance(p, dict) and "page_table" in p]
+        for tb in self.tail_buckets:
+            perm, inv, blocks = self._prefill_segments(aslot, cap, tb)
+            self._tail_prefill_fn(cap, tb, "float")(
+                self.fm.params, warm_fp, jnp.zeros((1, tb), jnp.int32),
+                jnp.full((1,), tb, jnp.int32),
+                jnp.zeros((1,), jnp.int32), self._keys[0][None],
+                self.fm.adapters.stacked(), jnp.full((1,), aslot, jnp.int32),
+                perm, inv, blocks)
+            self._tail_prefill_fn(cap, tb, "pages")(
+                self.fm.params, self.pool, jnp.zeros((1, tb), jnp.int32),
+                jnp.full((1,), tb, jnp.int32), prefix_ids,
+                jnp.zeros((1,), jnp.int32), self._keys[0][None],
+                self.fm.adapters.stacked(), jnp.full((1,), aslot, jnp.int32),
+                perm, inv, blocks)
+            npages = self._pages_for(tb)
+            cache = lm.init_cache(self.cfg, 1, npages * self.page_size,
+                                  kv_quant=False)
+            self.pool = self._paged_tail_write_fn(npages)(
+                self.pool, cache, jnp.int32(0),
+                jnp.full((npages,), TRASH_PAGE, jnp.int32), jnp.int32(0),
+                jnp.int32(-1), prefix_ids, jnp.int32(0))
 
     def step_chunk(self) -> list[DecodeSlot]:
         """Advance every occupied slot by up to ``chunk`` tokens under one
@@ -1831,7 +2338,8 @@ class DecodeEngine:
                  "deadline_cancels", "deadline_sheds", "stranded_rejections",
                  "cancels", "spilled_pages", "restored_pages",
                  "digest_failures", "spill_resumes", "spill_prefix_hits",
-                 "deadline_clamps")
+                 "deadline_clamps", "tail_tokens_computed",
+                 "prefill_tokens_saved")
 
     def _config_dict(self) -> dict:
         """Constructor kwargs that rebuild an identical engine."""
@@ -1847,6 +2355,7 @@ class DecodeEngine:
             "pending_lookahead": self.pending_lookahead,
             "hol_skip_cap": self.hol_skip_cap,
             "deadline_clamp": self.deadline_clamp,
+            "chunked_prefill": self.chunked_prefill,
         }
 
     def snapshot(self) -> EngineSnapshot:

@@ -121,6 +121,12 @@ class ServeLoop:
         self._tie_last = "decode"               # alternation state (see tick)
         self.page_samples: list[float] = []     # paged-pool occupancy / tick
         self.shared_samples: list[float] = []   # dedup fraction / decode tick
+        # TTFT split by admission kind (chunked shared-prefix prefill):
+        # rids whose admission mapped a prefix (tail < full prompt) land in
+        # the hit series at retire, everything else in the miss series
+        self._prefix_hit_rids: set[int] = set()
+        self.ttft_hit_samples: list[float] = []
+        self.ttft_miss_samples: list[float] = []
         # failure-isolation plane (module docstring): terminal-status tallies
         # plus the stall watchdog. The watchdog only arms while work is
         # queued and fires when no progress event (serve / engine step /
@@ -302,21 +308,28 @@ class ServeLoop:
 
     def _charge_admissions(self, sched, vfms, now):
         """Drain the engine's admitted log and charge each loop-admitted
-        request its TRUE (post-truncation) prompt length. Charging at ACTUAL
-        admission — not at dispatch into the engine — means a deferred join
-        that gets shed/cancelled while still pending never carried a charge
-        to refund (the BFQ-charge bug this replaces: deferred joins were
-        priced at dispatch, so a drop in the pending queue left the task's
-        virtual time inflated by a prefill that never ran)."""
+        request the prompt tokens its prefill ACTUALLY computed — the TAIL
+        tokens, which a chunked shared-prefix admission keeps below the
+        full (post-truncation) prompt length. Charging full prompt length
+        would bill a sharer for compute the prefix registry saved it,
+        inflating its task's virtual time and handing its fair share to
+        competitors. Charging at ACTUAL admission — not at dispatch into
+        the engine — means a deferred join that gets shed/cancelled while
+        still pending never carried a charge to refund (the BFQ-charge bug
+        this replaces: deferred joins were priced at dispatch, so a drop in
+        the pending queue left the task's virtual time inflated by a
+        prefill that never ran)."""
         eng = self._engine()
         if eng is None:
             return
         charges: dict[str, float] = collections.Counter()
-        for rid, tid, toks in eng.take_admitted():
+        for rid, tid, toks, tail in eng.take_admitted():
             # step_batch-owned requests were dispatched at FULL arrival
             # price (see _drain_gen) — only loop-admitted rids pay here
             if rid in self._inflight:
-                charges[tid] += toks
+                charges[tid] += tail
+                if tail < toks:
+                    self._prefix_hit_rids.add(rid)
         if charges:
             sched.charge_tokens(vfms, charges, now)
 
@@ -393,10 +406,15 @@ class ServeLoop:
         """Stamp a loop-admitted stream's request at ITS retire chunk (keeps
         TTFT/TPOT honest for short streams co-batched with long ones)."""
         r = self._inflight.pop(slot.rid, None)
+        hit = slot.rid in self._prefix_hit_rids
+        self._prefix_hit_rids.discard(slot.rid)
         if r is None:
             return                    # admitted by step_batch; handled there
         r.first_token_time = slot.t_first
         r.finish_time = now
+        if r.arrival is not None and slot.t_first is not None:
+            (self.ttft_hit_samples if hit else self.ttft_miss_samples
+             ).append(slot.t_first - r.arrival)
         r.result = np.asarray(slot.tokens, np.int32)
         v = vfms.get(r.task_id)
         if v is not None:
@@ -652,6 +670,10 @@ class ServeLoop:
                 eng.warm_decode_ladder()
             if getattr(eng, "spill", None) is not None:
                 eng.warm_spill()
+            # chunked shared-prefix admissions compile per TAIL bucket —
+            # warm them so the first sharer join never eats a compile
+            if getattr(eng, "chunked_prefill", False):
+                eng.warm_chunked()
 
     def _work_left(self) -> bool:
         eng = self._engine()

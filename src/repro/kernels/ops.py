@@ -129,6 +129,30 @@ def paged_decode_attention(q, k_pages, v_pages, k_scale, v_scale, page_table,
                                     window=window)
 
 
+def gather_prefix_kv(k_pages, v_pages, k_scale, v_scale, page_table):
+    """Dequantized prefix K/V gather, model layout (chunked prefill).
+
+    k_pages/v_pages: (num_pages, ps, KV, hd) int8 arena; k_scale/v_scale:
+    (num_pages, KV) per-page scales; page_table: (B, P) int32 prefix pages
+    (positions past a row's true prefix length may point at the trash page —
+    the attention mask is responsible for hiding them). Returns float32
+    (k, v), each (B, P * ps, KV, hd), ready to feed
+    ``models.attention.flash_attention(prefix_k=..., prefix_v=...)``.
+
+    Pure-jnp on every backend: the gathered block is per-request-sized (a
+    handful of prefix pages), so there is nothing for a Pallas kernel to win
+    here — the arena is never transposed wholesale."""
+    B, P = page_table.shape
+    _, ps, KV, hd = k_pages.shape
+
+    def gather(pages, scale):
+        g = pages[page_table].astype(jnp.float32)    # (B, P, ps, KV, hd)
+        g = g * scale[page_table][:, :, None, :, None]
+        return g.reshape(B, P * ps, KV, hd)
+
+    return gather(k_pages, k_scale), gather(v_pages, v_scale)
+
+
 def segmented_lora(x, block_adapter, a_w, b_w, *, block_t: int = 128,
                    backend: Optional[str] = None, interpret: bool = False):
     """x: (T, d) adapter-sorted; b_w: (NA, r, out) -> LoRA delta (T, out)."""

@@ -87,6 +87,26 @@ def paged_decode_attention_ref(q, k_pages, v_pages, k_scale, v_scale,
                                 window=window)
 
 
+def gather_prefix_kv_ref(k_pages, v_pages, k_scale, v_scale, page_table):
+    """Dequantized prefix K/V gather (kernel layout, head-major).
+
+    k_pages/v_pages: (num_pages, KV, ps, hd) int8; k_scale/v_scale:
+    (num_pages, KV); page_table: (B, P) int32. Returns float32
+    (k, v), each (B, KV, P * ps, hd) — the chunked-prefill oracle for
+    attending a private tail against already-mapped int8 prefix pages.
+    """
+    B = page_table.shape[0]
+    _, KV, ps, hd = k_pages.shape
+    P = page_table.shape[1]
+
+    def gather(pages, scale):
+        g = pages[page_table].astype(jnp.float32)        # (B, P, KV, ps, hd)
+        g = g * scale[page_table][..., None, None]       # per-page dequant
+        return g.transpose(0, 2, 1, 3, 4).reshape(B, KV, P * ps, hd)
+
+    return gather(k_pages, k_scale), gather(v_pages, v_scale)
+
+
 def segmented_lora_ref(x, block_adapter, a_w, b_w, block_size: int):
     """Multi-adapter LoRA delta on an adapter-sorted batch.
 

@@ -168,6 +168,14 @@ class SegmentMetaCache:
 def padded_tokens(n_tokens: int, max_segments: int, block_t: int) -> int:
     """Static upper bound on the sorted/padded token count: every one of up to
     ``max_segments`` adapter segments pads to a block multiple. Keyed only on
-    bucketed quantities so jitted serve shapes are stable across batches."""
-    base = -(-n_tokens // block_t) * block_t
-    return base + max_segments * block_t
+    bucketed quantities so jitted serve shapes are stable across batches.
+
+    The bound is TIGHT: with ``s`` non-empty segments over ``n`` tokens, each
+    segment holds >= 1 token, so ``sum ceil(c_i/bt)*bt`` is maximized when
+    ``s - 1`` segments hold exactly one token each — giving
+    ``((n - s)//bt + s) * bt`` — not the looser ``ceil(n/bt)*bt + s*bt`` that
+    double-counts a full block of slack per segment. At decode shapes
+    (``block_t`` ~ batch) the difference is roughly ``max_segments`` whole
+    blocks of wasted kernel grid per co-batch."""
+    s = min(max_segments, max(n_tokens, 1))
+    return (max(0, n_tokens - s) // block_t + s) * block_t

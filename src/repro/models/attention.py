@@ -48,7 +48,8 @@ def _chunk(n: int, target: int) -> int:
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "q_chunk", "kv_chunk"))
 def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
-                    q_chunk: int = 1024, kv_chunk: int = 1024, kv_len=None):
+                    q_chunk: int = 1024, kv_chunk: int = 1024, kv_len=None,
+                    prefix_k=None, prefix_v=None, prefix_len=None):
     """Online-softmax attention.
 
     q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with H % KV == 0 (GQA).
@@ -59,8 +60,34 @@ def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = Non
     beyond a row's length are masked out (right-padded variable-length
     prefill). Query rows past the length still see a non-empty causal
     window, so their (discarded) outputs stay finite.
+
+    ``prefix_k``/``prefix_v``: optional (B, Sp, KV, hd) precomputed prefix
+    K/V prepended before ``k``/``v`` on the key axis (chunked shared-prefix
+    prefill: the tail's queries attend to dequantized prefix pages that were
+    never part of this dispatch's QKV projection). ``prefix_len`` (B,) gives
+    each row's true prefix length — positions at or beyond it are masked out
+    (bucket-padded prefix tables point the slack at the trash page). Queries
+    sit causally AFTER the whole prefix: q position 0 is absolute position
+    ``prefix_len``, so every valid prefix key is visible to every query.
     """
     B, Sq, H, hd = q.shape
+    Sk_new = k.shape[1]
+    KV = k.shape[2]
+    if prefix_k is not None:
+        assert prefix_v is not None and prefix_len is not None
+        assert window is None, "sliding window over a prefix is unsupported"
+        Sp = prefix_k.shape[1]
+        k = jnp.concatenate([prefix_k.astype(k.dtype), k], axis=1)
+        v = jnp.concatenate([prefix_v.astype(v.dtype), v], axis=1)
+        tail_ok = (jnp.arange(Sk_new)[None] < kv_len[:, None]
+                   if kv_len is not None
+                   else jnp.ones((B, Sk_new), jnp.bool_))
+        key_valid = jnp.concatenate(
+            [jnp.arange(Sp)[None] < prefix_len[:, None], tail_ok], axis=1)
+    elif kv_len is not None:
+        key_valid = jnp.arange(Sk_new)[None] < kv_len[:, None]
+    else:
+        key_valid = None
     _, Sk, KV, _ = k.shape
     G = H // KV
     qc = _chunk(Sq, q_chunk)
@@ -81,7 +108,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = Non
 
         def kv_step(carry, ki):
             m, l, acc = carry
-            kblk, vblk, kidx = ki
+            kblk, vblk, kidx = ki[:3]
             k_pos = kidx * kc + jnp.arange(kc)
             s = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk,
                            preferred_element_type=jnp.float32) * scale
@@ -91,8 +118,8 @@ def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = Non
             if window is not None:
                 mask &= (q_pos[:, None] - k_pos[None, :]) < window
             mask = mask[None, None, None]                 # (1, 1, 1, qc, kc)
-            if kv_len is not None:
-                vmask = k_pos[None] < kv_len[:, None]     # (B, kc)
+            if key_valid is not None:
+                vmask = ki[3]                             # (B, kc)
                 mask = mask & vmask[:, None, None, None]
             s = jnp.where(mask, s, NEG_INF)
             m_new = jnp.maximum(m, s.max(axis=-1))
@@ -107,9 +134,10 @@ def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = Non
         m0 = jnp.full((B, KV, G, qc), NEG_INF, jnp.float32)
         l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
         a0 = jnp.zeros((B, KV, G, qc, hd), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(
-            kv_step, (m0, l0, a0),
-            (kr.swapaxes(0, 1), vr.swapaxes(0, 1), jnp.arange(Sk // kc)))
+        xs = (kr.swapaxes(0, 1), vr.swapaxes(0, 1), jnp.arange(Sk // kc))
+        if key_valid is not None:
+            xs = xs + (key_valid.reshape(B, Sk // kc, kc).swapaxes(0, 1),)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), xs)
         out = acc / jnp.maximum(l, 1e-30)[..., None]      # (B, KV, G, qc, hd)
         return None, out.transpose(0, 3, 1, 2, 4)          # (B, qc, KV, G, hd)
 
@@ -176,19 +204,30 @@ def out_project(p, attn_out, dtype):
 
 def self_attention(p, x, cfg, shard, *, causal=True, pos=None, pos3=None,
                    lora=None, adapter_idx=None, lora_impl="gather",
-                   lora_seg=None, seq_lens=None):
+                   lora_seg=None, seq_lens=None, prefix=None, prefix_len=None):
     """Full-sequence self attention (train / prefill). Returns (out, (k, v)).
 
     ``seq_lens``: (B,) true lengths of right-padded rows — pad key positions
-    are masked out of the attention (variable-length prefill admission)."""
+    are masked out of the attention (variable-length prefill admission).
+
+    ``prefix``: optional dict(k, v) of precomputed (B, Sp, KV, hd) prefix K/V
+    (dequantized shared-prefix pages, chunked prefill) that the queries attend
+    to in ADDITION to this dispatch's own K/V; ``prefix_len`` (B,) true prefix
+    lengths. The returned (k, v) stay tail-only — the cache stores only what
+    this dispatch computed."""
     q, k, v = qkv_project(p, x, cfg, pos=pos, pos3=pos3, lora=lora,
                           adapter_idx=adapter_idx, lora_impl=lora_impl,
                           lora_seg=lora_seg)
     q = shard(q, ("batch", None, "heads", None))
     k = shard(k, ("batch", None, "kv_heads", None))
     v = shard(v, ("batch", None, "kv_heads", None))
-    o = flash_attention(q, k, v, causal=causal, window=cfg.sliding_window,
-                        kv_len=seq_lens)
+    if prefix is not None:
+        o = flash_attention(q, k, v, causal=causal, window=cfg.sliding_window,
+                            kv_len=seq_lens, prefix_k=prefix["k"],
+                            prefix_v=prefix["v"], prefix_len=prefix_len)
+    else:
+        o = flash_attention(q, k, v, causal=causal, window=cfg.sliding_window,
+                            kv_len=seq_lens)
     return out_project(p, o, x.dtype), (k, v)
 
 

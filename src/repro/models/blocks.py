@@ -191,7 +191,8 @@ def _ffn_apply(p, x, cfg, lay, shard):
 def sublayer_apply(p, x, cfg: ModelConfig, lay: SubLayer, shard, *,
                    mode: str, cache=None, pos=None, pos3=None, causal=True,
                    enc_out=None, lora=None, adapter_idx=None,
-                   lora_impl: str = "gather", lora_seg=None, seq_lens=None):
+                   lora_impl: str = "gather", lora_seg=None, seq_lens=None,
+                   prefix=None, prefix_len=None):
     """Apply one sublayer. mode: 'full' (train/prefill) or 'decode'.
 
     Returns (x, cache', aux_loss). cache' is None unless a cache was provided
@@ -201,6 +202,12 @@ def sublayer_apply(p, x, cfg: ModelConfig, lay: SubLayer, shard, *,
     prefill — pad keys are masked out of attention, pad K/V are zeroed before
     the cache write (so int8 admission scales see only real tokens), and the
     cache ``len`` is set per row instead of to the padded S.
+
+    ``prefix``/``prefix_len``: chunked shared-prefix prefill — a dict(k, v)
+    of precomputed (B, Sp, KV, hd) prefix K/V this sublayer's queries attend
+    to IN FRONT of their own keys (dequantized shared pages; see
+    ``attention.self_attention``). The cache fill below stores only the
+    tail's K/V — the prefix already lives in the paged arena.
     """
     aux = 0.0
     h = rmsnorm(p["ln1"], x, cfg.norm_eps)
@@ -220,7 +227,8 @@ def sublayer_apply(p, x, cfg: ModelConfig, lay: SubLayer, shard, *,
             out, (k, v) = attn.self_attention(
                 p["attn"], h, cfg, shard, causal=causal, pos=pos, pos3=pos3,
                 lora=lora, adapter_idx=adapter_idx, lora_impl=lora_impl,
-                lora_seg=lora_seg, seq_lens=seq_lens)
+                lora_seg=lora_seg, seq_lens=seq_lens, prefix=prefix,
+                prefix_len=prefix_len)
             new_cache = None
             if cache is not None:  # prefill: fill the cache
                 S = x.shape[1]

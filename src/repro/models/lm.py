@@ -88,10 +88,12 @@ def init_cache(cfg: ModelConfig, batch: int, s_max: int, kv_quant: bool = False,
 
 def _stack_forward(layers_p, layout, x, cfg, shard, *, mode, cache, pos, pos3,
                    causal, enc_out, remat, lora=None, adapter_idx=None,
-                   lora_impl="gather", lora_seg=None, seq_lens=None):
+                   lora_impl="gather", lora_seg=None, seq_lens=None,
+                   prefix=None, prefix_len=None):
     """Scan over periods. Returns (x, new_cache, aux_sum)."""
     with_cache = cache is not None
     with_lora = lora is not None
+    with_prefix = prefix is not None
 
     def body(carry, xs):
         x = carry
@@ -99,13 +101,15 @@ def _stack_forward(layers_p, layout, x, cfg, shard, *, mode, cache, pos, pos3,
         p_layers = xs.pop(0)
         cache_layers = xs.pop(0) if with_cache else [None] * len(layout)
         lora_layers = xs.pop(0) if with_lora else [None] * len(layout)
+        prefix_layers = xs.pop(0) if with_prefix else [None] * len(layout)
         new_caches, aux = [], 0.0
         for i, lay in enumerate(layout):
             x, nc, a = blk.sublayer_apply(
                 p_layers[i], x, cfg, lay, shard, mode=mode, cache=cache_layers[i],
                 pos=pos, pos3=pos3, causal=causal, enc_out=enc_out,
                 lora=(lora_layers[i] or None), adapter_idx=adapter_idx,
-                lora_impl=lora_impl, lora_seg=lora_seg, seq_lens=seq_lens)
+                lora_impl=lora_impl, lora_seg=lora_seg, seq_lens=seq_lens,
+                prefix=(prefix_layers[i] or None), prefix_len=prefix_len)
             new_caches.append(nc)
             aux = aux + a
         # residual-stream boundary constraint: under sequence parallelism the
@@ -122,6 +126,8 @@ def _stack_forward(layers_p, layout, x, cfg, shard, *, mode, cache, pos, pos3,
         xs.append(cache)
     if with_lora:
         xs.append(lora)
+    if with_prefix:
+        xs.append(prefix)
     xs = tuple(xs)
     x, ys = jax.lax.scan(fn, x, xs)
     if with_cache:
@@ -133,7 +139,8 @@ def _stack_forward(layers_p, layout, x, cfg, shard, *, mode, cache, pos, pos3,
 def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None, cache=None,
             mode: str = "full", pos=None, pos3=None, enc_embeds=None,
             shard=NO_SHARD, remat: bool = False, lora=None, adapter_idx=None,
-            lora_impl: str = "gather", lora_seg=None, seq_lens=None):
+            lora_impl: str = "gather", lora_seg=None, seq_lens=None,
+            prefix=None, prefix_len=None):
     """Backbone forward. Returns (hidden (B,S,d), new_cache, aux_loss).
 
     Inputs: ``tokens`` (B,S) int32 or ``embeds`` (B,S,d) (stub frontends);
@@ -146,6 +153,12 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None, cache=None,
     ``seq_lens``: (B,) per-row true lengths for right-padded variable-length
     batches (serving admission) — pad key positions are masked out of every
     attention sublayer and excluded from the prefill cache.
+
+    ``prefix``/``prefix_len``: chunked shared-prefix prefill — a list aligned
+    with the period layout of per-sublayer dict(k, v) precomputed prefix K/V
+    (leading ``num_periods`` axis, like ``cache``; None for non-attention
+    sublayers) that every attention sublayer attends to in front of its own
+    keys. Pass absolute ``pos`` (``prefix_len + arange(S)``) so RoPE matches.
     """
     enc_out = None
     if cfg.is_encoder_decoder:
@@ -174,7 +187,7 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None, cache=None,
         params["layers"], layout, x, cfg, shard, mode=mode, cache=cache, pos=pos,
         pos3=pos3, causal=causal, enc_out=enc_out, remat=remat, lora=lora,
         adapter_idx=adapter_idx, lora_impl=lora_impl, lora_seg=lora_seg,
-        seq_lens=seq_lens)
+        seq_lens=seq_lens, prefix=prefix, prefix_len=prefix_len)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     return x, new_cache, aux
 
@@ -259,7 +272,8 @@ def finite_logits(logits) -> jnp.ndarray:
 
 def prefill(params, cfg: ModelConfig, *, tokens=None, embeds=None, enc_embeds=None,
             pos3=None, cache, shard=NO_SHARD, lora=None, adapter_idx=None,
-            lora_impl: str = "gather", lora_seg=None, seq_lens=None):
+            lora_impl: str = "gather", lora_seg=None, seq_lens=None,
+            pos=None, prefix=None, prefix_len=None):
     """Fill the decode cache from a prompt. Returns (last_logits, cache).
     ``lora``/``adapter_idx``: co-batched multi-task admission — the prompt
     pass applies the same per-request adapters the decode steps will.
@@ -273,16 +287,23 @@ def prefill(params, cfg: ModelConfig, *, tokens=None, embeds=None, enc_embeds=No
     (``DecodeEngine._paged_write_fn``) then quantizes each page over its own
     content — per-(page, kv-head) scales are a pure function of the tokens a
     page covers, so two streams admitting the same prefix write bit-identical
-    pages, the property copy-on-write prefix sharing rests on. Shared prefix
-    positions scatter to the trash page (their content already lives in the
-    arena under the registered stream's pages); only the private tail lands.
+    pages, the property copy-on-write prefix sharing rests on.
     ``decode_step`` takes the paged branch automatically when the cache
-    carries a ``page_table``."""
+    carries a ``page_table``.
+
+    Chunked shared-prefix admission passes ``tokens`` holding only the
+    PRIVATE TAIL plus ``prefix``/``prefix_len``/``pos``: ``prefix`` is the
+    per-sublayer dequantized K/V of the already-mapped shared pages (see
+    ``forward``), ``pos = prefix_len + arange(tail)`` keeps RoPE at absolute
+    positions, ``seq_lens`` counts TAIL tokens only, and the returned cache
+    holds only the tail's K/V — the engine scatters it after the prefix
+    pages in the slot's page table."""
     x, cache, _ = forward(params, cfg, tokens=tokens, embeds=embeds,
                           enc_embeds=enc_embeds, pos3=pos3, cache=cache,
                           mode="full", shard=shard, lora=lora,
                           adapter_idx=adapter_idx, lora_impl=lora_impl,
-                          lora_seg=lora_seg, seq_lens=seq_lens)
+                          lora_seg=lora_seg, seq_lens=seq_lens, pos=pos,
+                          prefix=prefix, prefix_len=prefix_len)
     if seq_lens is None:
         last = x[:, -1]
     else:

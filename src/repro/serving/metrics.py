@@ -83,6 +83,10 @@ def page_gauges(engine) -> dict:
         "dedup_saved_pages": engine.dedup_saved_pages(),
         "logical_pages": engine.logical_page_count(),
         "prefix_hits": getattr(engine, "prefix_hits", 0),
+        # chunked shared-prefix prefill: prompt tokens the engine actually
+        # prefilled vs tokens it skipped by mapping already-resident pages
+        "tail_tokens_computed": getattr(engine, "tail_tokens_computed", 0),
+        "prefill_tokens_saved": getattr(engine, "prefill_tokens_saved", 0),
         "hol_bypasses": getattr(engine, "hol_bypasses", 0),
         "scale_refreshes": getattr(engine, "scale_refreshes", 0),
         "spilled_pages": getattr(engine, "spilled_pages", 0),
@@ -136,7 +140,7 @@ def failure_counters(requests=(), *, loop=None, engine=None,
 
 
 def mixed_stats(requests, page_samples=None, shared_samples=None,
-                failures=None) -> dict:
+                failures=None, ttft_split=None) -> dict:
     """Split per-plane report for mixed pooled + generative serving (the
     event-loop plane): request-level latency for the pooled side, token-level
     TTFT/TPOT/throughput for the generative side. ``page_samples`` (the
@@ -146,12 +150,27 @@ def mixed_stats(requests, page_samples=None, shared_samples=None,
     (per-decode-tick dedup fractions: pages saved by prefix sharing over
     logical page mappings) adds a sharing section — how much effective
     capacity COW prefix sharing is buying on this workload. ``failures`` (a
-    ``failure_counters`` dict) adds the failure-plane section."""
+    ``failure_counters`` dict) adds the failure-plane section.
+    ``ttft_split`` ({"hit": [...], "miss": [...]} TTFT seconds, the
+    ``ServeLoop.ttft_hit_samples``/``ttft_miss_samples`` series) adds a
+    prefix-hit vs miss TTFT section — what chunked shared-prefix prefill is
+    buying sharer joins on this workload."""
     pooled = [r for r in requests if r.max_new_tokens <= 0]
     gen = [r for r in requests if r.max_new_tokens > 0]
     out = {"pooled": latency_stats(pooled), "decode": decode_stats(gen)}
     if failures:
         out["failures"] = failures
+    if ttft_split and (ttft_split.get("hit") or ttft_split.get("miss")):
+        hit = ttft_split.get("hit") or []
+        miss = ttft_split.get("miss") or []
+        out["ttft_split"] = {
+            "prefix_hit_n": len(hit),
+            "prefix_miss_n": len(miss),
+            "prefix_hit_p50_ms": 1e3 * percentile(hit, 50),
+            "prefix_miss_p50_ms": 1e3 * percentile(miss, 50),
+            "prefix_hit_p99_ms": 1e3 * percentile(hit, 99),
+            "prefix_miss_p99_ms": 1e3 * percentile(miss, 99),
+        }
     if page_samples:
         out["kv_pages"] = {
             "samples": len(page_samples),

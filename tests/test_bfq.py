@@ -356,3 +356,32 @@ def test_pooled_latency_bounded_under_decode_colocation():
     assert len(stream.result) == 64
     # (b) bounded degradation (~2x, asserted with headroom for CI noise)
     assert p50_colo < 3.0 * max(p50_solo, 1e-3), (p50_colo, p50_solo)
+
+
+def test_admission_charges_tail_tokens_not_full_prompt():
+    """Chunked shared-prefix admission regression: a sharer whose prefill
+    computed only the private TAIL is charged tail tokens, not the full
+    prompt — billing the full prompt would inflate the sharer task's
+    virtual time by compute the prefix registry saved it, handing its fair
+    share to competitors. step_batch-owned rids (not loop-admitted) were
+    priced at dispatch and must not pay again here."""
+    from repro.core.serve_loop import ServeLoop
+
+    sched, vfms = make()
+    l1 = sched.profile.l(1)
+
+    class StubEngine:
+        def take_admitted(self):
+            # (rid, task_id, prompt_tokens, tail_tokens): rid 1 is a
+            # prefix-hit sharer (112-token prompt, 16-token tail), rid 2 a
+            # miss (full prefill), rid 3 step_batch-owned (not inflight)
+            return [(1, "A", 112, 16), (2, "B", 112, 112), (3, "A", 112, 16)]
+
+    loop = ServeLoop.__new__(ServeLoop)
+    loop._inflight = {1: object(), 2: object()}
+    loop._prefix_hit_rids = set()
+    loop._engine = lambda: StubEngine()
+    ServeLoop._charge_admissions(loop, sched, vfms, 0.0)
+    assert sched.task_vtime("A") == pytest.approx(l1 * 16.0)     # tail only
+    assert sched.task_vtime("B") == pytest.approx(l1 * 112.0)    # full miss
+    assert loop._prefix_hit_rids == {1}                          # hit split

@@ -1,0 +1,201 @@
+"""Chunked shared-prefix prefill (tail-only admission): exact token AND
+sampling parity against the full-prefill path, COW divergence inside the
+partial boundary page, sharer joins served from the prefix spill tier, and
+zero steady-state recompiles across sharer churn with mixed tail buckets
+after ``warm_chunked``."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.decode_engine import DecodeEngine
+from repro.core.physical import PhysicalFM
+
+BT = 8
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduced(get_config("stablelm-1.6b"))
+
+
+def _randomized_adapter(fm, i):
+    tree = fm.adapters._mod.init_single_adapter(
+        jax.random.PRNGKey(i), fm.cfg, fm.adapters.rank)
+    leaves, tdef = jax.tree.flatten(tree)
+    ks = jax.random.split(jax.random.PRNGKey(100 + i), len(leaves))
+    return jax.tree.unflatten(tdef, [
+        jax.random.normal(k, l.shape, l.dtype) * 0.05
+        for k, l in zip(ks, leaves)])
+
+
+def _fm(cfg, impl="segmented", na=3):
+    fm = PhysicalFM(cfg, seed=0, input_len=8, lora_rank=4, lora_impl=impl,
+                    seg_block_t=BT)
+    for i in range(na):
+        fm.adapters.add(f"lora{i}", _randomized_adapter(fm, i))
+    return fm
+
+
+def _isolated_tokens(fm, prompt, steps, **kw):
+    """Reference: the prompt served ALONE on a fresh paged pool."""
+    eng = DecodeEngine(fm, num_slots=2, prompt_len=16, max_new=24, chunk=2,
+                       paged=True, page_size=4, **kw)
+    eng.join("ref", prompt, adapter_id="lora0", max_new_tokens=steps, rid=0)
+    (d,) = eng.drain()
+    return d.tokens
+
+
+def _shared_prompts(cfg, seed, n_sharers=3, prefix_tokens=8):
+    rng = np.random.RandomState(seed)
+    prefix = rng.randint(0, cfg.vocab_size, prefix_tokens).astype(np.int32)
+    return [np.concatenate([prefix,
+                            rng.randint(0, cfg.vocab_size,
+                                        1 + i).astype(np.int32)])
+            for i in range(n_sharers)]
+
+
+def _serve_all(eng, prompts, steps=6):
+    for i, p in enumerate(prompts):
+        eng.join(f"t{i}", p, adapter_id="lora0", max_new_tokens=steps, rid=i)
+    return {d.rid: d.tokens for d in eng.drain()}
+
+
+@pytest.mark.parametrize("sampling", [dict(temperature=0.0),
+                                      dict(temperature=0.7, top_k=8,
+                                           sample_seed=3)])
+def test_chunked_matches_full_prefill_exactly(cfg, sampling):
+    """Engines differing ONLY in ``chunked_prefill`` produce bit-identical
+    token streams for every sharer — greedy AND seeded top-k sampling. The
+    tail attends the prefix pages' float sidecars (the exact values a full
+    prefill computes), so chunking changes the work done, not the math."""
+    fm = _fm(cfg, na=1)
+    prompts = _shared_prompts(cfg, seed=31)
+    outs = {}
+    for chunked in (False, True):
+        eng = DecodeEngine(fm, num_slots=4, prompt_len=16, max_new=6,
+                           chunk=2, paged=True, page_size=4,
+                           chunked_prefill=chunked, **sampling)
+        outs[chunked] = _serve_all(eng, prompts)
+        if chunked:
+            assert eng.prefill_tokens_saved > 0
+            assert eng.tail_tokens_computed < sum(len(p) for p in prompts)
+        else:
+            assert eng.prefill_tokens_saved == 0
+    assert outs[True] == outs[False]
+
+
+def test_admitted_log_charges_tail_only(cfg):
+    """A chunked sharer's admission record carries the TAIL token count
+    (what the device computed), not the full prompt — the number BFQ
+    charges its task."""
+    fm = _fm(cfg, na=1)
+    prompts = _shared_prompts(cfg, seed=32, n_sharers=2)
+    eng = DecodeEngine(fm, num_slots=4, prompt_len=16, max_new=4, chunk=2,
+                       paged=True, page_size=4)
+    for i, p in enumerate(prompts):
+        eng.join(f"t{i}", p, adapter_id="lora0", max_new_tokens=4, rid=i)
+    log = {rid: (toks, tail) for rid, _, toks, tail in eng.take_admitted()}
+    assert log[0][0] == log[0][1] == len(prompts[0])   # holder: full charge
+    toks, tail = log[1]
+    assert toks == len(prompts[1]) and 0 < tail < toks  # sharer: tail only
+    eng.drain()
+
+
+def test_cow_divergence_inside_boundary_page(cfg):
+    """Sharers whose prompts diverge INSIDE the partial boundary page: the
+    chunked path maps only the full shared pages and recomputes the whole
+    boundary page privately, so each stream matches its isolated reference
+    and the boundary page is never shared."""
+    fm = _fm(cfg, na=1)
+    rng = np.random.RandomState(33)
+    prefix = rng.randint(0, cfg.vocab_size, 10).astype(np.int32)  # 2.5 pages
+    prompts = [np.concatenate([prefix,
+                               rng.randint(0, cfg.vocab_size,
+                                           2).astype(np.int32)])
+               for _ in range(2)]
+    assert not np.array_equal(prompts[0][10:], prompts[1][10:])
+    eng = DecodeEngine(fm, num_slots=4, prompt_len=16, max_new=6, chunk=2,
+                       paged=True, page_size=4)
+    s0 = eng.join("a", prompts[0], adapter_id="lora0", max_new_tokens=6,
+                  rid=0)
+    s1 = eng.join("b", prompts[1], adapter_id="lora0", max_new_tokens=6,
+                  rid=1)
+    assert eng.prefix_hits == 1
+    # pages 0-1 shared, the divergent boundary page (index 2) private
+    assert (eng._ptab[s0, :2] == eng._ptab[s1, :2]).all()
+    assert eng._ptab[s0, 2] != eng._ptab[s1, 2]
+    done = {d.rid: d.tokens for d in eng.drain()}
+    for i, p in enumerate(prompts):
+        assert done[i] == _isolated_tokens(fm, p, 6)
+
+
+def test_sharer_join_after_prefix_spill_restore(cfg):
+    """A sharer joining AFTER the prefix's last holder retired (pages moved
+    to the host spill tier) restores the leading pages by DMA, tail-prefills
+    the rest, and still matches the full-prefill reference exactly — the
+    float sidecars ride through the spill round trip."""
+    fm = _fm(cfg, na=1)
+    prompts = _shared_prompts(cfg, seed=34, n_sharers=2)
+    ref = {}
+    for chunked in (False, True):
+        eng = DecodeEngine(fm, num_slots=4, prompt_len=16, max_new=6,
+                           chunk=2, paged=True, page_size=4,
+                           chunked_prefill=chunked, spill_bytes=64 << 20)
+        eng.join("hold", prompts[0], adapter_id="lora0", max_new_tokens=6,
+                 rid=0)
+        (d0,) = eng.drain()                      # holder gone -> prefix spills
+        assert len(eng._prefix_registry) == 0 and eng.spilled_pages > 0
+        eng.join("late", prompts[1], adapter_id="lora0", max_new_tokens=6,
+                 rid=1)
+        if chunked:
+            assert eng.spill_prefix_hits == 1 and eng.restored_pages >= 1
+            assert eng.prefill_tokens_saved > 0
+        (d1,) = eng.drain()
+        ref[chunked] = (d0.tokens, d1.tokens)
+    assert ref[True] == ref[False]
+
+
+def test_zero_recompiles_across_sharer_churn_mixed_tails(cfg):
+    """After one full-prefill warm per prompt bucket plus ``warm_chunked``,
+    sharer churn — joins landing in EVERY tail bucket, leaves, a mid-stream
+    preemption whose resume re-enters the chunked path — adds ZERO
+    executables: tail lengths bucket, page ids and prefix lengths are
+    traced operands, never jit keys."""
+    fm = _fm(cfg)
+    eng = DecodeEngine(fm, num_slots=4, prompt_len=16, max_new=6, chunk=2,
+                       paged=True, page_size=4, prompt_buckets=(4, 16))
+    rng = np.random.RandomState(35)
+    for plen in (4, 16):                        # warm each prompt bucket
+        eng.join("w", rng.randint(0, cfg.vocab_size, plen),
+                 adapter_id="lora0", max_new_tokens=2, rid=-1)
+    eng.drain()
+    eng.warm_chunked()
+    compiles = eng.compile_count()
+    # wave churn: a holder plus sharers whose private tails land in each
+    # tail bucket (4, 8 behind the 8-token prefix; 16 behind the 4-token
+    # one); everything drains between waves, so the registry also churns
+    pfx8 = rng.randint(0, cfg.vocab_size, 8).astype(np.int32)
+    pfx4 = rng.randint(0, cfg.vocab_size, 4).astype(np.int32)
+    waves = [(pfx8, (1, 5)), (pfx8, (6, 3)), (pfx4, (12, 2))]
+    rid = 0
+    for w, (prefix, tails) in enumerate(waves):
+        eng.join("hold", np.concatenate(
+            [prefix, rng.randint(0, cfg.vocab_size, 2).astype(np.int32)]),
+            adapter_id="lora0", max_new_tokens=6, rid=1000 + w)
+        sharers = []
+        for tail in tails:
+            rid += 1
+            sharers.append(eng.join(f"s{rid}", np.concatenate(
+                [prefix,
+                 rng.randint(0, cfg.vocab_size, tail).astype(np.int32)]),
+                adapter_id="lora0", max_new_tokens=4, rid=rid))
+        if w == 1:                              # preempt + chunked resume
+            eng.step_chunk()
+            eng._preempt(sharers[0])
+        eng.drain()
+        assert eng.free_page_count() == eng.total_pages - 1
+    assert eng.prefix_hits >= 6                 # the chunked path really ran
+    assert eng.preemptions == 1
+    assert eng.compile_count() == compiles
+    assert eng.free_page_count() == eng.total_pages - 1

@@ -151,7 +151,7 @@ def test_deadline_cancels_live_and_sheds_pending(served):
     for rid in (9102, 9103):                     # fill both slots
         eng.join("task1", rng.randint(0, cfg.vocab_size, 8).astype(np.int32),
                  adapter_id="lora1", max_new_tokens=16, rid=rid)
-    admitted_rids = {rid for rid, _, _ in eng.take_admitted()}
+    admitted_rids = {rid for rid, *_ in eng.take_admitted()}
     eng.join("task2", rng.randint(0, cfg.vocab_size, 8).astype(np.int32),
              adapter_id="lora2", max_new_tokens=16, rid=9104,
              deadline=time.perf_counter() - 1.0)
@@ -162,7 +162,7 @@ def test_deadline_cancels_live_and_sheds_pending(served):
     assert rej[0].status == "deadline_shed"
     assert eng.deadline_sheds == s0 + 1
     # charged at ACTUAL admission: the shed rid never hit the admitted log
-    admitted_rids |= {rid for rid, _, _ in eng.take_admitted()}
+    admitted_rids |= {rid for rid, *_ in eng.take_admitted()}
     assert 9104 not in admitted_rids
     for rid in (9102, 9103):                     # cleanup
         assert eng.cancel(rid) is not None

@@ -171,6 +171,21 @@ def _check_page_invariants(eng):
             f"page {p}: free-list membership disagrees with refcount"
     for key, p in eng._prefix_registry.items():
         assert eng._page_refs[p] > 0 and eng._page_key.get(p) == key
+    # chunked-prefill float sidecars shadow REGISTERED live pages only:
+    # releases pop them (or move them into the spill blob), so a sidecar
+    # for a free or unregistered page would be a leak feeding stale floats
+    # to future sharers
+    for p in getattr(eng, "_page_float", {}):
+        assert eng._page_refs[p] > 0, f"sidecar for free page {p}"
+        assert eng._prefix_registry.get(eng._page_key.get(p)) == p, \
+            f"sidecar for unregistered page {p}"
+    # memoized assembled-prefix operands must reference live pages only —
+    # a key containing a freed id could serve stale floats after the id
+    # is recycled for different content
+    for fpkey in getattr(eng, "_prefix_fp_cache", {}):
+        for p in fpkey:
+            assert eng._page_refs[p] > 0, \
+                f"assembled-prefix cache holds freed page {p}"
     for s in range(eng.num_slots):
         slot = eng.slots[s]
         # done-but-unretired slots stop being topped up (their residual
@@ -182,19 +197,22 @@ def _check_page_invariants(eng):
 
 
 @settings(max_examples=8, deadline=None)
-@given(ops=st.lists(st.tuples(st.integers(0, 7), st.integers(0, 7)),
+@given(ops=st.lists(st.tuples(st.integers(0, 8), st.integers(0, 7)),
                     min_size=4, max_size=18))
 def test_paged_refcounts_never_leak_or_double_free(ops):
     """Randomized join/decode/preempt/retire sequences over shared-prefix
-    prompts, interleaved with the FAULT plane (client cancel by rid,
-    mid-flight deadline expiry) and the DURABILITY plane (host spill on
-    every preemption, snapshot/restore with a scrambled old arena — a
-    simulated device reset — and spill-entry corruption): the refcounted
-    free list never double-frees or leaks a page, unwinding a sharer
-    through ANY exit path never touches another stream's mapped pages, the
-    prefix registry only ever references live pages, restored engines
-    uphold all of it, terminally rejected entries always carry a failure
-    status, and a final drain returns the arena to fully free."""
+    prompts (joins take the CHUNKED tail-admission path whenever the prefix
+    is live or spilled), interleaved with the FAULT plane (client cancel by
+    rid, mid-flight deadline expiry) and the DURABILITY plane (host spill
+    on every preemption, snapshot/restore with a scrambled old arena — a
+    simulated device reset — spill-entry corruption, and a mass-retire that
+    pushes the prefix to the spill tier right before a late sharer pulls it
+    back): the refcounted free list never double-frees or leaks a page,
+    unwinding a sharer through ANY exit path never touches another
+    stream's mapped pages, the prefix registry only ever references live
+    pages, float sidecars shadow exactly the registered pages, restored
+    engines uphold all of it, terminally rejected entries always carry a
+    failure status, and a final drain returns the arena to fully free."""
     import time
 
     import jax.numpy as jnp
@@ -247,6 +265,14 @@ def test_paged_refcounts_never_leak_or_double_free(ops):
             arr = np.ascontiguousarray(d[name])
             arr.view(np.uint8).reshape(-1)[::3] ^= 0xFF
             d[name] = arr
+        elif op == 8:                                # mass retire (prefix
+            for s in live:                           # spills), late sharer
+                eng.leave(s)                         # restores + tail-admits
+            sfx = np.random.RandomState(99 + a).randint(
+                0, cfg.vocab_size, 1 + a % 5).astype(np.int32)
+            eng.join(f"late{rid}", np.concatenate([prefixes[a % 2], sfx]),
+                     adapter_id="lora0", max_new_tokens=1 + a % 4, rid=rid)
+            rid += 1
         rejected += eng.take_rejected()
         _check_page_invariants(eng)
     for _ in range(200):

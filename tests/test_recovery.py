@@ -152,7 +152,10 @@ def test_prefix_spill_survives_idle_gap_and_rededuplicates():
     assert len(eng._prefix_registry) == 0        # last sharer gone...
     assert eng.spilled_pages >= 2                # ...but the pages moved D2H
     eng.join("b", pfx, adapter_id="lora0", max_new_tokens=4, rid=11)
-    assert eng.spill_prefix_hits == 1 and eng.restored_pages >= 2
+    # chunked admission restores the leading spilled pages and re-prefills
+    # the prompt's final page privately (the first generated token needs a
+    # real last-position forward pass), so >= 1 page — not all — restores
+    assert eng.spill_prefix_hits == 1 and eng.restored_pages >= 1
     assert len(eng._prefix_registry) > 0         # re-registered
     # third joiner shares the LIVE restored pages (no further restore)
     eng.join("c", pfx, adapter_id="lora0", max_new_tokens=4, rid=12)

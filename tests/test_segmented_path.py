@@ -218,3 +218,46 @@ def test_segment_metadata_inverse_roundtrip():
         assert len(real) <= 1
         if real:
             assert real.pop() == raw_blocks[i]
+
+
+# ---------------- tight segment-padding bound ----------------
+
+def test_padded_tokens_tight_bound():
+    """``padded_tokens`` upper-bounds the actual sorted/padded total for any
+    ragged segment split, is block-aligned, never exceeds the old loose bound
+    (ceil(n/bt)*bt + s*bt), and is achieved exactly by the worst case of
+    ``s - 1`` singleton segments plus one big remainder."""
+    from repro.kernels.segmented_lora import sort_by_adapter
+    rng = np.random.RandomState(7)
+    for _ in range(50):
+        n = rng.randint(1, 300)
+        na = rng.randint(1, 10)
+        bt = int(rng.choice([4, 8, 16]))
+        ids = rng.randint(0, na + 1, n)            # includes the sentinel
+        s_max = min(n, na + 2)
+        tp = padded_tokens(n, s_max, bt)
+        _, _, total = sort_by_adapter(ids, na, block_t=bt)
+        assert total <= tp, (total, tp)
+        assert tp % bt == 0
+        assert tp <= -(-n // bt) * bt + s_max * bt
+    # tightness: 3 singleton segments + a 97-token remainder needs every
+    # block the bound grants
+    n, bt = 100, 16
+    ids = np.concatenate([np.arange(3), np.full(n - 3, 3)])
+    _, _, total = sort_by_adapter(ids, 4, block_t=bt)
+    assert total == padded_tokens(n, 4, bt) == 160
+
+
+def test_ragged_singleton_segments_parity():
+    """Worst-case ragged co-batch (every adapter a singleton segment except
+    one bulk segment) keeps exact gather-path parity under the tight bound."""
+    S, d, r, na = 1, 32, 4, 6
+    aidx = np.array([0, 1, 2, 3, 4, na, 5, 5, 5, 5, 5, 5, 5], np.int32)
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    x = jax.random.normal(ks[0], (len(aidx), S, d), jnp.float32)
+    a = jax.random.normal(ks[1], (na, d, r)) * 0.05
+    b = jax.random.normal(ks[2], (na, r, d)) * 0.05
+    want = apply_lora_delta(x, a, b, jnp.asarray(aidx))
+    got = apply_lora_delta_segmented(x, a, b, _seg_meta(aidx, na, S, bt=4))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+    assert np.abs(np.asarray(got)[aidx == na]).max() == 0.0
