@@ -1,0 +1,224 @@
+"""Self-speculative decoding benchmark (the PR's acceptance numbers).
+
+Three claims, measured on the same reduced decoder backbone, speculative
+engine vs an engine identical except ``spec_k=0`` (so the only variable is
+the speculative plane):
+
+  * **throughput on a self-overlapping workload** — decode tokens/s on a
+    high-overlap agentic trace improves >= 1.5x at k=4 (smoke: > 1.0).
+    Accept rates need generation that actually repeats itself; random
+    reduced-model weights never do, so the high-overlap leg runs on a
+    COPY-INCLINED backbone (attention out-projections zeroed: logits
+    depend only on the current token, the greedy chain is a bigram machine
+    that cycles, and the prompt-lookup drafter's matches accept — the
+    deterministic stand-in for a real model continuing agentic context).
+  * **exact greedy parity** — every stream's tokens match the plain
+    engine's token for token, on BOTH workloads. Speculation is a
+    scheduling change, not a numeric one.
+  * **bounded adversarial regression** — on a zero-overlap trace (random
+    weights, every draft misses) the EMA demotes to plain dispatches with
+    periodic speculative probes, holding the regression to <= 10% (full;
+    smoke asserts a loose floor against CI noise).
+
+Dispatch walls are compile-dominated until warmed, so every engine warms
+its prefill bucket, the plain decode ladder AND the speculative ladder
+before timing, and each leg re-drives the same workload several times
+taking the fastest pass (CPU CI noise). Results land under the "spec"
+section of ``BENCH_serving.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from common import write_serving_section
+from repro.configs import get_config, reduced
+from repro.core.decode_engine import DecodeEngine
+from repro.core.physical import PhysicalFM
+from repro.serving.loadgen import adversarial_token_trace, agentic_token_trace
+from repro.serving.metrics import speculation_stats
+
+PAGE_SIZE = 16
+PROMPT_LEN = 32
+MAX_NEW = 384          # long streams: the copy-inclined bigram chain needs
+                       # ~a cycle (~20 tokens) before the drafter's matches
+                       # start landing, so short streams under-report the
+                       # steady-state accept rate
+CHUNK = 4
+SPEC_K = 4
+NUM_SLOTS = 4
+N_STREAMS = 4          # == slots: every stream admits up front, so the
+                       # timed region is pure decode on both engines
+TOTAL_PAGES = 128
+REPEATS = 5
+
+
+def _fm(cfg) -> PhysicalFM:
+    return PhysicalFM(cfg, seed=0, input_len=PROMPT_LEN, lora_rank=8,
+                      lora_impl="segmented", seg_block_t=16)
+
+
+def _copy_inclined(fm) -> PhysicalFM:
+    """Zero the attention out-projections: next-token logits depend only on
+    the current token, so greedy generation is a deterministic bigram walk
+    over a finite vocab — it cycles (pigeonhole), the history fills with
+    repeats, and the drafter's accept rate climbs to ~1. This is the
+    accept-heavy regime a real model reaches on agentic re-fed context,
+    made reproducible on a randomly-initialized reduced backbone."""
+    fm.params = jax.tree_util.tree_map_with_path(
+        lambda path, l: l * 0.0
+        if any(getattr(k, "key", None) == "wo" for k in path) else l,
+        fm.params)
+    return fm
+
+
+def trace_workload(cfg, *, overlap: float, seed: int = 0):
+    """(prompt, budget) pairs lifted off the loadgen traces the serving
+    plane uses — high self-overlap agentic loops or the zero-overlap
+    adversarial variant. Budgets are pinned to MAX_NEW so both engines hold
+    the full co-batch for the whole drive (pure decode measurement)."""
+    kw = dict(prompt_len=PROMPT_LEN, vocab=cfg.vocab_size, max_new=MAX_NEW,
+              min_new=MAX_NEW, seed=seed)
+    reqs = agentic_token_trace("bench", 10.0, 100.0, overlap=overlap, **kw) \
+        if overlap > 0.0 else \
+        adversarial_token_trace("bench", 10.0, 100.0, **kw)
+    return [(np.asarray(r.payload, np.int32), r.max_new_tokens)
+            for r in reqs[:N_STREAMS]]
+
+
+def make_engine(fm, *, spec_k: int, **kw) -> DecodeEngine:
+    return DecodeEngine(fm, num_slots=NUM_SLOTS, prompt_len=PROMPT_LEN,
+                        max_new=MAX_NEW, chunk=CHUNK, paged=True,
+                        page_size=PAGE_SIZE, total_pages=TOTAL_PAGES,
+                        prompt_buckets=(PROMPT_LEN,), spec_k=spec_k, **kw)
+
+
+def warm(eng, cfg, seed: int = 123):
+    """Compile everything a drive can touch: the prefill bucket, the
+    chunked shared-prefix tail planes (motif prompts hit the prefix
+    registry), the plain decode ladder, and (spec engines) the speculative
+    ladder."""
+    rng = np.random.RandomState(seed)
+    eng.join("warm", rng.randint(0, cfg.vocab_size, PROMPT_LEN),
+             max_new_tokens=2, rid=-1)
+    eng.drain()
+    eng.warm_chunked()
+    eng.warm_decode_ladder()
+    if eng.spec_k:
+        eng.warm_speculative()
+
+
+def drive(eng: DecodeEngine, work, repeats: int) -> dict:
+    """Admit the whole co-batch (untimed — identical prefill work on both
+    engines), then time the drain. Greedy decoding is deterministic, so
+    repeat passes must reproduce the streams exactly; the fastest pass is
+    the steady-state number."""
+    outs, walls = None, []
+    for _ in range(repeats):
+        for i, (prompt, new) in enumerate(work):
+            eng.join(f"t{i}", prompt, max_new_tokens=new, rid=i)
+        t0 = time.perf_counter()
+        done = {}
+        while eng.active_count() or eng.pending_count():
+            for d in eng.step_chunk():
+                done[d.rid] = d.tokens
+        walls.append(time.perf_counter() - t0)
+        assert len(done) == len(work), (len(done), len(work))
+        if outs is None:
+            outs = done
+        else:
+            assert outs == done, "greedy drive not deterministic"
+    toks = sum(len(t) for t in outs.values())
+    wall = min(walls)
+    return {"streams": len(outs), "tokens_out": toks,
+            "tokens_per_s": round(toks / wall, 1),
+            "wall_s": round(wall, 4), "tokens": outs}
+
+
+def bench_leg(fm, cfg, work, repeats: int, **spec_kw) -> dict:
+    """Spec vs plain on one workload: tokens/s ratio, exact stream parity,
+    zero recompiles after warm, and the spec engine's acceptance stats."""
+    results, compiles, engines = {}, {}, {}
+    for name, k in (("plain", 0), ("spec", SPEC_K)):
+        eng = make_engine(fm, spec_k=k, **(spec_kw if k else {}))
+        warm(eng, cfg)
+        before = eng.compile_count()
+        results[name] = drive(eng, work, repeats)
+        compiles[name] = eng.compile_count() - before
+        engines[name] = eng
+    parity = results["plain"].pop("tokens") == results["spec"].pop("tokens")
+    ratio = results["spec"]["tokens_per_s"] / \
+        max(results["plain"]["tokens_per_s"], 1e-9)
+    return {
+        "plain": results["plain"],
+        "spec": results["spec"],
+        "speedup": round(ratio, 2),
+        "greedy_parity": bool(parity),
+        "recompiles_after_warm": compiles,
+        "speculation": speculation_stats(engines["spec"]),
+    }
+
+
+def run_all(out_path: str = None, smoke: bool = False):
+    global MAX_NEW, REPEATS
+    if smoke:
+        MAX_NEW, REPEATS = 192, 3
+    cfg = reduced(get_config("stablelm-1.6b"))
+
+    # the high-overlap leg pins speculation ON (spec_disable_below=1.0):
+    # it measures the speculative plane's throughput in the accept-heavy
+    # regime; the adaptive demotion machinery is the ADVERSARIAL leg's
+    # subject and runs there at stock settings
+    high = bench_leg(_copy_inclined(_fm(cfg)), cfg,
+                     trace_workload(cfg, overlap=0.85), REPEATS,
+                     spec_disable_below=1.0)
+    print(f"high-overlap: plain {high['plain']['tokens_per_s']} tok/s, "
+          f"spec {high['spec']['tokens_per_s']} tok/s "
+          f"(x{high['speedup']}), accept rate "
+          f"{high['speculation']['accept_rate']}, parity "
+          f"{high['greedy_parity']}, recompiles "
+          f"{high['recompiles_after_warm']}")
+    assert high["greedy_parity"], "speculation changed a token stream"
+    assert high["recompiles_after_warm"] == {"plain": 0, "spec": 0}
+    assert high["speedup"] > (1.0 if smoke else 1.5), high["speedup"]
+
+    adv = bench_leg(_fm(cfg), cfg, trace_workload(cfg, overlap=0.0, seed=7),
+                    REPEATS)
+    print(f"adversarial: plain {adv['plain']['tokens_per_s']} tok/s, "
+          f"spec {adv['spec']['tokens_per_s']} tok/s (x{adv['speedup']}), "
+          f"fallbacks {adv['speculation']['spec_fallbacks']}, parity "
+          f"{adv['greedy_parity']}")
+    assert adv["greedy_parity"], "adversarial leg changed a token stream"
+    assert adv["recompiles_after_warm"] == {"plain": 0, "spec": 0}
+    assert adv["speedup"] >= (0.5 if smoke else 0.9), adv["speedup"]
+
+    out = {
+        "config": cfg.name,
+        "spec_k": SPEC_K,
+        "chunk": CHUNK,
+        "page_size": PAGE_SIZE,
+        "prompt_len": PROMPT_LEN,
+        "max_new": MAX_NEW,
+        "n_streams": N_STREAMS,
+        "repeats": REPEATS,
+        "high_overlap": high,
+        "adversarial": adv,
+        "greedy_parity": bool(high["greedy_parity"]
+                              and adv["greedy_parity"]),
+        "spec_speedup_1p5x": bool(high["speedup"] >= 1.5),
+        "adversarial_within_10pct": bool(adv["speedup"] >= 0.9),
+    }
+    write_serving_section("spec", out, out_path)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: shorter streams, fewer repeats")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    run_all(out_path=args.out, smoke=args.smoke)

@@ -18,8 +18,13 @@ formation:
 Token-level plane (event-loop serving, ``core.serve_loop``): generative
 streams consume service in decode chunks, not whole requests, so the loop
 charges each participating task ``charge_tokens`` work units per unit of
-device time — a decode chunk charges ``chunk × active_slots(task)`` tokens,
-a prefill admission charges the true prompt length. Charges advance the
+device time — a decode chunk charges the tokens the task's streams actually
+COMMITTED that chunk (the engine's rid-keyed charge log: under speculative
+decoding a high-accept stream commits up to ``spec_k + 1`` tokens per scan
+step while a zero-accept co-batched stream commits one, and their tasks are
+billed accordingly; on engines without the log this degenerates to the old
+``chunk × active_slots(task)`` flat split), a prefill admission charges the
+true prompt length. Charges advance the
 task's virtual finish time by ``l(1) · tokens / w_i`` (the same per-token
 price arrival tags use), so weighted max-min sharing holds across the pooled
 and generative planes at token granularity: the loop dispatches whichever

@@ -232,6 +232,61 @@ their sha256 matches what was stamped at capture. A mismatch increments
 plus the mapping streams via requeue (snapshot), and the affected stream
 falls back to lossless re-prefill from host-side tokens — corrupted
 durable state can never surface as wrong tokens.
+
+**Speculative plane** (``spec_k > 0``, paged pool only): each chunk scan
+step commits UP TO ``spec_k + 1`` tokens per slot instead of exactly one,
+with exact greedy parity. The moving parts:
+
+  * *drafter* — prompt-lookup n-gram matching over the slot's OWN history
+    (prompt + generated tokens), held in a device-resident buffer that the
+    scan carry appends committed tokens to, so later steps in the same
+    chunk draft from tokens committed moments earlier. No draft model, no
+    host round-trip mid-scan. A slot with no bigram match (or a free slot)
+    proposes the out-of-vocab sentinel ``FILL = vocab_size``, which can
+    never match — that step degrades to exactly today's one-token step.
+  * *verify* — ONE batched forward (``lm.verify_step``, T = k + 1
+    positions) through the existing paged cache scores the pending token
+    plus all drafts; ``models.attention.self_attention_verify`` replicates
+    the sequential per-token quantize/stamp walk bit-exactly (same scale
+    selection a one-token step would make at each position) and stacks a
+    positionwise running-max so rollback can gather any commit point.
+  * *acceptance* — per-slot, inside the scan carry: the longest draft
+    prefix matching the backbone's own (argmax) output is committed plus
+    one corrected token (``m`` in [1, k+1]); a mixed co-batch never
+    serializes on its slowest stream. Greedy output is BIT-IDENTICAL to
+    the non-speculative engine (keys untouched); sampled mode commits
+    exact per-step conditionals but advances the PRNG stream faster —
+    documented approximate, not bit-reproducible against sequential.
+  * *rollback* — speculative KV writes past the reject point are undone by
+    resetting ``len`` and the drift trackers to the commit point's running
+    values (pages past true_len are decode-private — never freed); the
+    allocator provisions ``chunk * (k + 1)`` tokens of page headroom per
+    live stream (``_headroom_tokens``) so the in-flight window always has
+    pages.
+  * *adaptivity* — ``_spec_dispatch_now`` demotes to the plain decode fn
+    when the accept EMA drops below ``spec_disable_below`` tokens per
+    slot-step (``spec_fallbacks``) and re-probes after
+    ``spec_probe_every`` plain chunks. Probes are single-step (the
+    chunk-1 spec executable from the warmed ladder — about one extra
+    plain dispatch per probe instead of a verify-width chunk) and dry
+    probes back the interval off exponentially (capped at 16x), so a
+    zero-overlap adversarial trace pays a vanishing probe tax while a
+    workload turning self-similar is still re-detected.
+    ``warm_speculative`` precompiles the spec fn over the chunk ladder,
+    so mode flips and deadline clamps never recompile in steady state.
+    Jit keys: ("spec", slots, adapter capacity, chunk, k).
+  * *parity discipline* — the device page table every non-speculative
+    plane sees keeps the spec_k=0 width; the speculative headroom
+    columns ride separately (``_spec_cols``) and are concatenated back
+    in-graph only inside the spec executable. XLA specializes on input
+    shapes, so this is what keeps every plain-plane executable — and
+    therefore every committed int8 KV code — bit-identical to a
+    spec_k=0 engine's.
+  * *accounting* — ``draft_proposed`` / ``draft_accepted`` /
+    ``spec_dispatches`` / ``spec_commits`` count the plane;
+    ``take_decode_charges`` drains per-task COMMITTED token counts so
+    fair-share scheduling bills real throughput, and
+    ``spec_task_accept_rates`` exposes per-task accept-rate gauges.
 """
 from __future__ import annotations
 
@@ -335,7 +390,10 @@ class DecodeEngine:
                  spill_bytes: int = 0,
                  spill_arena: Optional[HostSpillArena] = None,
                  deadline_clamp: bool = True,
-                 chunked_prefill: bool = True):
+                 chunked_prefill: bool = True,
+                 spec_k: int = 0, spec_force_fill: bool = False,
+                 spec_disable_below: float = 1.25,
+                 spec_probe_every: int = 16):
         cfg = fm.cfg
         assert cfg.vocab_size > 0 and not cfg.is_representation, \
             "DecodeEngine serves generative decoder LMs (vocab head required)"
@@ -367,6 +425,16 @@ class DecodeEngine:
         self._keys = jax.random.split(jax.random.PRNGKey(sample_seed),
                                       self.num_slots)
         self.s_max = self.prompt_len + max_new + 1
+        self.spec_k = int(spec_k)
+        if self.spec_k > 0 and not paged:
+            raise ValueError("speculative decoding (spec_k > 0) requires "
+                             "paged=True: speculative KV rollback relies on "
+                             "decode-private pages past true_len")
+        # speculative in-flight window: the device length can run up to one
+        # chunk of (k+1)-token steps past a slot's nominal maximum before
+        # the host-side done check truncates, so the per-slot page table
+        # (and the arena sizing derived from it) must cover those targets
+        spec_room = self.chunk * (self.spec_k + 1) if self.spec_k > 0 else 0
         self.paged = paged
         if paged:
             assert kv_quant, "the paged arena is int8-only (kv_quant=True)"
@@ -374,15 +442,32 @@ class DecodeEngine:
                 "paged pools need attention-only stacks (recurrent state " \
                 "is per-slot dense)"
             self.page_size = page_size
-            self.pages_per_slot = -(-self.s_max // page_size)
+            self.pages_per_slot = -(-(self.s_max + spec_room) // page_size)
             if total_pages is None:        # dense-equivalent memory + trash
                 total_pages = 1 + self.num_slots * self.pages_per_slot
             assert total_pages >= 2, "need at least one usable page"
             self.total_pages = total_pages
-            self.pool = lm.init_cache(cfg, self.num_slots, self.s_max,
+            self.pool = lm.init_cache(cfg, self.num_slots,
+                                      self.s_max + spec_room,
                                       kv_quant=True, paged=True,
                                       page_size=page_size,
                                       num_pages=total_pages)
+            # bit-exact parity contract: the DEVICE page table every
+            # non-speculative plane sees keeps the spec_k=0 width. XLA
+            # specializes executables on input shapes, so a table widened
+            # by the speculative headroom would recompile the plain
+            # decode/prefill/tail planes into reduction orders that differ
+            # from a spec_k=0 engine's — float drift that occasionally
+            # flips an int8 quantization tie and, many dispatches later, a
+            # greedy argmax. The headroom columns ride separately in
+            # ``_spec_cols`` and only the speculative dispatch (its own
+            # executable regardless) concatenates them back in-graph.
+            self._plain_pages = -(-self.s_max // page_size)
+            for sub in self.pool:
+                if isinstance(sub, dict) and "page_table" in sub:
+                    sub["page_table"] = \
+                        sub["page_table"][..., :self._plain_pages]
+            self._spec_cols: list = []
             # host-side allocator state; the device page table is synced
             # from _ptab before any decode dispatch that follows a change
             self._free_pages = list(range(total_pages - 1, TRASH_PAGE, -1))
@@ -485,6 +570,36 @@ class DecodeEngine:
         self.deadline_clamp = bool(deadline_clamp)
         self._step_ema = 0.0
         self.deadline_clamps = 0     # chunks shortened by the clamp
+        # self-speculative decode plane (module docstring, speculation
+        # section): device-resident n-gram drafter + one batched verify
+        # forward per scan step; paged-only (rollback is a length/tracker
+        # reset over decode-private pages). spec_k itself parses above,
+        # before the arena sizing it feeds.
+        self.spec_force_fill = bool(spec_force_fill)
+        self.spec_disable_below = float(spec_disable_below)
+        self.spec_probe_every = max(1, int(spec_probe_every))
+        # history buffer bound: prompt + generated tokens never exceed
+        # s_max, plus one dispatch's worst-case in-flight growth (chunk
+        # scan steps x up to k+1 commits each)
+        self._spec_hist_len = self.s_max + self.chunk * (self.spec_k + 1)
+        self._spec_seg_key = None    # composition signature (spec metadata)
+        self._spec_seg_dev = None
+        self._spec_accept_ema = 0.0  # committed tokens per slot-step (EMA)
+        self._spec_cool = 0          # plain dispatches since the last probe
+        # re-probe cadence with exponential backoff: a dry probe (nothing
+        # accepted) doubles the interval up to 16x the base, so a
+        # sustained zero-overlap workload pays an asymptotically vanishing
+        # probe tax while a workload that turns self-similar again is
+        # still re-detected within a bounded number of dispatches
+        self._spec_probe_interval = self.spec_probe_every
+        self._spec_probe = False     # current spec dispatch is a probe
+        self._spec_task_stats: dict = {}   # task -> [proposed, accepted]
+        self._decode_charges: collections.Counter = collections.Counter()
+        self.draft_proposed = 0      # draft tokens sent to verification
+        self.draft_accepted = 0      # draft tokens committed
+        self.spec_dispatches = 0     # chunk dispatches through the spec fn
+        self.spec_commits = 0        # tokens committed by spec dispatches
+        self.spec_fallbacks = 0      # dispatches demoted to the plain fn
 
     # ---- occupancy ----
     def free_slots(self) -> list[int]:
@@ -533,6 +648,16 @@ class DecodeEngine:
     def _pages_for(self, tokens: int) -> int:
         return -(-max(tokens, 1) // self.page_size)
 
+    def _headroom_tokens(self) -> int:
+        """Decode headroom the allocator provisions per live stream per
+        chunk: ``chunk`` tokens, or ``chunk * (spec_k + 1)`` when the
+        speculative plane is configured — each scan step may commit up to
+        ``k + 1`` tokens, so page topping / admission gates budget the
+        worst case.  Static on ``spec_k`` (never the adaptive spec/plain
+        demotion state): dispatch mode can flip between chunks, and the
+        provisioning must hold either way."""
+        return self.chunk * (self.spec_k + 1 if self.spec_k > 0 else 1)
+
     def shared_page_count(self) -> int:
         """Physical pages currently mapped by more than one stream."""
         return int((self._page_refs > 1).sum()) if self.paged else 0
@@ -556,7 +681,8 @@ class DecodeEngine:
         need = 0
         for i, s in enumerate(self.slots):
             if s is not None and not s.done:
-                need += max(0, self._pages_for(self._lens[i] + self.chunk)
+                need += max(0, self._pages_for(self._lens[i]
+                                               + self._headroom_tokens())
                             - self._held[i])
         return need
 
@@ -571,7 +697,7 @@ class DecodeEngine:
         shared = len(self._match_prefix(adapter_id, prompt)) \
             if prompt is not None else 0
         return (self._pages_for(self._adm_s_max(plen)) - shared
-                + self._pages_for(self.chunk)
+                + self._pages_for(self._headroom_tokens())
                 + self._imminent_page_need())
 
     def can_admit(self, prompt_tokens: Optional[int] = None, *,
@@ -742,12 +868,19 @@ class DecodeEngine:
         so syncing never retraces."""
         if not self._ptab_dirty:
             return
+        self._spec_cols = []
         for sub in self.pool:
             if isinstance(sub, dict) and "page_table" in sub:
                 nper = sub["page_table"].shape[0]
+                full = np.broadcast_to(self._ptab[None],
+                                       (nper,) + self._ptab.shape)
                 sub["page_table"] = jnp.asarray(
-                    np.broadcast_to(self._ptab[None],
-                                    (nper,) + self._ptab.shape))
+                    full[..., :self._plain_pages])
+                # speculative headroom columns (empty at spec_k=0); the
+                # spec dispatch concatenates these behind the plain-width
+                # table in-graph — see the ctor's parity note
+                self._spec_cols.append(
+                    jnp.asarray(full[..., self._plain_pages:]))
         self._ptab_dirty = False
 
     # ---- host-RAM spill tier (paged layout) ----
@@ -1417,6 +1550,233 @@ class DecodeEngine:
             self._jit_decode[key] = jax.jit(run, donate_argnums=donate)
         return self._jit_decode[key]
 
+    def _spec_decode_fn(self, cap: int, chunk: int):
+        """Self-speculative chunk dispatch (module docstring, speculation
+        section): ``chunk`` draft -> verify -> accept steps under ONE jitted
+        ``lax.scan``.  Each step drafts up to ``spec_k`` tokens per slot
+        from that slot's own device-resident history (prompt-lookup bigram
+        match — no draft model), scores all ``k + 1`` window positions in a
+        single batched ``lm.verify_step`` forward through the paged cache,
+        accepts the longest draft prefix that matches what the backbone
+        itself emits, commits the accepted run plus one corrected token,
+        and rolls the speculative KV writes past the reject point back by
+        resetting ``len`` and the drift trackers (pages past true_len are
+        decode-private — never freed, simply overwritten next step).
+
+        Keyed ``("spec", num_slots, cap, chunk, k)`` in the same executable
+        cache as the plain decode fns, so restore/compile_count cover it
+        for free.  Per-slot acceptance lives INSIDE the scan carry: a mixed
+        co-batch never serializes on its slowest stream, and a zero-accept
+        slot degrades to exactly today's one-token step."""
+        k = self.spec_k
+        key = ("spec", self.num_slots, cap, chunk, k)
+        if key not in self._jit_decode:
+            cfg, bt = self.cfg, self.fm.seg_block_t
+            impl = self._impl(self.num_slots, cap)
+            donate = self._donate(1)
+            refresh_thr = self.scale_refresh * 127.0 \
+                if self.paged and self.scale_refresh > 0 else None
+            nslots = self.num_slots
+            T = k + 1
+            # draft sentinel: one past the vocab.  The embed gather clips it
+            # to a valid row (harmless garbage compute) and neither argmax
+            # nor sampling can ever RETURN it, so a filled position never
+            # matches and the step commits exactly one token — the plain
+            # decode step, bit for bit.
+            FILL = cfg.vocab_size
+            force_fill = self.spec_force_fill
+            sample = self._sample
+            H = self._spec_hist_len
+            plain_w = self._plain_pages
+            bidx = jnp.arange(nslots)
+
+            def run(params, pool, tokens, keys, hist, hlen, spec_cols,
+                    lora_stack, adapter_idx, perm, inv, blocks):
+                seg = None
+                if impl == "segmented":
+                    seg = {"perm": perm, "inv": inv, "block_adapter": blocks,
+                           "block_t": bt}
+                # widen the page tables with the speculative headroom
+                # columns (the pool carries the plain-width table so every
+                # non-spec plane compiles bit-identically to a spec_k=0
+                # engine); sliced back off before returning
+                widened, ci = [], 0
+                for sub in pool:
+                    if isinstance(sub, dict) and "page_table" in sub:
+                        sub = dict(sub)
+                        sub["page_table"] = jnp.concatenate(
+                            [sub["page_table"], spec_cols[ci]], axis=-1)
+                        ci += 1
+                    widened.append(sub)
+                pool = widened
+
+                def draft_fn(tok, hist, hlen):
+                    # prompt-lookup drafter: find the LATEST earlier
+                    # occurrence of the current (prev, tok) bigram in the
+                    # slot's history and propose the k tokens that followed
+                    # it.  Pure in-graph gather/compare — runs under the
+                    # scan so later steps draft from tokens committed
+                    # earlier in the SAME chunk.
+                    if force_fill:
+                        return jnp.full((nslots, k), FILL, jnp.int32), \
+                            jnp.zeros((nslots,), jnp.int32)
+                    prev = jnp.take_along_axis(
+                        hist, jnp.maximum(hlen - 2, 0)[:, None], axis=1)[:, 0]
+                    mt = (hist[:, :-1] == prev[:, None]) \
+                        & (hist[:, 1:] == tok[:, None]) \
+                        & (jnp.arange(H - 1)[None] + 1 < (hlen - 1)[:, None])
+                    has = jnp.any(mt, axis=1)
+                    jbest = (H - 2) - jnp.argmax(mt[:, ::-1], axis=1)
+                    src = jbest[:, None] + 2 + jnp.arange(k)[None]
+                    cand = jnp.take_along_axis(
+                        hist, jnp.minimum(src, H - 1), axis=1)
+                    valid = has[:, None] & (src < hlen[:, None])
+                    draft = jnp.where(valid, cand.astype(jnp.int32),
+                                      jnp.int32(FILL))
+                    return draft, jnp.sum(valid.astype(jnp.int32), axis=1)
+
+                def body(carry, _):
+                    pool, tok, keys, hist, hlen, fin = carry
+                    draft, nprop = draft_fn(tok, hist, hlen)
+                    seq = jnp.concatenate([tok[:, None], draft], axis=1)
+                    logits, pool = lm.verify_step(
+                        params, cfg, tokens=seq, cache=pool, lora=lora_stack,
+                        adapter_idx=adapter_idx, lora_impl=impl, lora_seg=seg)
+                    # per-position sampling: greedy consumes no PRNG (keys
+                    # pass through untouched — bit-exact vs the sequential
+                    # engine); sampled mode advances each row's key once per
+                    # WINDOW position, so its PRNG stream diverges from the
+                    # non-speculative engine's (documented approximate: each
+                    # committed token is still an exact conditional sample)
+                    ts = []
+                    for j in range(T):
+                        t_j, keys = sample(logits[:, j], keys)
+                        ts.append(t_j)
+                    g = jnp.stack(ts, axis=1)                      # (B, T)
+                    match = (draft == g[:, :k]).astype(jnp.int32)
+                    m = 1 + jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+                    nxt = jnp.take_along_axis(g, (m - 1)[:, None],
+                                              axis=1)[:, 0]
+                    # quarantine only on COMMITTED positions: the rejected
+                    # tail conditions on wrong tokens and its logits are
+                    # discarded anyway
+                    fin_pos = lm.finite_logits(logits)             # (B, T)
+                    fin = fin & jnp.all(
+                        fin_pos | (jnp.arange(T)[None] >= m[:, None]), axis=1)
+                    # rollback = tracker reset: len and the drift maxima
+                    # rewind to the commit point's running values (the
+                    # verify layer stacked a positionwise cummax for exactly
+                    # this gather); int8 codes/scales past the rolled-back
+                    # len sit above it where the next write overwrites them.
+                    # The cmax stacks are STRIPPED so the carry pytree keeps
+                    # the plain pool structure across scan steps.
+                    rolled = []
+                    for sub in pool:
+                        if isinstance(sub, dict) and "k_cmax" in sub:
+                            d = dict(sub)
+                            selm = jnp.broadcast_to(
+                                (m - 1)[None, :, None, None],
+                                sub["k_cmax"].shape[:2] + (1,)
+                                + sub["k_cmax"].shape[3:])
+                            d["k_max"] = jnp.take_along_axis(
+                                sub["k_cmax"], selm, axis=2)[:, :, 0]
+                            d["v_max"] = jnp.take_along_axis(
+                                sub["v_cmax"], selm, axis=2)[:, :, 0]
+                            d["len"] = sub["len"] - T + m[None, :]
+                            del d["k_cmax"], d["v_cmax"]
+                            rolled.append(d)
+                        else:
+                            rolled.append(sub)
+                    # committed tokens append to the device history so later
+                    # scan steps draft from them; uncommitted columns
+                    # scatter out of bounds and drop
+                    wpos = jnp.where(jnp.arange(T)[None] < m[:, None],
+                                     hlen[:, None] + jnp.arange(T)[None], H)
+                    hist = hist.at[bidx[:, None], wpos].set(g, mode="drop")
+                    hlen = hlen + m
+                    return (rolled, nxt, keys, hist, hlen, fin), (g, m, nprop)
+
+                fin0 = jnp.ones((nslots,), jnp.bool_)
+                (pool, tok, keys, hist, hlen, fin), (gs, ms, ps) = \
+                    jax.lax.scan(body, (pool, tokens, keys, hist, hlen, fin0),
+                                 None, length=chunk)
+                drift = jnp.zeros((nslots,), jnp.bool_)
+                if refresh_thr is not None:
+                    for sub in pool:
+                        if isinstance(sub, dict) and "k_max" in sub:
+                            o = (sub["k_max"] > refresh_thr * jnp.maximum(
+                                    sub["slot_k_scale"], 1e-8)) | \
+                                (sub["v_max"] > refresh_thr * jnp.maximum(
+                                    sub["slot_v_scale"], 1e-8))
+                            drift = drift | jnp.any(o, axis=(0, 2))
+                narrowed = []
+                for sub in pool:
+                    if isinstance(sub, dict) and "page_table" in sub:
+                        sub = dict(sub)
+                        sub["page_table"] = sub["page_table"][..., :plain_w]
+                        narrowed.append(sub)
+                    else:
+                        narrowed.append(sub)
+                pool = narrowed
+                # gs: (slots, chunk, T) committed-candidate tokens;
+                # ms/ps: (slots, chunk) commit / proposal counts per step
+                return (pool, tok, keys, gs.transpose(1, 0, 2), ms.T, ps.T,
+                        drift, fin)
+
+            self._jit_decode[key] = jax.jit(run, donate_argnums=donate)
+        return self._jit_decode[key]
+
+    def _spec_history(self):
+        """Host-side build of the per-slot (history, length) pair the
+        speculative drafter reads on device: prompt + generated tokens,
+        right-padded to ``_spec_hist_len``; position ``hlen - 1`` holds the
+        pending token (``_tokens``).  Rebuilt per dispatch — the device
+        copy mutates inside the scan and is deliberately discarded (host
+        state stays the single source of truth across preempt/spill)."""
+        H = self._spec_hist_len
+        hist = np.zeros((self.num_slots, H), np.int32)
+        hlen = np.zeros((self.num_slots,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            seq = np.concatenate([
+                np.asarray(s.prompt, np.int64).reshape(-1),
+                np.asarray(s.tokens, np.int64).reshape(-1),
+            ]).astype(np.int32)[-H:]
+            hist[i, :len(seq)] = seq
+            hlen[i] = len(seq)
+        return jnp.asarray(hist), jnp.asarray(hlen)
+
+    def _spec_dispatch_now(self) -> bool:
+        """Adaptive spec/plain demotion: keep speculating while the accept
+        EMA clears ``spec_disable_below`` committed tokens per slot-step;
+        below it, demote to the plain fn (counted in ``spec_fallbacks``)
+        and re-probe speculatively after ``spec_probe_every`` plain
+        dispatches so a workload that turns self-similar again is
+        re-detected.  Probes are cheap by construction: they clamp to a
+        ONE-step chunk (the chunk-1 spec executable is already in the
+        warmed ladder) so a dry probe costs about one extra plain
+        dispatch instead of a full verify-width chunk, and consecutive
+        dry probes back the re-probe interval off exponentially (capped
+        at 16x) so a sustained adversarial trace pays a vanishing probe
+        tax.  Both executables are warmed, so flipping modes never
+        recompiles."""
+        self._spec_probe = False
+        if self.spec_k <= 0 or not self.paged:
+            return False
+        if self._spec_accept_ema == 0.0 \
+                or self._spec_accept_ema >= self.spec_disable_below:
+            self._spec_cool = 0
+            self._spec_probe_interval = self.spec_probe_every
+            return True
+        self._spec_cool += 1
+        if self._spec_cool >= self._spec_probe_interval:
+            self._spec_cool = 0
+            self._spec_probe = True
+            return True
+        self.spec_fallbacks += 1
+        return False
+
     # ---- segment metadata (per composition, not per token) ----
     def _segments(self, cap: int):
         if self._impl(self.num_slots, cap) != "segmented":
@@ -1429,6 +1789,24 @@ class DecodeEngine:
                              jnp.asarray(blocks))
             self._seg_key = key
         return self._seg_dev
+
+    def _spec_segments(self, cap: int):
+        """Segment metadata for the speculative verify co-batch: same
+        composition as ``_segments`` but ``spec_k + 1`` tokens per slot row
+        (the verify window flattens row-major, matching ``segment_meta``'s
+        per-token repeat).  Memoized on the composition signature, so
+        steady-state dispatches never touch the host metadata path."""
+        if self._impl(self.num_slots, cap) != "segmented":
+            z = jnp.zeros((1,), jnp.int32)      # gather never reads these
+            return z, z, z
+        key = (self._slot_adapters.tobytes(), cap)
+        if key != self._spec_seg_key:
+            perm, inv, blocks = self.fm.segment_meta(
+                self._slot_adapters, cap, self.spec_k + 1)
+            self._spec_seg_dev = (jnp.asarray(perm), jnp.asarray(inv),
+                                  jnp.asarray(blocks))
+            self._spec_seg_key = key
+        return self._spec_seg_dev
 
     def _prefill_segments(self, adapter_slot: int, cap: int, plen: int):
         if self._impl(1, cap) != "segmented":
@@ -1500,7 +1878,7 @@ class DecodeEngine:
                 plen = self.bucket_for_prompt(min(max(len(prompt), 1),
                                                   self.prompt_len))
                 base = self._pages_for(self._adm_s_max(plen)) + \
-                    self._pages_for(self.chunk)
+                    self._pages_for(self._headroom_tokens())
                 raise ValueError(
                     f"prompt needs {base} pages (bucket {plen} + chunk "
                     f"headroom) beyond any shared prefix but the arena "
@@ -1887,8 +2265,11 @@ class DecodeEngine:
         self.preemptions += 1
 
     def _ensure_chunk_pages(self):
-        """Top every live slot up to ``len + chunk`` tokens of pages before
-        the chunk dispatches. When the free list runs dry, preempt the
+        """Top every live slot up to ``len + _headroom_tokens()`` tokens of
+        pages before the chunk dispatches (``chunk`` tokens, or
+        ``chunk * (k + 1)`` under speculation — speculative writes land
+        above ``len`` before acceptance rolls ``len`` back, so the pages
+        must exist up front). When the free list runs dry, preempt the
         youngest live streams (least work redone) until it doesn't; a single
         stream that cannot fit is a configuration error (pool smaller than
         one stream's chunk growth)."""
@@ -1899,7 +2280,8 @@ class DecodeEngine:
             for i in live:
                 if self.slots[i] is None:       # preempted by an earlier pass
                     continue
-                need = self._pages_for(self._lens[i] + self.chunk) \
+                need = self._pages_for(self._lens[i]
+                                       + self._headroom_tokens()) \
                     - self._held[i]
                 if need <= 0:
                     continue
@@ -1932,7 +2314,8 @@ class DecodeEngine:
                                           self.prompt_len))
         m = len(self._match_prefix(req.adapter_id, req.prompt))
         return (self._pages_for(self._adm_s_max(plen)) - m
-                + self._pages_for(self.chunk)) > self.total_pages - 1
+                + self._pages_for(self._headroom_tokens())) \
+            > self.total_pages - 1
 
     def _viable_pending(self) -> list[int]:
         """Pending indices that could fit the arena at its CURRENT sharing
@@ -1961,9 +2344,10 @@ class DecodeEngine:
         if entry is None:
             return None
         n = int(entry.meta["n_pages"])
-        if n + self._pages_for(self.chunk) > self.total_pages - 1:
+        hr = self._pages_for(self._headroom_tokens())
+        if n + hr > self.total_pages - 1:
             return None
-        return n + self._pages_for(self.chunk) + self._imminent_page_need()
+        return n + hr + self._imminent_page_need()
 
     def _next_admissible_pending(self) -> Optional[int]:
         """Index of the next deferred join the pool can take: the (viable)
@@ -2114,6 +2498,25 @@ class DecodeEngine:
         out, self.admitted_log = self.admitted_log, []
         return out
 
+    def take_decode_charges(self) -> dict:
+        """Drain the committed-decode-token log, keyed ``(task_id, rid)`` —
+        the serve loop charges fair-share decode budgets from HERE.  Every
+        dispatch logs the tokens each stream actually COMMITTED
+        (speculative: accepted + corrected; plain: the chunk length), so
+        under speculation a high-accept task is charged for its real
+        throughput instead of the old uniform ``chunk x active_slots``
+        split.  The rid in the key lets drain-synchronous callers skip
+        streams already priced at arrival."""
+        out = dict(self._decode_charges)
+        self._decode_charges = collections.Counter()
+        return out
+
+    def spec_task_accept_rates(self) -> dict:
+        """Per-task draft accept rate (accepted / proposed, cumulative) —
+        the per-task gauges ``serving.metrics`` exports."""
+        return {t: (a / p if p else 0.0)
+                for t, (p, a) in self._spec_task_stats.items()}
+
     def _raise_if_wedged(self):
         """Nothing live, nothing viable, stranded joins pending: no future
         engine event can admit them (new joins defer behind the pending
@@ -2177,6 +2580,30 @@ class DecodeEngine:
             self.pool, self._tokens, self._keys, _, _, _ = \
                 self._decode_fn(cap, c)(
                     self.fm.params, self.pool, self._tokens, self._keys,
+                    self.fm.adapters.stacked(),
+                    jnp.asarray(self._slot_adapters), perm, inv, blocks)
+
+    def warm_speculative(self):
+        """Precompile (and dispatch once) the speculative decode fn for
+        every ladder chunk length, so spec/plain mode flips and deadline
+        clamps never recompile in steady state.  Same idle-engine garbage
+        contract as ``warm_decode_ladder``: every free slot's history is
+        empty (hlen 0 -> drafter proposes nothing -> each step commits one
+        token into the trash page)."""
+        assert self.active_count() == 0, \
+            "warm_speculative must run on an idle engine"
+        if self.spec_k <= 0 or not self.paged:
+            return
+        self._sync_page_table()
+        cap = self.fm.adapters.capacity()
+        perm, inv, blocks = self._spec_segments(cap)
+        hist = jnp.zeros((self.num_slots, self._spec_hist_len), jnp.int32)
+        hlen = jnp.zeros((self.num_slots,), jnp.int32)
+        for c in self.chunk_ladder():
+            self.pool, self._tokens, self._keys, *_ = \
+                self._spec_decode_fn(cap, c)(
+                    self.fm.params, self.pool, self._tokens, self._keys,
+                    hist, hlen, self._spec_cols,
                     self.fm.adapters.stacked(),
                     jnp.asarray(self._slot_adapters), perm, inv, blocks)
 
@@ -2281,15 +2708,35 @@ class DecodeEngine:
                 self._sync_page_table()
             eff = self._effective_chunk(live, t0)
             cap = self.fm.adapters.capacity()
-            perm, inv, blocks = self._segments(cap)
+            use_spec = self._spec_dispatch_now()
+            if use_spec and self._spec_probe:
+                eff = 1     # probes are single-step (see _spec_dispatch_now)
             t_disp = time.perf_counter()
-            self.pool, self._tokens, self._keys, out, drift, fin = \
-                self._decode_fn(cap, eff)(
-                    self.fm.params, self.pool, self._tokens, self._keys,
-                    self.fm.adapters.stacked(),
-                    jnp.asarray(self._slot_adapters), perm, inv, blocks)
-            out = np.asarray(out)               # one host sync per chunk
-            fin = np.asarray(fin)               # rides the same sync
+            if use_spec:
+                perm, inv, blocks = self._spec_segments(cap)
+                hist, hlen = self._spec_history()
+                self.pool, self._tokens, self._keys, out_g, out_m, out_p, \
+                    drift, fin = self._spec_decode_fn(cap, eff)(
+                        self.fm.params, self.pool, self._tokens, self._keys,
+                        hist, hlen, self._spec_cols,
+                        self.fm.adapters.stacked(),
+                        jnp.asarray(self._slot_adapters), perm, inv, blocks)
+                out_g = np.asarray(out_g)       # (slots, eff, k+1): one sync
+                out_m = np.asarray(out_m)       # (slots, eff) commit counts
+                out_p = np.asarray(out_p)       # (slots, eff) proposals
+                fin = np.asarray(fin)
+            else:
+                perm, inv, blocks = self._segments(cap)
+                self.pool, self._tokens, self._keys, out, drift, fin = \
+                    self._decode_fn(cap, eff)(
+                        self.fm.params, self.pool, self._tokens, self._keys,
+                        self.fm.adapters.stacked(),
+                        jnp.asarray(self._slot_adapters), perm, inv, blocks)
+                out = np.asarray(out)           # one host sync per chunk
+                fin = np.asarray(fin)           # rides the same sync
+            # per-SCAN-STEP cost: the deadline clamp reasons in scan steps
+            # either way, and a speculative step's extra verify cost is
+            # exactly what the EMA must learn for the ladder to clamp right
             dt = (time.perf_counter() - t_disp) / eff
             self._step_ema = dt if self._step_ema == 0.0 \
                 else 0.5 * self._step_ema + 0.5 * dt
@@ -2297,14 +2744,31 @@ class DecodeEngine:
             if self.paged:
                 for i, s in enumerate(self.slots):
                     if s is not None:
-                        self._lens[i] += eff
+                        self._lens[i] += int(out_m[i].sum()) if use_spec \
+                            else eff
             now = time.perf_counter()
             for i in live:
                 s = self.slots[i]
-                take = min(eff, s.max_new - len(s.tokens))
-                for t in out[i, :take]:
-                    s.tokens.append(int(t))
-                    if s.eos_id is not None and int(t) == s.eos_id:
+                if use_spec:
+                    committed = [int(t) for st in range(eff)
+                                 for t in out_g[i, st, :out_m[i, st]]]
+                    prop = int(out_p[i].sum())
+                    self.spec_commits += len(committed)
+                    self.draft_proposed += prop
+                    self.draft_accepted += len(committed) - eff
+                    ts = self._spec_task_stats.setdefault(s.task_id, [0, 0])
+                    ts[0] += prop
+                    ts[1] += len(committed) - eff
+                else:
+                    committed = [int(t) for t in out[i]]
+                # fair-share accounting charges tokens actually COMMITTED
+                # for this stream (accepted + corrected), never a flat
+                # chunk x active_slots — see take_decode_charges()
+                self._decode_charges[(s.task_id, s.rid)] += len(committed)
+                take = min(len(committed), s.max_new - len(s.tokens))
+                for t in committed[:take]:
+                    s.tokens.append(t)
+                    if s.eos_id is not None and t == s.eos_id:
                         break
                 # quarantine check only for LIVE slots: a freed slot's
                 # garbage row may legitimately go non-finite (stale scales)
@@ -2318,6 +2782,20 @@ class DecodeEngine:
                         s.eos_id is not None and s.tokens[-1] == s.eos_id):
                     s.done = True
                     finished.append(i)
+            if use_spec:
+                self.spec_dispatches += 1
+                rate = sum(int(out_m[i].sum()) for i in live) \
+                    / max(eff * len(live), 1)
+                self._spec_accept_ema = rate if self._spec_accept_ema == 0.0 \
+                    else 0.5 * self._spec_accept_ema + 0.5 * rate
+                if self._spec_probe:
+                    # dry probe (1.0 committed/slot-step == zero accepts)
+                    # -> back off; any acceptance -> restore the base
+                    # cadence and let the EMA drive re-promotion
+                    self._spec_probe_interval = min(
+                        self._spec_probe_interval * 2,
+                        self.spec_probe_every * 16) if rate <= 1.0 \
+                        else self.spec_probe_every
             self._maybe_refresh_scales(np.asarray(drift))
         retired += [self.leave(i) for i in finished]
         self.last_chunk_s = time.perf_counter() - t0
@@ -2339,7 +2817,8 @@ class DecodeEngine:
                  "cancels", "spilled_pages", "restored_pages",
                  "digest_failures", "spill_resumes", "spill_prefix_hits",
                  "deadline_clamps", "tail_tokens_computed",
-                 "prefill_tokens_saved")
+                 "prefill_tokens_saved", "draft_proposed", "draft_accepted",
+                 "spec_dispatches", "spec_commits", "spec_fallbacks")
 
     def _config_dict(self) -> dict:
         """Constructor kwargs that rebuild an identical engine."""
@@ -2356,6 +2835,10 @@ class DecodeEngine:
             "hol_skip_cap": self.hol_skip_cap,
             "deadline_clamp": self.deadline_clamp,
             "chunked_prefill": self.chunked_prefill,
+            "spec_k": self.spec_k,
+            "spec_force_fill": self.spec_force_fill,
+            "spec_disable_below": self.spec_disable_below,
+            "spec_probe_every": self.spec_probe_every,
         }
 
     def snapshot(self) -> EngineSnapshot:

@@ -20,8 +20,12 @@ virtual tag —
     of decode headroom (``DecodeEngine.can_admit``), DEFERRING — the request
     stays queued at its tag, the loop serves other work — otherwise;
   * a **decode chunk** (tag = the most-behind active stream's virtual time):
-    every occupied slot advances ``chunk`` tokens; each participating task is
-    charged ``chunk × its active slots`` tokens.
+    every occupied slot advances up to ``chunk`` scan steps; each
+    participating task is charged the tokens its streams actually COMMITTED
+    (engine charge log — under speculative decoding a high-accept stream
+    commits several tokens per step, a zero-accept one exactly one, and
+    their tasks pay accordingly; on plain engines this degenerates to the
+    old ``chunk × active slots``).
 
 Charges advance task virtual time through ``SchedulerBase.charge_tokens``
 (BFQ: ``l(1)·tokens/weight``, the same per-token price arrival tags use), so
@@ -366,9 +370,12 @@ class ServeLoop:
         # is not charged for a chunk it no longer decodes (the engine sweeps
         # again inside step_chunk; the sweep is idempotent)
         eng._expire_deadlines(now)
-        # decode chunks charge chunk × active_slots tokens per task: that is
-        # the device work the chunk performs for the task, whether or not a
-        # stream hits its budget mid-chunk
+        # decode chunks charge the tokens each task's streams actually
+        # COMMITTED (engine's per-task charge log): under speculation a
+        # high-accept stream commits several tokens per scan step while a
+        # zero-accept co-batched stream commits one — a flat
+        # chunk × active_slots split would bill both the same. Engines
+        # without the log (stubs) fall back to exactly that flat split.
         active = collections.Counter(
             s.task_id for s in eng.slots if s is not None and not s.done)
         steps0 = eng.steps
@@ -387,13 +394,21 @@ class ServeLoop:
             self.page_samples.append(eng.page_occupancy())
             self.shared_samples.append(
                 eng.dedup_saved_pages() / max(eng.logical_page_count(), 1))
-        # charge the steps the chunk ACTUALLY advanced (== chunk normally; 0
-        # when a stalled/faulted engine made no progress — phantom charges
-        # would corrupt fair shares for the rest of the run)
-        advanced = eng.steps - steps0
-        if advanced:
-            sched.charge_tokens(
-                vfms, {t: n * advanced for t, n in active.items()}, now)
+        # charge the work the chunk ACTUALLY did (0 when a stalled/faulted
+        # engine made no progress — phantom charges would corrupt fair
+        # shares for the rest of the run)
+        committed = eng.take_decode_charges() \
+            if hasattr(eng, "take_decode_charges") else None
+        if committed:
+            agg: dict[str, float] = collections.Counter()
+            for (tid, _rid), n in committed.items():
+                agg[tid] += n
+            sched.charge_tokens(vfms, agg, now)
+        elif committed is None:
+            advanced = eng.steps - steps0
+            if advanced:
+                sched.charge_tokens(
+                    vfms, {t: n * advanced for t, n in active.items()}, now)
         # pending joins admitted inside step_chunk (and any terminally
         # rejected along the way) surface through the engine's logs
         self._charge_admissions(sched, vfms, now)
@@ -668,6 +683,13 @@ class ServeLoop:
         if eng is not None and eng.active_count() == 0:
             if getattr(eng, "deadline_clamp", False):
                 eng.warm_decode_ladder()
+            # the speculative plane flips between the spec and plain fns
+            # adaptively — warm BOTH ladders so accept-rate swings never
+            # recompile mid-measurement
+            if getattr(eng, "spec_k", 0) > 0:
+                if not getattr(eng, "deadline_clamp", False):
+                    eng.warm_decode_ladder()
+                eng.warm_speculative()
             if getattr(eng, "spill", None) is not None:
                 eng.warm_spill()
             # chunked shared-prefix admissions compile per TAIL bucket —
@@ -775,12 +797,23 @@ class ServeLoop:
             while pending and eng.free_slots():
                 self._admit_one(eng, vfms, pending.popleft())
             # loop-admitted streams sharing the pool WERE dispatched at
-            # deferred charge — their chunks still bill token-level
+            # deferred charge — their chunks still bill token-level, at
+            # the tokens each stream actually COMMITTED (the rid-keyed
+            # charge log filters OUR full-arrival-priced streams out)
             loop_active = collections.Counter(
                 s.task_id for s in eng.slots
                 if s is not None and not s.done and s.rid in self._inflight)
             retired = eng.step_chunk()
-            if loop_active:
+            committed = eng.take_decode_charges() \
+                if hasattr(eng, "take_decode_charges") else None
+            if committed is not None:
+                agg: dict[str, float] = collections.Counter()
+                for (tid, rid), n in committed.items():
+                    if rid in self._inflight:
+                        agg[tid] += n
+                if agg:
+                    sched.charge_tokens(vfms, agg, now)
+            elif loop_active:
                 sched.charge_tokens(
                     vfms, {t: n * eng.chunk for t, n in loop_active.items()},
                     now)

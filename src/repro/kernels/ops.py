@@ -129,6 +129,68 @@ def paged_decode_attention(q, k_pages, v_pages, k_scale, v_scale, page_table,
                                     window=window)
 
 
+def paged_verify_attention(q, k_pages, v_pages, k_scale, v_scale, page_table,
+                           base_len, *, window: Optional[int] = None,
+                           backend: Optional[str] = None,
+                           interpret: bool = False):
+    """Multi-position paged attention for the speculative verify window.
+
+    q: (B, T, H, hd) — the T = k+1 window positions' queries; window position
+    j sits at absolute position ``base_len + j`` and therefore attends
+    ``base_len + j + 1`` keys. All T positions' K/V must already be written
+    into the arena: codes at positions a query must not see are gathered,
+    dequantized and then MASKED out by the per-position length — exactly how
+    the single-token path treats a fresh page's garbage tail — so position j
+    reads bit-identically to a sequential decode step at length
+    ``base_len + j + 1``. Returns (B, T, H, hd).
+
+    The XLA path pays the per-request KV gather ONCE and shares it across
+    all T window positions — at serving context lengths the gather
+    dominates a decode step, so a verify window costs close to one step
+    instead of T (this is what buys the speculative plane its speedup; see
+    BENCH_serving.json#spec). Per-position masking reproduces the
+    single-token math: position j's score row masks keys at or past
+    ``base_len + j + 1`` with the same NEG_INF + softmax treatment the
+    decode reference uses, so only matmul batching (an invariance the
+    chunked-prefill plane already relies on) separates it from T unrolled
+    single-token calls. The Pallas backend falls back to T unrolled
+    single-token kernel calls — correct everywhere, fused later."""
+    T = q.shape[1]
+    b = _resolve(backend)
+    if b == "pallas":
+        outs = [paged_decode_attention(q[:, j], k_pages, v_pages, k_scale,
+                                       v_scale, page_table, base_len + j + 1,
+                                       window=window, backend=backend,
+                                       interpret=interpret)
+                for j in range(T)]
+        return jnp.stack(outs, axis=1)
+    B, MP = page_table.shape
+    _, ps, KV, hd = k_pages.shape
+    H = q.shape[2]
+    G = H // KV
+    S = MP * ps
+
+    def gathered(pages, scale):
+        g = pages[page_table].astype(jnp.float32)   # (B, MP, ps, KV, hd)
+        g = g * scale[page_table][:, :, None, :, None]
+        return g.transpose(0, 3, 1, 2, 4).reshape(B, KV, S, hd)
+
+    kf = gathered(k_pages, k_scale)
+    vf = gathered(v_pages, v_scale)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qf = q.reshape(B, T, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("btkgd,bksd->bkgts", qf, kf) * scale
+    lens = base_len[:, None] + 1 + jnp.arange(T)[None]        # (B, T)
+    pos = jnp.arange(S)
+    mask = pos[None, None] < lens[..., None]                  # (B, T, S)
+    if window is not None:
+        mask &= pos[None, None] >= (lens[..., None] - window)
+    s = jnp.where(mask[:, None, None], s, ref.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bksd->btkgd", p, vf)
+    return o.reshape(B, T, H, hd).astype(q.dtype)
+
+
 def gather_prefix_kv(k_pages, v_pages, k_scale, v_scale, page_table):
     """Dequantized prefix K/V gather, model layout (chunked prefill).
 

@@ -87,6 +87,24 @@ def paged_decode_attention_ref(q, k_pages, v_pages, k_scale, v_scale,
                                 window=window)
 
 
+def paged_verify_attention_ref(q, k_pages, v_pages, k_scale, v_scale,
+                               page_table, base_len, *,
+                               window: Optional[int] = None):
+    """Speculative verify-window oracle (kernel layout, head-major).
+
+    q: (B, T, H, hd); k_pages/v_pages: (num_pages, KV, ps, hd) int8;
+    k_scale/v_scale: (num_pages, KV); page_table: (B, max_pages) int32;
+    base_len: (B,) — window position j attends ``base_len + j + 1`` keys.
+    Returns (B, T, H, hd): T independent single-token paged decode reads at
+    successive lengths."""
+    T = q.shape[1]
+    outs = [paged_decode_attention_ref(q[:, j], k_pages, v_pages, k_scale,
+                                       v_scale, page_table, base_len + j + 1,
+                                       window=window)
+            for j in range(T)]
+    return jnp.stack(outs, axis=1)
+
+
 def gather_prefix_kv_ref(k_pages, v_pages, k_scale, v_scale, page_table):
     """Dequantized prefix K/V gather (kernel layout, head-major).
 

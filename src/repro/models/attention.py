@@ -318,3 +318,73 @@ def self_attention_decode(p, x, cache, cfg, shard, *, pos=None, pos3=None,
                              window=cfg.sliding_window)
     out = out_project(p, o[:, None], x.dtype)
     return out, {"k": k_cache, "v": v_cache, "len": idx + 1}
+
+
+def self_attention_verify(p, x, cache, cfg, shard, *, pos=None, pos3=None,
+                          lora=None, adapter_idx=None, lora_impl="gather",
+                          lora_seg=None):
+    """Speculative verify window: T = k+1 positions through the paged pool.
+
+    x: (B, T, d) — position 0 embeds the slot's last sampled token (what a
+    plain decode step would feed), positions 1..k the drafted continuation.
+    Only the paged int8 pool is supported (speculation is gated to
+    ``paged=True`` in the engine).
+
+    Every window position's K/V is written into the slot's decode-private
+    pages with EXACTLY the scale a sequential walk of T single-token steps
+    would pick: a position reuses the pre-window page scale iff it lands in
+    the page already holding token ``len - 1`` (only the window's first page
+    can predate the window — positions are strictly increasing), otherwise
+    it is the first write to a fresh page and quantizes with the slot's
+    running scale, which the sequential walk stamps at ``off == 0`` and
+    reuses for the rest of that page. Attention then reads each position j
+    against keys ``0..len+j`` via ``ops.paged_verify_attention`` —
+    bit-identical arithmetic to j+1 successive single-token steps.
+
+    The returned cache advances by the FULL window (``len += T``) and
+    carries per-position running-max stacks ``k_cmax``/``v_cmax``
+    (B, T, KV) so the engine's acceptance pass can roll ``len`` /
+    ``k_max`` / ``v_max`` back to each slot's commit point in-graph.
+    Rejected positions' codes and fresh-page scale stamps sit past the
+    rolled-back length, where the next dispatch's ``off == 0`` write
+    re-stamps and overwrites them — rollback is a length/tracker reset,
+    never a page free.
+    """
+    assert "page_table" in cache, "speculative verify requires the paged pool"
+    q, k, v = qkv_project(p, x, cfg, pos=pos, pos3=pos3, lora=lora,
+                          adapter_idx=adapter_idx, lora_impl=lora_impl,
+                          lora_seg=lora_seg)
+    B, T = x.shape[:2]
+    idx = cache["len"]                                    # (B,)
+    ps = cache["k"].shape[1]
+    pos_abs = idx[:, None] + jnp.arange(T)[None]          # (B, T)
+    page = jnp.take_along_axis(cache["page_table"], pos_abs // ps, axis=1)
+    off = pos_abs % ps
+    in_old = (pos_abs // ps) == ((idx - 1) // ps)[:, None]
+    ks = jnp.maximum(jnp.where(in_old[..., None], cache["k_scale"][page],
+                               cache["slot_k_scale"][:, None]), 1e-8)
+    vs = jnp.maximum(jnp.where(in_old[..., None], cache["v_scale"][page],
+                               cache["slot_v_scale"][:, None]), 1e-8)
+    kf = k.astype(jnp.float32)                            # (B, T, KV, hd)
+    vf = v.astype(jnp.float32)
+    kq = jnp.clip(jnp.round(kf / ks[..., None]), -127, 127).astype(jnp.int8)
+    vq = jnp.clip(jnp.round(vf / vs[..., None]), -127, 127).astype(jnp.int8)
+    pf, of = page.reshape(-1), off.reshape(-1)
+    k_pages = cache["k"].at[pf, of].set(kq.reshape((B * T,) + kq.shape[2:]))
+    v_pages = cache["v"].at[pf, of].set(vq.reshape((B * T,) + vq.shape[2:]))
+    # duplicate page indices across a row's positions carry identical scale
+    # values (same page => same in_old branch), so last-write-wins is exact
+    k_sc = cache["k_scale"].at[pf].set(ks.reshape(B * T, -1))
+    v_sc = cache["v_scale"].at[pf].set(vs.reshape(B * T, -1))
+    k_cmax = jnp.maximum(jax.lax.cummax(jnp.max(jnp.abs(kf), axis=-1), axis=1),
+                         cache["k_max"][:, None])
+    v_cmax = jnp.maximum(jax.lax.cummax(jnp.max(jnp.abs(vf), axis=-1), axis=1),
+                         cache["v_max"][:, None])
+    from repro.kernels import ops
+    o = ops.paged_verify_attention(q, k_pages, v_pages, k_sc, v_sc,
+                                   cache["page_table"], idx,
+                                   window=cfg.sliding_window)
+    out = out_project(p, o.astype(x.dtype), x.dtype)
+    return out, {"k": k_pages, "v": v_pages, "k_scale": k_sc, "v_scale": v_sc,
+                 "k_max": k_cmax[:, -1], "v_max": v_cmax[:, -1],
+                 "k_cmax": k_cmax, "v_cmax": v_cmax, "len": idx + T}

@@ -223,6 +223,18 @@ def sublayer_apply(p, x, cfg: ModelConfig, lay: SubLayer, shard, *,
                 lora=lora, adapter_idx=adapter_idx, lora_impl=lora_impl,
                 lora_seg=lora_seg)
             new_cache = dict(cache, **attn_cache)
+        elif mode == "verify":
+            # speculative verify window: T positions at absolute rope
+            # positions len..len+T-1, through the paged pool
+            if pos is None:
+                pos = cache["len"][:, None] + jnp.arange(x.shape[1])[None]
+            if pos3 is None and cfg.mrope_sections is not None:
+                pos3 = jnp.repeat(pos[..., None], 3, axis=-1)     # text: t=h=w
+            out, attn_cache = attn.self_attention_verify(
+                p["attn"], h, cache, cfg, shard, pos=pos, pos3=pos3,
+                lora=lora, adapter_idx=adapter_idx, lora_impl=lora_impl,
+                lora_seg=lora_seg)
+            new_cache = dict(cache, **attn_cache)
         else:
             out, (k, v) = attn.self_attention(
                 p["attn"], h, cfg, shard, causal=causal, pos=pos, pos3=pos3,

@@ -178,7 +178,7 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None, cache=None,
         x = embeds.astype(jnp.bfloat16)
     x = shard(x, ("batch", None, "embed"))
 
-    if pos is None and mode != "decode":
+    if pos is None and mode not in ("decode", "verify"):
         pos = jnp.arange(x.shape[1])[None]
 
     layout = blk.period_layout(cfg, cross=cfg.is_encoder_decoder)
@@ -331,6 +331,31 @@ def decode_step(params, cfg: ModelConfig, *, tokens=None, embeds=None, cache,
     logits = jnp.einsum("bd,dv->bv", x[:, 0].astype(jnp.float32),
                         params["head"].astype(jnp.float32))
     logits = shard(logits, ("batch", "vocab"))
+    return logits, cache
+
+
+def verify_step(params, cfg: ModelConfig, *, tokens, cache, shard=NO_SHARD,
+                lora=None, adapter_idx=None, lora_impl: str = "gather",
+                lora_seg=None):
+    """Speculative verify: score T = k+1 positions in ONE batched forward.
+
+    tokens: (B, T) int32 — column 0 is the slot's last sampled token (what a
+    plain ``decode_step`` would feed), columns 1..k the drafted continuation.
+    Returns (logits (B, T, V), cache') where ``logits[:, j]`` equals the
+    logits a sequential ``decode_step`` walk would produce after feeding
+    ``tokens[:, :j+1]`` — the same embed gather, the same per-position paged
+    attention arithmetic (``attention.self_attention_verify``), the same f32
+    head contraction, so greedy acceptance against ``argmax(logits)`` is
+    bit-exact. The cache advances by the full window; the caller rolls each
+    slot back to its commit point via the ``k_cmax``/``v_cmax``/``len``
+    contract."""
+    x = embed(params["embed"].astype(jnp.bfloat16), tokens)
+    x, cache, _ = forward(params, cfg, embeds=x, cache=cache, mode="verify",
+                          shard=shard, lora=lora, adapter_idx=adapter_idx,
+                          lora_impl=lora_impl, lora_seg=lora_seg)
+    logits = jnp.einsum("btd,dv->btv", x.astype(jnp.float32),
+                        params["head"].astype(jnp.float32))
+    logits = shard(logits, ("batch", None, "vocab"))
     return logits, cache
 
 

@@ -125,6 +125,71 @@ def shared_prefix_token_trace(task_id: str, rps: float, horizon: float, *,
     return out
 
 
+def agentic_token_trace(task_id: str, rps: float, horizon: float, *,
+                        prompt_len: int, vocab: int, overlap: float = 0.7,
+                        motif_len: int = 8, n_motifs: int = 4,
+                        max_new: int = 16, min_new: int | None = None,
+                        seed: int = 0, slo_s: float | None = None,
+                        start: float = 0.0) -> list[Request]:
+    """Agentic tool-call-loop trace: the workload shape self-speculative
+    decoding feeds on. An agent loop re-feeds its own context every round —
+    tool-call scaffolding, echoed tool output, restated plans — so a large
+    fraction of each prompt RECURS within itself and the stream's n-gram
+    self-overlap is high (the prompt-lookup drafter finds matches, and a
+    model continuing such a context keeps emitting spans it already
+    emitted).
+
+    Each prompt interleaves segments drawn from a small per-trace motif
+    pool (the recurring scaffolding) with fresh random segments; a segment
+    is a motif with probability ``overlap``, so ``overlap`` IS the tunable
+    self-overlap fraction. ``overlap=0.0`` degenerates to fully-random
+    prompts — the low-overlap ADVERSARIAL variant (see
+    ``adversarial_token_trace``) where drafts never match and a speculative
+    engine must fall back to plain decoding. ``max_new_tokens`` is uniform
+    in [min_new or 1, max_new] like ``token_trace``."""
+    assert 0.0 <= overlap <= 1.0
+    rng = np.random.RandomState(seed)
+    motifs = [rng.randint(0, vocab, motif_len).astype("int32")
+              for _ in range(max(1, n_motifs))]
+    lo_new = max(1, min_new) if min_new is not None else 1
+    t, out = start, []
+    while True:
+        t += rng.exponential(1.0 / rps)
+        if t >= start + horizon:
+            break
+        plen = int(rng.randint(max(motif_len, prompt_len // 2),
+                               prompt_len + 1))
+        parts, n = [], 0
+        while n < plen:
+            seg = motifs[rng.randint(len(motifs))] if rng.rand() < overlap \
+                else rng.randint(0, vocab, motif_len).astype("int32")
+            parts.append(seg)
+            n += len(seg)
+        prompt = np.concatenate(parts)[:plen].astype("int32")
+        new = int(rng.randint(lo_new, max_new + 1))
+        out.append(Request(
+            task_id, t, payload=prompt, tokens=float(plen + new),
+            max_new_tokens=new, slo=SLO(slo_s)))
+    return out
+
+
+def adversarial_token_trace(task_id: str, rps: float, horizon: float, *,
+                            prompt_len: int, vocab: int, max_new: int = 16,
+                            min_new: int | None = None, seed: int = 0,
+                            slo_s: float | None = None,
+                            start: float = 0.0) -> list[Request]:
+    """Zero-self-overlap adversarial trace for the speculative plane:
+    ``agentic_token_trace`` at ``overlap=0.0`` — fully random prompts with
+    no recurring structure, so every draft window misses and a speculative
+    engine's adaptive demotion is what stands between it and paying the
+    verify overhead for nothing. The bench's regression bound (speculation
+    on vs off on THIS trace) is the cost of that machinery."""
+    return agentic_token_trace(
+        task_id, rps, horizon, prompt_len=prompt_len, vocab=vocab,
+        overlap=0.0, max_new=max_new, min_new=min_new, seed=seed,
+        slo_s=slo_s, start=start)
+
+
 def feature_trace(task_id: str, rps: float, horizon: float, *, input_len: int,
                   d_model: int, seed: int = 0, slo_s: float | None = None,
                   start: float = 0.0) -> list[Request]:

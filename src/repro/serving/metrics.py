@@ -23,7 +23,35 @@ def latency_stats(requests) -> dict:
     }
 
 
-def decode_stats(requests) -> dict:
+def speculation_stats(engine) -> dict:
+    """Speculative-decoding gauges of a ``DecodeEngine``: draft volume,
+    accept rate, committed tokens per dispatch (the multi-token-step payoff)
+    and the adaptive plane's demotion count, plus cumulative per-task accept
+    rates — the signal for spotting a co-batched task whose output never
+    matches its own history (it decodes fine, it just never speculates
+    usefully)."""
+    proposed = int(getattr(engine, "draft_proposed", 0))
+    accepted = int(getattr(engine, "draft_accepted", 0))
+    disp = int(getattr(engine, "spec_dispatches", 0))
+    out = {
+        "spec_k": int(getattr(engine, "spec_k", 0)),
+        "draft_proposed": proposed,
+        "draft_accepted": accepted,
+        "accept_rate": round(accepted / proposed, 4) if proposed else 0.0,
+        "spec_dispatches": disp,
+        "spec_fallbacks": int(getattr(engine, "spec_fallbacks", 0)),
+        "tokens_per_dispatch": round(
+            int(getattr(engine, "spec_commits", 0)) / disp, 3)
+        if disp else 0.0,
+    }
+    rates = getattr(engine, "spec_task_accept_rates", None)
+    if callable(rates):
+        out["task_accept_rates"] = {t: round(v, 4)
+                                    for t, v in sorted(rates().items())}
+    return out
+
+
+def decode_stats(requests, *, engine=None) -> dict:
     """Token-level serving metrics for generative (prefill+decode) requests:
     TTFT (arrival -> first generated token), TPOT (per-token decode interval
     after the first token), and aggregate generated-token throughput.
@@ -32,12 +60,18 @@ def decode_stats(requests) -> dict:
     TTFT and inflate throughput; failed terminations are counted separately
     (``n_failed``) and goodput (tokens of requests that finished ok WITHIN
     their deadline, per second) reports what the SLO-carrying client actually
-    received."""
+    received. ``engine`` (a speculative ``DecodeEngine``) adds the
+    ``speculation`` section (``speculation_stats``)."""
     done = [r for r in requests
             if r.finish_time is not None and r.max_new_tokens > 0]
     ok = [r for r in done if getattr(r, "status", "ok") == "ok"]
+    spec = speculation_stats(engine) \
+        if engine is not None and getattr(engine, "spec_k", 0) > 0 else None
     if not ok:
-        return {"n": 0, "n_failed": len(done)}
+        out = {"n": 0, "n_failed": len(done)}
+        if spec is not None:
+            out["speculation"] = spec
+        return out
     ttft = [r.first_token_time - r.arrival for r in ok
             if r.first_token_time is not None]
     tpot = []
@@ -52,7 +86,7 @@ def decode_stats(requests) -> dict:
             tpot.append((r.finish_time - r.first_token_time) / (n - 1))
     span = (max(r.finish_time for r in ok)
             - min(r.arrival for r in ok)) or 1e-9
-    return {
+    out = {
         "n": len(ok),
         "n_failed": len(done) - len(ok),
         "tokens_out": total_tokens,
@@ -63,6 +97,9 @@ def decode_stats(requests) -> dict:
         "tpot_p50_ms": 1e3 * percentile(tpot, 50),
         "tpot_p99_ms": 1e3 * percentile(tpot, 99),
     }
+    if spec is not None:
+        out["speculation"] = spec
+    return out
 
 
 def page_gauges(engine) -> dict:
@@ -132,6 +169,10 @@ def failure_counters(requests=(), *, loop=None, engine=None,
         out["digest_failures"] = int(getattr(engine, "digest_failures", 0))
         out["spill_resumes"] = int(getattr(engine, "spill_resumes", 0))
         out["deadline_clamps"] = int(getattr(engine, "deadline_clamps", 0))
+        # speculative plane: dispatches demoted to the plain decode fn by
+        # the accept-rate EMA (speculation disabled, not a fault per se —
+        # but a run that is ALL fallbacks is a misconfigured spec_k)
+        out["spec_fallbacks"] = int(getattr(engine, "spec_fallbacks", 0))
     if executor is not None:
         out["head_failures"] = int(
             sum(getattr(executor, "head_failures", {}).values()))
@@ -140,7 +181,7 @@ def failure_counters(requests=(), *, loop=None, engine=None,
 
 
 def mixed_stats(requests, page_samples=None, shared_samples=None,
-                failures=None, ttft_split=None) -> dict:
+                failures=None, ttft_split=None, engine=None) -> dict:
     """Split per-plane report for mixed pooled + generative serving (the
     event-loop plane): request-level latency for the pooled side, token-level
     TTFT/TPOT/throughput for the generative side. ``page_samples`` (the
@@ -157,7 +198,8 @@ def mixed_stats(requests, page_samples=None, shared_samples=None,
     buying sharer joins on this workload."""
     pooled = [r for r in requests if r.max_new_tokens <= 0]
     gen = [r for r in requests if r.max_new_tokens > 0]
-    out = {"pooled": latency_stats(pooled), "decode": decode_stats(gen)}
+    out = {"pooled": latency_stats(pooled),
+           "decode": decode_stats(gen, engine=engine)}
     if failures:
         out["failures"] = failures
     if ttft_split and (ttft_split.get("hit") or ttft_split.get("miss")):

@@ -385,3 +385,80 @@ def test_admission_charges_tail_tokens_not_full_prompt():
     assert sched.task_vtime("A") == pytest.approx(l1 * 16.0)     # tail only
     assert sched.task_vtime("B") == pytest.approx(l1 * 112.0)    # full miss
     assert loop._prefix_hit_rids == {1}                          # hit split
+
+
+def test_decode_charges_committed_tokens_not_chunk_times_slots():
+    """Speculative fairness regression: a decode chunk charges each task the
+    tokens its streams actually COMMITTED, not chunk x active_slots. Under
+    self-speculation a high-accept stream commits several tokens per scan
+    step while a zero-accept co-batched stream commits one; the flat split
+    would bill both tasks identically, overcharging the slow stream and
+    undercharging the fast one. Engines without a charge log (stubs, older
+    engines) must still degenerate to the flat split."""
+    import types
+
+    from repro.core.serve_loop import ServeLoop
+
+    def make_loop(eng):
+        loop = ServeLoop.__new__(ServeLoop)
+        loop._flush = lambda: None
+        loop._engine = lambda create=False: eng
+        loop._inflight = {1: object(), 2: object()}
+        loop._prefix_hit_rids = set()
+        loop._handle_rejected = lambda *a, **k: None
+        loop.failures = {}
+        loop.page_samples, loop.shared_samples = [], []
+        return loop
+
+    def slot(tid):
+        return types.SimpleNamespace(task_id=tid, done=False)
+
+    class SpecEngine:
+        """Two live slots; over one chunk of 4 scan steps task A's stream
+        accepted ~2 drafts/step (12 committed) while task B's accepted
+        none (4 committed)."""
+        paged = False
+        steps = 0
+        slots = [slot("A"), slot("B")]
+
+        def _expire_deadlines(self, now):
+            pass
+
+        def step_chunk(self):
+            self.steps += 4
+            return []
+
+        def take_decode_charges(self):
+            return {("A", 1): 12, ("B", 2): 4}
+
+        def take_admitted(self):
+            return []
+
+    sched, vfms = make()
+    l1 = sched.profile.l(1)
+    ServeLoop._tick_decode(make_loop(SpecEngine()), sched, vfms, 0.0)
+    assert sched.task_vtime("A") == pytest.approx(l1 * 12.0)
+    assert sched.task_vtime("B") == pytest.approx(l1 * 4.0)
+    assert sched.task_vtime("A") > sched.task_vtime("B")   # NOT the flat split
+
+    class LegacyEngine:
+        """Same shape, but no charge log at all (pre-speculation engine)."""
+        paged = False
+        steps = 0
+        slots = [slot("A"), slot("B")]
+
+        def _expire_deadlines(self, now):
+            pass
+
+        def step_chunk(self):
+            self.steps += 4
+            return []
+
+        def take_admitted(self):
+            return []
+
+    sched2, vfms2 = make()
+    ServeLoop._tick_decode(make_loop(LegacyEngine()), sched2, vfms2, 0.0)
+    # fallback: flat chunk x active_slots split, equal for both tasks
+    assert sched2.task_vtime("A") == pytest.approx(l1 * 4.0)
+    assert sched2.task_vtime("B") == pytest.approx(l1 * 4.0)

@@ -194,12 +194,26 @@ def _check_page_invariants(eng):
         if slot is not None and not slot.done:
             need = -(-max(int(eng._lens[s]), 1) // eng.page_size)
             assert eng._held[s] >= need
+    # speculative-rollback contract: after every dispatch the device-side
+    # slot lengths equal the host allocator's view for LIVE streams — a
+    # speculative KV write surviving past its reject point would leave the
+    # device length ahead of host ``_lens``
+    for sub in eng.pool:
+        if isinstance(sub, dict) and "page_table" in sub:
+            dev = np.asarray(sub["len"])
+            for s in range(eng.num_slots):
+                slot = eng.slots[s]
+                if slot is not None and not slot.done:
+                    assert (dev[:, s] == int(eng._lens[s])).all(), \
+                        f"slot {s}: device len {dev[:, s]} != host " \
+                        f"{int(eng._lens[s])}"
 
 
 @settings(max_examples=8, deadline=None)
 @given(ops=st.lists(st.tuples(st.integers(0, 8), st.integers(0, 7)),
-                    min_size=4, max_size=18))
-def test_paged_refcounts_never_leak_or_double_free(ops):
+                    min_size=4, max_size=18),
+       spec=st.booleans())
+def test_paged_refcounts_never_leak_or_double_free(ops, spec):
     """Randomized join/decode/preempt/retire sequences over shared-prefix
     prompts (joins take the CHUNKED tail-admission path whenever the prefix
     is live or spilled), interleaved with the FAULT plane (client cancel by
@@ -220,9 +234,13 @@ def test_paged_refcounts_never_leak_or_double_free(ops):
     from repro.core.decode_engine import DecodeEngine
     fm = _paged_fm()
     cfg = fm.cfg
+    # spec=True runs the identical churn through the SPECULATIVE decode
+    # plane (multi-token steps, in-scan rollback) — every allocator,
+    # sharing, durability and rollback invariant must hold there too
     eng = DecodeEngine(fm, num_slots=4, prompt_len=16, max_new=6, chunk=2,
-                       paged=True, page_size=4, total_pages=17,
-                       prompt_buckets=(4, 16), spill_bytes=32 << 20)
+                       paged=True, page_size=4, total_pages=21,
+                       prompt_buckets=(4, 16), spill_bytes=32 << 20,
+                       spec_k=2 if spec else 0, spec_disable_below=1.0)
     rng = np.random.RandomState(0)
     prefixes = [rng.randint(0, cfg.vocab_size, 8).astype(np.int32)
                 for _ in range(2)]
