@@ -1,0 +1,202 @@
+"""Per-sublayer cache-manager plane: serving-state plans + state-slot pool.
+
+The decode engine used to treat its cache as "one paged attention arena",
+hard-gating every serving plane (var-len bucketed prefill, paged admission,
+prefix sharing, speculation, spill, snapshot) to attention-only stacks. This
+module makes the cache contract per-sublayer instead:
+
+  * ``CachePlan.for_config`` walks the period layout and gives every
+    sublayer a ``SublayerPlan`` — does its serving state live in the shared
+    page arena (attention KV: grows with decoded tokens, int8, pageable) or
+    in fixed-size per-slot state (recurrent conv/SSM/LSTM state and
+    encoder-output cross K/V: written once at admission or advanced in
+    place, no growth) — plus aggregate CAPABILITY flags the engine
+    negotiates against instead of asserting:
+
+      - ``prefix_sharing_ok`` / ``chunked_prefill_ok``: shared pages capture
+        only attention KV. A recurrent sublayer's state at the shared-prefix
+        boundary is stream-private and never mapped, so a sharer that skipped
+        the prefix compute would decode from the wrong state — sharing stays
+        attention-only and the engine demotes it cleanly on hybrid stacks.
+      - ``speculative_ok``: draft rollback is a pure length/tracker reset on
+        paged attention state; recurrent state advanced through rejected
+        draft positions cannot rewind, and the verify forward has no
+        encoder-decoder mode — speculation demotes to plain decode.
+      - ``spill_resume_ok``: the stream spill captures pages + quantization
+        trackers only. Stacks with per-slot dense state fall back to the
+        fold-and-re-prefill preemption path, which recomputes recurrent
+        state exactly.
+
+  * ``StateSlotPool`` is the allocator for the fixed-size side: one state
+    slot per live stream, allocated at admission and freed on every exit
+    path (retire / preempt / cancel / quarantine), with occupancy gauges
+    (in-use, peak, deferrals on slot pressure) mirroring the page gauges so
+    hybrid occupancy is observable like page occupancy. The tensors
+    themselves stay in the engine's pool (the batch axis IS the slot pool);
+    this object owns lifecycle + accounting, which is what the admission
+    gate and the property-test invariants consume.
+
+  * ``capture_dense_state`` / ``restore_dense_state`` extend the snapshot /
+    restore plane to the fixed-size side: recurrent subs capture every leaf,
+    paged cross-attention subs capture their ``ck``/``cv`` sidecars, pure
+    page-arena subs contribute nothing new (their per-slot trackers already
+    ride ``EngineSnapshot.slot_state``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ATTN, MAMBA, MLSTM, SLSTM, ModelConfig
+
+RECURRENT_KINDS = (MAMBA, MLSTM, SLSTM)
+
+
+@dataclasses.dataclass(frozen=True)
+class SublayerPlan:
+    """Serving-state declaration for one sublayer of the period layout."""
+    kind: str              # ATTN / MAMBA / MLSTM / SLSTM
+    paged: bool            # state lives in the shared int8 page arena
+    grows: bool            # state grows with decoded tokens (attention KV)
+    has_cross: bool        # per-slot encoder-output K/V rides beside it
+
+    @property
+    def fixed_state(self) -> bool:
+        """True when (part of) this sublayer's state is fixed-size per-slot
+        dense state — recurrent state, or cross-attention sidecars."""
+        return self.kind in RECURRENT_KINDS or self.has_cross
+
+
+@dataclasses.dataclass(frozen=True)
+class CachePlan:
+    """The whole stack's cache contract + negotiated capability flags."""
+    sublayers: tuple[SublayerPlan, ...]
+    paged: bool                 # a page arena exists (>= 1 paged sublayer)
+    has_attention: bool
+    has_recurrent: bool
+    has_encoder: bool
+    prefix_sharing_ok: bool
+    chunked_prefill_ok: bool
+    speculative_ok: bool
+    spill_resume_ok: bool
+
+    @property
+    def needs_state_slots(self) -> bool:
+        return any(s.fixed_state for s in self.sublayers)
+
+    @classmethod
+    def for_config(cls, cfg: ModelConfig, paged: bool) -> "CachePlan":
+        from repro.models import blocks as blk
+        layout = blk.period_layout(cfg, cross=cfg.is_encoder_decoder)
+        has_attn = any(lay.kind == ATTN for lay in layout)
+        has_rec = any(lay.kind in RECURRENT_KINDS for lay in layout)
+        has_enc = cfg.is_encoder_decoder
+        # a page arena only makes sense with attention KV to page; a pure
+        # recurrent stack's whole serving state is fixed-size state slots
+        paged = bool(paged and has_attn)
+        subs = tuple(SublayerPlan(
+            kind=lay.kind,
+            paged=paged and lay.kind == ATTN,
+            grows=lay.kind == ATTN,
+            has_cross=lay.has_cross) for lay in layout)
+        attn_only = not has_rec and not has_enc
+        return cls(
+            sublayers=subs, paged=paged, has_attention=has_attn,
+            has_recurrent=has_rec, has_encoder=has_enc,
+            prefix_sharing_ok=paged and attn_only,
+            chunked_prefill_ok=paged and attn_only,
+            speculative_ok=paged and attn_only,
+            spill_resume_ok=paged and attn_only)
+
+
+class StateSlotPool:
+    """Lifecycle + gauges for the fixed-size per-slot serving state.
+
+    One state slot per live stream, 1:1 with the engine's decode slots (the
+    state tensors' batch axis). ``alloc`` is strict — double allocation is
+    an engine lifecycle bug, exactly what the property tests churn for —
+    and every exit path must ``free``. ``note_deferral`` counts admissions
+    deferred on state-slot pressure (the hybrid analogue of page-pressure
+    deferrals)."""
+
+    def __init__(self, num_slots: int):
+        self.num_slots = num_slots
+        self._in_use = np.zeros((num_slots,), bool)
+        self.peak_in_use = 0
+        self.slot_deferrals = 0
+        self.allocs = 0
+        self.frees = 0
+
+    def alloc(self, slot: int):
+        assert not self._in_use[slot], f"state slot {slot} double-allocated"
+        self._in_use[slot] = True
+        self.allocs += 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use_count())
+
+    def free(self, slot: int):
+        assert self._in_use[slot], f"state slot {slot} double-freed"
+        self._in_use[slot] = False
+        self.frees += 1
+
+    def note_deferral(self):
+        self.slot_deferrals += 1
+
+    def in_use(self, slot: int) -> bool:
+        return bool(self._in_use[slot])
+
+    def in_use_count(self) -> int:
+        return int(self._in_use.sum())
+
+    def available(self) -> int:
+        return self.num_slots - self.in_use_count()
+
+    def slots_in_use(self) -> set[int]:
+        return {int(i) for i in np.nonzero(self._in_use)[0]}
+
+    def gauges(self) -> dict:
+        return {
+            "state_slots_total": self.num_slots,
+            "state_slots_in_use": self.in_use_count(),
+            "state_slots_peak": self.peak_in_use,
+            "state_slot_deferrals": self.slot_deferrals,
+        }
+
+
+def dense_state_keys(sub) -> list[str]:
+    """Per-slot dense state keys of one pool sub: everything for recurrent
+    subs, the ``ck``/``cv`` sidecars for (paged) cross-attention subs,
+    nothing for pure page-arena subs (their per-slot quantization trackers
+    are captured separately) or dense attention subs."""
+    if not isinstance(sub, dict):
+        return []
+    if "page_table" in sub or "k" in sub:
+        return [k for k in ("ck", "cv") if k in sub]
+    return sorted(sub)
+
+
+def capture_dense_state(pool) -> list[Optional[dict]]:
+    """Host (D2H) copies of the fixed-size per-slot state, one entry per
+    pool sub (None when the sub has none) — the snapshot-plane counterpart
+    of the used-page capture."""
+    out = []
+    for sub in pool:
+        keys = dense_state_keys(sub)
+        out.append({k: np.asarray(jax.device_get(sub[k])) for k in keys}
+                   if keys else None)
+    return out
+
+
+def restore_dense_state(pool, state: Optional[list]) -> list:
+    """Upload a ``capture_dense_state`` payload back into a fresh pool."""
+    import jax.numpy as jnp
+    if state is None:
+        return pool
+    new = []
+    for sub, st in zip(pool, state):
+        if st:
+            sub = dict(sub, **{k: jnp.asarray(v) for k, v in st.items()})
+        new.append(sub)
+    return new

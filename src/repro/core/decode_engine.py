@@ -23,6 +23,45 @@ per-step cost of multi-task isolation must be ~zero. The engine owns:
         shapes) and their garbage writes land there, never in a live
         stream's pages.
 
+    **Cache-manager plane (``core.cache_manager``) — the cache contract is
+    per-SUBLAYER, not per-engine.** ``CachePlan.for_config`` walks the
+    stack's period layout and declares, for every sublayer, where its
+    serving state lives:
+
+      - *attention*: growing K/V — the paged int8 arena (or the dense int8
+        region) described above;
+      - *recurrent* (mamba conv+SSM, mLSTM/sLSTM state): FIXED-SIZE per-slot
+        state tensors riding in the same pool list (batch axis == slot),
+        written at admission by the same scatter and advanced in place by
+        the decode scan — nothing grows, nothing pages;
+      - *encoder-decoder cross-attention*: per-slot encoder-output K/V
+        sidecars (``ck``/``cv``, ``enc_len`` frames each), computed once at
+        admission from the join's ``enc_feats`` and read-only thereafter.
+
+    One lifecycle composes them: admit / decode / retire / preempt / cancel
+    / quarantine / snapshot all route through the same slot machinery, with
+    a ``StateSlotPool`` tracking the fixed-size side (strict alloc at
+    admission, free on every exit path, occupancy + deferral gauges beside
+    the page gauges; ``can_admit`` counts state slots for hybrid stacks,
+    not just pages). Admission prefill is variable-length for EVERY stack:
+    the recurrent scans are length-aware (``dt`` zeroed / state carried
+    through right-pad positions), so hybrids share the bucketed right-pad
+    path and its zero-recompile guarantees.
+
+    Capability negotiation is explicit — planes whose mechanics are
+    attention-only DEMOTE cleanly instead of crashing mid-serve:
+
+      - prefix sharing + chunked prefill: shared pages capture attention KV
+        only; recurrent state at the prefix boundary is stream-private, so
+        hybrid joins admit plain (per-stream pages, full prefill);
+      - speculative decode (``spec_k``): rollback is a length/tracker reset
+        on paged KV; recurrent state cannot rewind past rejected drafts —
+        ``spec_k > 0`` demotes to plain decode with a warning;
+      - spill-resume: the stream spill captures pages + trackers only, so
+        hybrid preemption uses the lossless fold-and-re-prefill path (which
+        recomputes recurrent state exactly); snapshot/restore instead
+        captures the dense state wholesale (``capture_dense_state``).
+
     **Paged page lifecycle — refcounted ownership + copy-on-write prefix
     sharing.** Every usable page carries a reference count; a page is owned
     by the free list exactly when its refcount is zero, and by one or more
@@ -300,6 +339,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cache_manager import (CachePlan, StateSlotPool,
+                                      capture_dense_state,
+                                      restore_dense_state)
 from repro.core.physical import PAD_SENTINEL, PhysicalFM, bucket_for
 from repro.core.spill import EngineSnapshot, HostSpillArena
 from repro.kernels import ops
@@ -358,6 +400,7 @@ class DecodeSlot:
     adapter_id: Optional[str] = None
     deadline: float = float("inf")        # wall-clock cancel point (inf: none)
     status: str = "ok"                    # terminal status (core.request)
+    enc_feats: Optional[np.ndarray] = None   # enc-dec: encoder input frames
 
 
 @dataclasses.dataclass
@@ -372,6 +415,7 @@ class _PendingJoin:
     resume: Optional[DecodeSlot] = None   # preempted stream being re-admitted
     deadline: float = float("inf")
     status: str = "ok"                    # stamped when rejected terminally
+    enc_feats: Optional[np.ndarray] = None   # enc-dec: encoder input frames
 
 
 class DecodeEngine:
@@ -393,25 +437,39 @@ class DecodeEngine:
                  chunked_prefill: bool = True,
                  spec_k: int = 0, spec_force_fill: bool = False,
                  spec_disable_below: float = 1.25,
-                 spec_probe_every: int = 16):
+                 spec_probe_every: int = 16,
+                 enc_len: Optional[int] = None):
         cfg = fm.cfg
         assert cfg.vocab_size > 0 and not cfg.is_representation, \
             "DecodeEngine serves generative decoder LMs (vocab head required)"
-        assert not cfg.is_encoder_decoder, \
-            "enc-dec decode needs per-slot encoder state (not supported yet)"
         self.fm = fm
         self.cfg = cfg
         self.num_slots = bucket_for(num_slots)
         self.prompt_len = prompt_len or fm.input_len
-        # variable-length admission masks pads out of ATTENTION; recurrent
-        # blocks (mamba/xLSTM) would still scan right-pad tokens into their
-        # state, so hybrid stacks keep the single full-length bucket with
-        # the legacy left-pad (pads attended, positionally before the prompt)
-        from repro.configs.base import ATTN
-        self.var_len = all(b == ATTN for b in cfg.blocks)
+        # per-sublayer cache plan (core.cache_manager): which sublayers page
+        # into the shared int8 arena, which carry fixed-size per-slot state
+        # (recurrent conv/SSM/LSTM state, encoder-output cross K/V), and
+        # which serving planes the stack supports. Capabilities negotiate —
+        # unsupported planes demote cleanly instead of crashing mid-serve.
+        self.plan = CachePlan.for_config(cfg, paged)
+        if paged and not self.plan.paged:
+            warnings.warn(
+                "paged=True on a stack with no attention sublayers: the "
+                "whole serving state is fixed-size per-slot state, nothing "
+                "to page — running the dense slot pool", RuntimeWarning,
+                stacklevel=2)
+            paged = False
+        # admission is variable-length for EVERY stack: attention masks pads
+        # out of its K/V, and the recurrent scans are length-aware (dt zeroed
+        # / state carried through right-pad positions — models.mamba,
+        # models.xlstm), so hybrids share the bucketed prefill path
+        self.var_len = True
+        # enc-dec: per-slot encoder-output cross K/V rides in the pool as
+        # fixed-size state (enc_len frames per slot, written at admission)
+        self.enc_len = int(enc_len) if enc_len is not None else \
+            (self.prompt_len if cfg.is_encoder_decoder else 0)
         if prompt_buckets is None:
-            prompt_buckets = default_prompt_buckets(self.prompt_len) \
-                if self.var_len else (self.prompt_len,)
+            prompt_buckets = default_prompt_buckets(self.prompt_len)
         self.prompt_buckets = tuple(sorted(set(int(b) for b in prompt_buckets)))
         self.prompt_len = self.prompt_buckets[-1]   # largest bucket is the cap
         self.max_new = max_new
@@ -426,6 +484,15 @@ class DecodeEngine:
                                       self.num_slots)
         self.s_max = self.prompt_len + max_new + 1
         self.spec_k = int(spec_k)
+        if self.spec_k > 0 and not self.plan.speculative_ok and \
+                (self.plan.has_recurrent or self.plan.has_encoder):
+            warnings.warn(
+                "spec_k > 0 demoted to plain decode: speculative rollback is "
+                "a length/tracker reset on paged attention KV only — "
+                "recurrent state cannot rewind past rejected drafts, and the "
+                "verify forward has no encoder-decoder mode", RuntimeWarning,
+                stacklevel=2)
+            self.spec_k = 0
         if self.spec_k > 0 and not paged:
             raise ValueError("speculative decoding (spec_k > 0) requires "
                              "paged=True: speculative KV rollback relies on "
@@ -438,9 +505,6 @@ class DecodeEngine:
         self.paged = paged
         if paged:
             assert kv_quant, "the paged arena is int8-only (kv_quant=True)"
-            assert self.var_len, \
-                "paged pools need attention-only stacks (recurrent state " \
-                "is per-slot dense)"
             self.page_size = page_size
             self.pages_per_slot = -(-(self.s_max + spec_room) // page_size)
             if total_pages is None:        # dense-equivalent memory + trash
@@ -451,7 +515,8 @@ class DecodeEngine:
                                       self.s_max + spec_room,
                                       kv_quant=True, paged=True,
                                       page_size=page_size,
-                                      num_pages=total_pages)
+                                      num_pages=total_pages,
+                                      enc_len=self.enc_len or None)
             # bit-exact parity contract: the DEVICE page table every
             # non-speculative plane sees keeps the spec_k=0 width. XLA
             # specializes executables on input shapes, so a table widened
@@ -479,8 +544,13 @@ class DecodeEngine:
             self.pending: collections.deque[_PendingJoin] = collections.deque()
             self.deferrals = 0
             self.preemptions = 0
-            # refcounted ownership + COW prefix sharing (module docstring)
-            self.prefix_sharing = bool(prefix_sharing)
+            # refcounted ownership + COW prefix sharing (module docstring).
+            # Capability-gated: shared pages capture attention KV only, and
+            # a recurrent sublayer's state at the shared-prefix boundary is
+            # stream-private — on hybrid / enc-dec stacks sharing demotes
+            # silently to plain (per-stream) admission.
+            self.prefix_sharing = bool(prefix_sharing) and \
+                self.plan.prefix_sharing_ok
             self._page_refs = np.zeros((total_pages,), np.int32)
             self._prefix_registry: dict[tuple, int] = {}   # key -> page id
             self._page_key: dict[int, tuple] = {}          # page id -> key
@@ -524,13 +594,29 @@ class DecodeEngine:
             # instead of being destroyed; resume/re-join restore by H2D copy
             self.spill = spill_arena if spill_arena is not None else (
                 HostSpillArena(spill_bytes) if spill_bytes > 0 else None)
+            if self.spill is not None and not self.plan.spill_resume_ok:
+                warnings.warn(
+                    "spill tier demoted: the stream spill captures pages + "
+                    "quantization trackers only, not per-slot dense state "
+                    "(recurrent / encoder) — preemption falls back to the "
+                    "lossless fold-and-re-prefill path", RuntimeWarning,
+                    stacklevel=2)
+                self.spill = None
         else:
             self.spill = None
             self.chunked_prefill = False    # needs the paged arena
             # the persistent pool: allocated once, updated in place (donated)
             self.pool = lm.init_cache(cfg, self.num_slots, self.s_max,
-                                      kv_quant=kv_quant)
+                                      kv_quant=kv_quant,
+                                      enc_len=self.enc_len or None)
             self.pending = collections.deque()
+        # fixed-size per-slot state lifecycle (core.cache_manager): one state
+        # slot per live stream, allocated at admission, freed on every exit
+        # path (retire / preempt / cancel / quarantine). The tensors live in
+        # self.pool (batch axis == slot); this tracks lifecycle + gauges and
+        # feeds the hybrid admission gate.
+        self.state_pool = StateSlotPool(self.num_slots) \
+            if self.plan.needs_state_slots else None
         self._tokens = jnp.zeros((self.num_slots,), jnp.int32)  # last token/slot
         self.slots: list[Optional[DecodeSlot]] = [None] * self.num_slots
         self._slot_adapters = np.full((self.num_slots,), FREE, np.int32)
@@ -727,6 +813,12 @@ class DecodeEngine:
                 "prompt=): the memory gate cannot size an admission from "
                 "a default 1-token estimate")
         if not self.free_slots():
+            return False
+        if self.state_pool is not None and self.state_pool.available() <= 0:
+            # hybrid/enc-dec gate: admission needs a fixed-size state slot
+            # alongside the decode slot (1:1 today, but counted separately
+            # so the invariant — and the deferral gauge — is explicit)
+            self.state_pool.note_deferral()
             return False
         if not self.paged:
             return True
@@ -1164,19 +1256,21 @@ class DecodeEngine:
             # per-row quantization unchanged
             s_max, kvq, sample = self._adm_s_max(plen), \
                 self.kv_quant and not self.paged, self._sample
+            enc_len = self.enc_len
 
             @jax.jit
-            def run(params, tokens, true_len, rng_key, lora_stack,
+            def run(params, tokens, true_len, enc_embeds, rng_key, lora_stack,
                     adapter_idx, perm, inv, blocks):
                 seg = None
                 if impl == "segmented":
                     seg = {"perm": perm, "inv": inv, "block_adapter": blocks,
                            "block_t": bt}
-                cache = lm.init_cache(cfg, 1, s_max, kv_quant=kvq)
+                cache = lm.init_cache(cfg, 1, s_max, kv_quant=kvq,
+                                      enc_len=enc_len or None)
                 logits, cache = lm.prefill(
                     params, cfg, tokens=tokens, cache=cache, lora=lora_stack,
                     adapter_idx=adapter_idx, lora_impl=impl, lora_seg=seg,
-                    seq_lens=true_len)
+                    seq_lens=true_len, enc_embeds=enc_embeds)
                 first, rng_key = sample(logits, rng_key)
                 # numeric-health flag rides the admission's existing host
                 # sync: a non-finite prefill quarantines at admission, before
@@ -1312,6 +1406,20 @@ class DecodeEngine:
             def write(pool, cache, slot, page_idx, true_len):
                 out = []
                 for psub, csub in zip(pool, cache):
+                    if not (isinstance(psub, dict) and "page_table" in psub):
+                        # fixed-size per-slot state (recurrent sublayers):
+                        # the one-row prefill state scatters into the slot
+                        # along the batch axis, same contract as the dense
+                        # pool's _write_fn — no paging, no quantization
+                        if isinstance(psub, dict):
+                            out.append({
+                                kk: jax.lax.dynamic_update_slice_in_dim(
+                                    psub[kk], csub[kk].astype(psub[kk].dtype),
+                                    slot, axis=1)
+                                for kk in psub})
+                        else:
+                            out.append(psub)
+                        continue
                     kf = csub["k"][:, 0].astype(jnp.float32)  # (nper,S,kv,hd)
                     nper, _, kv, hd = kf.shape
                     kf = kf.reshape(nper, npages, ps, kv, hd)
@@ -1354,6 +1462,13 @@ class DecodeEngine:
                     d["k_max"] = psub["k_max"].at[:, slot].set(0.0)
                     d["v_max"] = psub["v_max"].at[:, slot].set(0.0)
                     d["len"] = psub["len"].at[:, slot].set(true_len)
+                    for cc in ("ck", "cv"):
+                        # enc-dec: fixed-size encoder-output K/V sidecars
+                        # ride beside the paged arena, one row per slot
+                        if cc in psub:
+                            d[cc] = jax.lax.dynamic_update_slice_in_dim(
+                                psub[cc], csub[cc].astype(psub[cc].dtype),
+                                slot, axis=1)
                     out.append(d)
                 return out
 
@@ -1446,6 +1561,9 @@ class DecodeEngine:
             def rescale(pool, slot, page):
                 out = []
                 for sub in pool:
+                    if not (isinstance(sub, dict) and "k_max" in sub):
+                        out.append(sub)     # fixed-size state: no scales
+                        continue
                     km = sub["k_max"][:, slot] * margin       # (nper, kv)
                     vm = sub["v_max"][:, slot] * margin
                     old_ks = sub["k_scale"][:, page]
@@ -1834,10 +1952,28 @@ class DecodeEngine:
         return self.tail_buckets[-1]
 
     # ---- serving surface ----
+    def _norm_enc_feats(self, enc_feats) -> np.ndarray:
+        """Normalize one stream's encoder input to the engine's fixed
+        ``(enc_len, d_model)`` frame shape. ``None`` means zero frames (the
+        stub-frontend analogue of silence) so decoder-only callers — the
+        serve-loop warmup included — join without change. The encoder is
+        bidirectional, so frame count is STRICT: zero-padding would change
+        every encoder output, not just the tail."""
+        d = self.cfg.d_model
+        if enc_feats is None:
+            return np.zeros((self.enc_len, d), np.float32)
+        enc_feats = np.asarray(enc_feats, np.float32).reshape(-1, d)
+        assert enc_feats.shape[0] == self.enc_len, \
+            (f"enc_feats must carry exactly enc_len={self.enc_len} frames "
+             f"(got {enc_feats.shape[0]}): the encoder is bidirectional, "
+             f"padding is not transparent")
+        return enc_feats
+
     def join(self, task_id: str, prompt: np.ndarray, *,
              adapter_id: Optional[str] = None, max_new_tokens: int = 8,
              rid: int = -1, eos_id: Optional[int] = None,
-             deadline: Optional[float] = None) -> int:
+             deadline: Optional[float] = None,
+             enc_feats: Optional[np.ndarray] = None) -> int:
         """Admit one request: prefill its prompt (LoRA applied, K/V int8-
         quantized in-graph), scatter it into a free slot (paged: into freshly
         allocated pages), produce the first token. Returns the slot index.
@@ -1858,12 +1994,16 @@ class DecodeEngine:
         matters) — that loses context, so it WARNS; the decode budget clamps
         to the pool's ``max_new`` capacity."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if self.cfg.is_encoder_decoder:
+            enc_feats = self._norm_enc_feats(enc_feats)   # validate at join
         req = _PendingJoin(task_id=task_id, prompt=prompt,
                            adapter_id=adapter_id,
                            max_new_tokens=max_new_tokens, rid=rid,
                            eos_id=eos_id,
                            deadline=float("inf") if deadline is None
-                           else float(deadline))
+                           else float(deadline),
+                           enc_feats=enc_feats
+                           if self.cfg.is_encoder_decoder else None)
         if self.paged and not self.can_admit(len(prompt), prompt=prompt,
                                              adapter_id=adapter_id):
             # deferral must be able to END: a request whose prompt bucket +
@@ -1907,17 +2047,14 @@ class DecodeEngine:
                 stacklevel=2)
             prompt = prompt[-self.prompt_len:]     # causal LM: suffix matters
         true_prompt = prompt
-        if self.var_len:
-            true_len = max(1, len(prompt))
-            plen = self.bucket_for_prompt(true_len)
-            if len(prompt) < plen:                 # right-pad to the bucket
-                prompt = np.concatenate(
-                    [prompt, np.zeros(plen - len(prompt), np.int32)])
-        else:                                      # hybrid stack: legacy pad
-            plen = true_len = self.prompt_len
-            if len(prompt) < plen:
-                prompt = np.concatenate(
-                    [np.zeros(plen - len(prompt), np.int32), prompt])
+        # variable-length bucketed admission for every stack: attention masks
+        # right-pads out of its K/V and the recurrent scans carry state
+        # through them unchanged, so the bucket is the only jit key
+        true_len = max(1, len(prompt))
+        plen = self.bucket_for_prompt(true_len)
+        if len(prompt) < plen:                     # right-pad to the bucket
+            prompt = np.concatenate(
+                [prompt, np.zeros(plen - len(prompt), np.int32)])
         max_new_tokens = max(1, min(req.max_new_tokens, self.max_new))
         slot = self.free_slots()[0]
         cap = self.fm.adapters.capacity()
@@ -1928,9 +2065,13 @@ class DecodeEngine:
             if admitted is not None:
                 return admitted
         perm, inv, blocks = self._prefill_segments(aslot, cap, plen)
+        # encoder operand: (1, enc_len, d) frames for enc-dec, None (an
+        # empty pytree leaf — same trace) for decoder-only stacks
+        enc = jnp.asarray(self._norm_enc_feats(req.enc_feats)[None]) \
+            if self.cfg.is_encoder_decoder else None
         first, fin, key, cache = self._prefill_fn(cap, plen)(
             self.fm.params, jnp.asarray(prompt[None]),
-            jnp.full((1,), true_len, jnp.int32), self._keys[slot][None],
+            jnp.full((1,), true_len, jnp.int32), enc, self._keys[slot][None],
             self.fm.adapters.stacked(), jnp.full((1,), aslot, jnp.int32),
             perm, inv, blocks)
         self._keys = self._keys.at[slot].set(key[0])
@@ -2183,6 +2324,10 @@ class DecodeEngine:
                           first, fin_ok: bool, true_prompt: np.ndarray,
                           true_len: int, max_new_tokens: int,
                           t_adm: float) -> int:
+        if self.state_pool is not None:
+            # strict 1:1 with the decode slot — a double allocation here is
+            # a lifecycle bug (some exit path didn't free), not backpressure
+            self.state_pool.alloc(slot)
         self._tokens = self._tokens.at[slot].set(first[0])
         now = time.perf_counter()
         tok0 = int(first[0])
@@ -2214,7 +2359,8 @@ class DecodeEngine:
                 adapter_id=req.adapter_id, deadline=req.deadline,
                 status="ok" if fin_ok else "quarantined",
                 done=(not fin_ok or max_new_tokens == 1
-                      or (eos is not None and tok0 == eos)))
+                      or (eos is not None and tok0 == eos)),
+                enc_feats=req.enc_feats)
         self._slot_adapters[slot] = aslot
         self._seg_key = None                    # composition changed
         return slot
@@ -2229,6 +2375,8 @@ class DecodeEngine:
         self._seg_key = None                    # composition changed
         if self.paged:
             self._release_slot_pages(slot)
+        if self.state_pool is not None:
+            self.state_pool.free(slot)
         # keep the freed slot's cache length bounded while it idles
         for sub in self.pool:
             if isinstance(sub, dict) and "len" in sub:
@@ -2256,12 +2404,18 @@ class DecodeEngine:
         self._slot_adapters[slot] = FREE
         self._seg_key = None
         self._release_slot_pages(slot)
+        if self.state_pool is not None:
+            # the victim's dense state is NOT captured (spill is demoted on
+            # such stacks): re-admission re-prefills the folded prompt, which
+            # recomputes recurrent state exactly
+            self.state_pool.free(slot)
         for sub in self.pool:
             if isinstance(sub, dict) and "len" in sub:
                 sub["len"] = sub["len"].at[:, slot].set(0)
         self.pending.appendleft(_PendingJoin(
             task_id=s.task_id, prompt=prompt, adapter_id=s.adapter_id,
-            max_new_tokens=s.max_new, rid=s.rid, eos_id=s.eos_id, resume=s))
+            max_new_tokens=s.max_new, rid=s.rid, eos_id=s.eos_id, resume=s,
+            enc_feats=s.enc_feats))
         self.preemptions += 1
 
     def _ensure_chunk_pages(self):
@@ -2839,6 +2993,7 @@ class DecodeEngine:
             "spec_force_fill": self.spec_force_fill,
             "spec_disable_below": self.spec_disable_below,
             "spec_probe_every": self.spec_probe_every,
+            "enc_len": self.enc_len,
         }
 
     def snapshot(self) -> EngineSnapshot:
@@ -2882,7 +3037,11 @@ class DecodeEngine:
             registry=dict(self._prefix_registry),
             page_key=dict(self._page_key),
             counters={k: getattr(self, k) for k in self._COUNTERS},
-            spill=self.spill)
+            spill=self.spill,
+            # fixed-size per-slot dense state (recurrent / cross K/V): the
+            # page capture above covers only the paged arena
+            dense_state=capture_dense_state(self.pool)
+            if self.plan.needs_state_slots else None)
         snap.counters["admitted_log"] = list(self.admitted_log)
         snap.page_digests = {int(p): snap.page_digest(i)
                              for i, p in enumerate(used)}
@@ -2947,6 +3106,14 @@ class DecodeEngine:
         eng.slots = copy.deepcopy(snap.slots)
         eng.pending = collections.deque(copy.deepcopy(snap.pending))
         eng.rejected = copy.deepcopy(snap.rejected)
+        if getattr(snap, "dense_state", None) is not None:
+            eng.pool = restore_dense_state(eng.pool, snap.dense_state)
+        if eng.state_pool is not None:
+            # re-mark live slots BEFORE the bad-page requeue below: its
+            # _preempt path frees the victim's state slot
+            for i, s in enumerate(eng.slots):
+                if s is not None:
+                    eng.state_pool.alloc(i)
         counters = dict(snap.counters)
         eng.admitted_log = list(counters.pop("admitted_log", []))
         for k in cls._COUNTERS:

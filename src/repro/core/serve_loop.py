@@ -308,7 +308,10 @@ class ServeLoop:
         prompt = np.asarray(r.payload).reshape(-1)
         eng.join(r.task_id, prompt, adapter_id=ext.adapter_id,
                  max_new_tokens=r.max_new_tokens, rid=r.rid,
-                 deadline=r.deadline() if self.enforce_deadlines else None)
+                 deadline=r.deadline() if self.enforce_deadlines else None,
+                 # enc-dec: encoder input frames ride the request; None is
+                 # the engine's zero-frame default (decoder-only unaffected)
+                 enc_feats=getattr(r, "enc_feats", None))
 
     def _charge_admissions(self, sched, vfms, now):
         """Drain the engine's admitted log and charge each loop-admitted
@@ -631,7 +634,9 @@ class ServeLoop:
         one admission prefill per prompt-length bucket, the decode chunk,
         and the pool write. Shared by the benchmarks and examples so the
         warm set can't drift from the jit-key set. Generative warmup is
-        skipped for FMs the engine cannot serve (no vocab head / enc-dec)."""
+        skipped only for FMs with no generative head (no vocab head, or a
+        pure-representation stack); enc-dec stacks warm through the
+        engine's zero-frame ``enc_feats`` default."""
         import numpy as np
 
         from repro.core.physical import BUCKETS
@@ -657,8 +662,9 @@ class ServeLoop:
             ex.execute(Batch(reqs, group_sub_batches(reqs, vfms)), vfms)
         trace = [Request(pooled_task, 0.0, payload=payload())
                  for _ in range(pooled_n)]
-        if cfg.vocab_size > 0 and not cfg.is_representation \
-                and not cfg.is_encoder_decoder:
+        if cfg.vocab_size > 0 and not cfg.is_representation:
+            # enc-dec included: the engine's zero-frame enc_feats default
+            # makes warmup joins well-formed for every generative stack
             eng = self._engine(create=True)
             for plen in eng.prompt_buckets:
                 trace.append(Request(

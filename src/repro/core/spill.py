@@ -191,6 +191,11 @@ class EngineSnapshot:
     counters: dict                     # steps/admissions/... continue
     sched_tags: Optional[dict] = None  # BFQ virtual-time tags (loop-level)
     spill: Optional[HostSpillArena] = None
+    # fixed-size per-slot dense state (recurrent conv/SSM/LSTM state, cross
+    # K/V sidecars), one dict (or None) per pool sub — captured by
+    # ``cache_manager.capture_dense_state`` for hybrid / enc-dec stacks;
+    # None on attention-only engines
+    dense_state: Optional[list] = None
 
     def page_digest(self, idx: int) -> bytes:
         """sha256 of captured page ``used_pages[idx]`` across sub groups."""
@@ -218,6 +223,13 @@ class EngineSnapshot:
         for j, sub in enumerate(self.slot_state):
             for k, a in sub.items():
                 arrays[f"slot{j}/{k}"] = a
+        dense_keys = None
+        if self.dense_state is not None:
+            dense_keys = []
+            for j, sub in enumerate(self.dense_state):
+                dense_keys.append(sorted(sub) if sub else None)
+                for k, a in (sub or {}).items():
+                    arrays[f"dense{j}/{k}"] = a
         meta = {
             "config": _jsonable(self.config),
             "n_subs": len(self.pages),
@@ -230,6 +242,7 @@ class EngineSnapshot:
             "rejected": [_pending_to_json(p) for p in self.rejected],
             "counters": _jsonable(self.counters),
             "sched_tags": _jsonable(self.sched_tags),
+            "dense_keys": dense_keys,
         }
         return arrays, meta
 
@@ -266,6 +279,10 @@ class EngineSnapshot:
                       for p, k in meta["page_key"].items()},
             counters=dict(meta["counters"]),
             sched_tags=meta.get("sched_tags"),
+            dense_state=None if meta.get("dense_keys") is None else [
+                None if keys is None else
+                {k: np.asarray(arrays[f"dense{j}/{k}"]) for k in keys}
+                for j, keys in enumerate(meta["dense_keys"])],
         )
 
 
@@ -295,6 +312,8 @@ def _slot_to_json(s) -> Optional[dict]:
         else [int(t) for t in np.asarray(s.prompt).reshape(-1)],
         "adapter_id": s.adapter_id, "deadline": float(s.deadline),
         "status": s.status,
+        "enc_feats": None if getattr(s, "enc_feats", None) is None
+        else np.asarray(s.enc_feats, np.float32).tolist(),
     }
 
 
@@ -310,7 +329,9 @@ def _slot_from_json(d):
         prompt=None if d["prompt"] is None
         else np.asarray(d["prompt"], np.int32),
         adapter_id=d["adapter_id"], deadline=d["deadline"],
-        status=d["status"])
+        status=d["status"],
+        enc_feats=None if d.get("enc_feats") is None
+        else np.asarray(d["enc_feats"], np.float32))
 
 
 def _pending_to_json(p) -> dict:
@@ -322,6 +343,8 @@ def _pending_to_json(p) -> dict:
         "eos_id": None if p.eos_id is None else int(p.eos_id),
         "resume": _slot_to_json(p.resume), "deadline": float(p.deadline),
         "status": p.status,
+        "enc_feats": None if getattr(p, "enc_feats", None) is None
+        else np.asarray(p.enc_feats, np.float32).tolist(),
     }
 
 
@@ -331,4 +354,6 @@ def _pending_from_json(d):
         task_id=d["task_id"], prompt=np.asarray(d["prompt"], np.int32),
         adapter_id=d["adapter_id"], max_new_tokens=d["max_new_tokens"],
         rid=d["rid"], eos_id=d["eos_id"], resume=_slot_from_json(d["resume"]),
-        deadline=d["deadline"], status=d["status"])
+        deadline=d["deadline"], status=d["status"],
+        enc_feats=None if d.get("enc_feats") is None
+        else np.asarray(d["enc_feats"], np.float32))

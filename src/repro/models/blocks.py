@@ -106,10 +106,10 @@ def sublayer_cache_spec(cfg: ModelConfig, lay: SubLayer, batch: int, s_max: int,
     dt = jnp.bfloat16
     kv_dt = jnp.int8 if kv_quant else dt
     if paged and lay.kind == ATTN:
-        assert kv_quant and num_pages > 0 and not lay.has_cross, \
+        assert kv_quant and num_pages > 0, \
             "paged pools are int8 self-attention only"
         mp = -(-s_max // page_size)                 # page-table width
-        return {
+        spec = {
             "k": ParamSpec((num_pages, page_size, kv, hd),
                            (None, None, "kv_heads", None),
                            init="zeros", dtype=kv_dt),
@@ -133,6 +133,17 @@ def sublayer_cache_spec(cfg: ModelConfig, lay: SubLayer, batch: int, s_max: int,
             "len": ParamSpec((batch,), ("batch",), init="zeros",
                              dtype=jnp.int32),
         }
+        if lay.has_cross:
+            # encoder–decoder: cross K/V are per-SLOT pooled state (the
+            # encoder output does not grow with decode) — dense bf16
+            # sidecars beside the paged self-attention arena
+            spec["ck"] = ParamSpec((batch, enc_len, kv, hd),
+                                   ("batch", "cache_seq", "kv_heads", None),
+                                   init="zeros", dtype=dt)
+            spec["cv"] = ParamSpec((batch, enc_len, kv, hd),
+                                   ("batch", "cache_seq", "kv_heads", None),
+                                   init="zeros", dtype=dt)
+        return spec
     if lay.kind == ATTN:
         spec = {
             "k": ParamSpec((batch, s_max, kv, hd), ("batch", "cache_seq", "kv_heads", None),
@@ -179,11 +190,16 @@ def sublayer_cache_spec(cfg: ModelConfig, lay: SubLayer, batch: int, s_max: int,
 
 # ---------------- apply ----------------
 
-def _ffn_apply(p, x, cfg, lay, shard):
+def _ffn_apply(p, x, cfg, lay, shard, seq_lens=None):
     h = rmsnorm(p["ln2"], x, cfg.norm_eps)
     if lay.has_moe:
+        # var-len prefill: pads must not claim expert capacity — a real
+        # token's routing is invariant to its admission bucket's padding
+        valid = None if seq_lens is None else \
+            (jnp.arange(x.shape[1])[None] < seq_lens[:, None])
         out, aux = moe_ffn(p["ffn"], h, k=cfg.experts_per_token,
-                           dispatch=cfg.moe_dispatch, shard=shard)
+                           dispatch=cfg.moe_dispatch, shard=shard,
+                           valid=valid)
         return x + out, aux
     return x + mlp(p["ffn"], h, shard), 0.0
 
@@ -287,7 +303,8 @@ def sublayer_apply(p, x, cfg: ModelConfig, lay: SubLayer, shard, *,
                     new_cache["cv"] = cv.astype(cache["cv"].dtype)
                 x = x + attn.cross_attention(p["cross"], hx, (ck, cv), cfg, shard)
         if lay.has_ffn:
-            x, aux = _ffn_apply(p, x, cfg, lay, shard)
+            x, aux = _ffn_apply(p, x, cfg, lay, shard,
+                                seq_lens=None if mode == "decode" else seq_lens)
         return x, new_cache, aux
 
     if lay.kind == MAMBA:
@@ -296,21 +313,27 @@ def sublayer_apply(p, x, cfg: ModelConfig, lay: SubLayer, shard, *,
                                                 cache["conv"], cache["ssm"])
             new_cache = {"conv": conv, "ssm": ssm}
         else:
-            out, (conv, ssm) = mam.mamba_forward(p["mamba"], h, cfg, shard)
+            out, (conv, ssm) = mam.mamba_forward(p["mamba"], h, cfg, shard,
+                                                 seq_lens=seq_lens)
             new_cache = {"conv": conv, "ssm": ssm} if cache is not None else None
         x = x + out
         if lay.has_ffn:
-            x, aux = _ffn_apply(p, x, cfg, lay, shard)
+            x, aux = _ffn_apply(p, x, cfg, lay, shard,
+                                seq_lens=None if mode == "decode" else seq_lens)
         return x, new_cache, aux
 
     if lay.kind == MLSTM:
-        out, state = xl.mlstm_forward(p["mlstm"], h, cfg, shard,
-                                      state=cache if mode == "decode" else None)
+        out, state = xl.mlstm_forward(
+            p["mlstm"], h, cfg, shard,
+            state=cache if mode == "decode" else None,
+            seq_lens=None if mode == "decode" else seq_lens)
         return x + out, (state if cache is not None else None), aux
 
     if lay.kind == SLSTM:
-        out, state = xl.slstm_forward(p["slstm"], h, cfg, shard,
-                                      state=cache if mode == "decode" else None)
+        out, state = xl.slstm_forward(
+            p["slstm"], h, cfg, shard,
+            state=cache if mode == "decode" else None,
+            seq_lens=None if mode == "decode" else seq_lens)
         return x + out, (state if cache is not None else None), aux
 
     raise ValueError(f"unknown block kind {lay.kind}")

@@ -54,7 +54,8 @@ def model_structs(cfg: ModelConfig, dtype=None):
 
 def cache_spec(cfg: ModelConfig, batch: int, s_max: int,
                kv_quant: bool = False, paged: bool = False,
-               page_size: int = 16, num_pages: int = 0) -> list:
+               page_size: int = 16, num_pages: int = 0,
+               enc_len: Optional[int] = None) -> list:
     """Stacked per-period decode cache (list over sublayers).
 
     ``kv_quant``: int8 self-attention K/V + per-(batch, kv-head) scales —
@@ -64,11 +65,19 @@ def cache_spec(cfg: ModelConfig, batch: int, s_max: int,
     dense (batch, s_max) regions — ``num_pages`` fixed-size pages shared by
     all slots, so pool memory is ``num_pages × page_size`` tokens regardless
     of ``batch`` (see ``blocks.sublayer_cache_spec``). ``s_max`` only bounds
-    the page-table width (max pages one stream may hold)."""
+    the page-table width (max pages one stream may hold).
+
+    ``enc_len``: encoder-output length for the cross-attention K/V state of
+    enc-dec models (defaults to ``s_max``) — the serving engine passes its
+    fixed encoder frame count so the per-slot cross state is sized to the
+    audio frontend, not to the decode budget."""
     plen = blk.period_len(cfg)
     nper = cfg.num_layers // plen
     layout = blk.period_layout(cfg, cross=cfg.is_encoder_decoder)
-    enc_len = s_max if cfg.is_encoder_decoder else 0
+    if not cfg.is_encoder_decoder:
+        enc_len = 0
+    elif enc_len is None:
+        enc_len = s_max
     return [stack_specs(blk.sublayer_cache_spec(cfg, lay, batch, s_max, enc_len,
                                                 kv_quant=kv_quant, paged=paged,
                                                 page_size=page_size,
@@ -77,11 +86,12 @@ def cache_spec(cfg: ModelConfig, batch: int, s_max: int,
 
 
 def init_cache(cfg: ModelConfig, batch: int, s_max: int, kv_quant: bool = False,
-               paged: bool = False, page_size: int = 16, num_pages: int = 0):
+               paged: bool = False, page_size: int = 16, num_pages: int = 0,
+               enc_len: Optional[int] = None):
     return init_params(jax.random.PRNGKey(0),
                        cache_spec(cfg, batch, s_max, kv_quant=kv_quant,
                                   paged=paged, page_size=page_size,
-                                  num_pages=num_pages))
+                                  num_pages=num_pages, enc_len=enc_len))
 
 
 # ---------------- stack forward ----------------

@@ -49,9 +49,17 @@ def _ssm_chunk(x, dt, B, C, A, D, h0):
 
 
 def mamba_forward(p, x, cfg, shard, conv_state=None, ssm_state=None,
-                  chunk: int = 128):
+                  chunk: int = 128, seq_lens=None):
     """x: (B, S, d). Returns (y, (conv_state, ssm_state)) — states are the
-    decode cache. Prefill/train: pass states=None."""
+    decode cache. Prefill/train: pass states=None.
+
+    ``seq_lens`` (B,) makes the scan variable-length for right-padded rows:
+    ``dt`` is zeroed at pad positions, so ``dA = exp(0·A) = 1`` and
+    ``dBx = 0`` — the SSM update is an exact identity through the padding —
+    and the returned conv state is gathered per row at the TRUE length
+    instead of the bucket tail. Outputs at pad positions are garbage (the
+    caller discards them); valid positions are bit-identical to an unpadded
+    run because the conv window and the recurrence are causal."""
     Bsz, S, d = x.shape
     di = cfg.mamba_expand * d
     ds = cfg.mamba_d_state
@@ -66,7 +74,15 @@ def mamba_forward(p, x, cfg, shard, conv_state=None, ssm_state=None,
     if conv_state is None:
         conv_state = jnp.zeros((Bsz, dc - 1, di), dt_x)
     xpad = jnp.concatenate([conv_state, xin], axis=1)      # (B, S+dc-1, di)
-    new_conv_state = xpad[:, -(dc - 1):] if dc > 1 else conv_state
+    if dc <= 1:
+        new_conv_state = conv_state
+    elif seq_lens is None:
+        new_conv_state = xpad[:, -(dc - 1):]
+    else:
+        # per-row: the dc-1 inputs PRECEDING each row's true end live at
+        # xpad[b, L_b : L_b + dc-1] (L_b == S reduces to the slice above)
+        idx = seq_lens[:, None] + jnp.arange(dc - 1)[None, :]
+        new_conv_state = jnp.take_along_axis(xpad, idx[:, :, None], axis=1)
     w = p["conv_w"].astype(dt_x)
     xc = sum(xpad[:, i:i + S] * w[i][None, None] for i in range(dc))
     xc = jax.nn.silu(xc + p["conv_b"].astype(dt_x))
@@ -76,6 +92,9 @@ def mamba_forward(p, x, cfg, shard, conv_state=None, ssm_state=None,
     dt = jax.nn.softplus(
         jnp.einsum("bsd,dr->bs", xc, p["x_dt"].astype(dt_x)).astype(jnp.float32)[..., None]
         + p["dt_bias"].astype(jnp.float32))                # (B, S, di)
+    if seq_lens is not None:
+        valid = jnp.arange(S)[None, :] < seq_lens[:, None]  # (B, S)
+        dt = jnp.where(valid[:, :, None], dt, 0.0)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))           # (di, ds)
     D = p["D"].astype(jnp.float32)
 

@@ -53,19 +53,26 @@ def _router(p, xg, k):
     return gate_k, idx_k, aux
 
 
-def _positions(idx_k, num_experts, cap):
+def _positions(idx_k, num_experts, cap, valid=None):
     """Slot assignment: (g, k) expert ids -> (pos_in_expert, keep) each (g, k).
 
     First choices get priority over second choices (k-major order), matching
-    GShard.
+    GShard. ``valid`` ((g,) bool, optional): tokens marked invalid (right-pad
+    positions of a variable-length prefill) are excluded from the capacity
+    cumsum and always dropped — a pad must never claim an expert slot ahead
+    of a real token.
     """
     g, k = idx_k.shape
     mask = jax.nn.one_hot(idx_k, num_experts, dtype=jnp.int32)      # (g, k, E)
+    if valid is not None:
+        mask = mask * valid[:, None, None].astype(jnp.int32)
     mflat = mask.transpose(1, 0, 2).reshape(k * g, num_experts)     # k-major
     pos_flat = jnp.cumsum(mflat, axis=0) - mflat                    # (k*g, E)
     pos = (pos_flat.reshape(k, g, num_experts) * mask.transpose(1, 0, 2)).sum(-1)
     pos = pos.transpose(1, 0)                                        # (g, k)
     keep = pos < cap
+    if valid is not None:
+        keep = keep & valid[:, None]
     return pos, keep
 
 
@@ -81,13 +88,13 @@ def _expert_ffn(p, x_e, shard):
     return shard(out, ("experts", None, None))
 
 
-def _group_gshard(p, xg, k, cap, shard):
+def _group_gshard(p, xg, k, cap, shard, valid=None):
     """One subgroup, einsum dispatch. xg: (B, g, d) -> (B, g, d), aux."""
     gate_k, idx_k, aux = jax.vmap(lambda t: _router(p, t, k))(xg)
     e = p["router"].shape[-1]
 
-    def per_row(xr, gr, ir):
-        pos, keep = _positions(ir, e, cap)
+    def per_row(xr, gr, ir, vr):
+        pos, keep = _positions(ir, e, cap, valid=vr)
         # dispatch one-hots, summed over k: (g, E, C)
         oh = (jax.nn.one_hot(ir, e, dtype=xr.dtype)[..., None]
               * jax.nn.one_hot(pos, cap, dtype=xr.dtype)[..., None, :]
@@ -98,17 +105,21 @@ def _group_gshard(p, xg, k, cap, shard):
         y_e = _expert_ffn(p, x_e, shard)
         return jnp.einsum("gec,ecd->gd", combine, y_e)
 
-    out = jax.vmap(per_row)(xg, gate_k, idx_k)
+    if valid is None:
+        out = jax.vmap(lambda a, b, c: per_row(a, b, c, None))(
+            xg, gate_k, idx_k)
+    else:
+        out = jax.vmap(per_row)(xg, gate_k, idx_k, valid)
     return out, aux.mean()
 
 
-def _group_scatter(p, xg, k, cap, shard):
+def _group_scatter(p, xg, k, cap, shard, valid=None):
     """One subgroup, scatter/gather dispatch. xg: (B, g, d) -> (B, g, d), aux."""
     e = p["router"].shape[-1]
 
-    def per_row(xr, gr, ir):
+    def per_row(xr, gr, ir, vr):
         g = xr.shape[0]
-        pos, keep = _positions(ir, e, cap)
+        pos, keep = _positions(ir, e, cap, valid=vr)
         slot = jnp.where(keep, ir * cap + pos, e * cap)              # overflow slot
         tok = jnp.broadcast_to(jnp.arange(g)[:, None], (g, k)).reshape(-1)
         x_e = jnp.zeros((e * cap + 1, xr.shape[-1]), xr.dtype)
@@ -119,15 +130,24 @@ def _group_scatter(p, xg, k, cap, shard):
         return y_tok.sum(axis=1)
 
     gate_k, idx_k, aux = jax.vmap(lambda t: _router(p, t, k))(xg)
-    out = jax.vmap(per_row)(xg, gate_k, idx_k)
+    if valid is None:
+        out = jax.vmap(lambda a, b, c: per_row(a, b, c, None))(
+            xg, gate_k, idx_k)
+    else:
+        out = jax.vmap(per_row)(xg, gate_k, idx_k, valid)
     return out, aux.mean()
 
 
 def moe_ffn(p, x, *, k: int,
             dispatch: Literal["gshard", "scatter", "ep"] = "gshard",
-            subgroup: int = 1024, shard=None):
+            subgroup: int = 1024, shard=None, valid=None):
     """x: (B, S, d) -> (B, S, d), aux_loss. Scans over seq subgroups to bound
     dispatch-tensor memory; vmaps over batch (sharded over data axes).
+
+    ``valid`` ((B, S) bool, optional): right-padded variable-length prefill —
+    pad positions are excluded from routing entirely (no expert-capacity
+    claim, zero FFN output), so a real token's expert assignment is invariant
+    to how much padding its admission bucket carries.
 
     dispatch="ep" uses explicit shard_map expert parallelism (local
     scatter/gather dispatch + a single bf16 psum over the model axis) — the
@@ -136,7 +156,7 @@ def moe_ffn(p, x, *, k: int,
     from repro.models.common import NO_SHARD
     shard = shard or NO_SHARD
     if dispatch == "ep":
-        out = _moe_ep(p, x, k, shard)
+        out = _moe_ep(p, x, k, shard, valid)
         if out is not None:
             return out
         dispatch = "gshard"   # mesh/divisibility fallback
@@ -150,10 +170,20 @@ def moe_ffn(p, x, *, k: int,
     fn = _group_gshard if dispatch == "gshard" else _group_scatter
 
     if nsub == 1:
-        out, aux = fn(p, x, k, cap, shard)
+        out, aux = fn(p, x, k, cap, shard, valid=valid)
         return out, aux
 
     xs = x.reshape(B, nsub, gc, d).swapaxes(0, 1)                    # (nsub, B, gc, d)
+    if valid is not None:
+        vs = valid.reshape(B, nsub, gc).swapaxes(0, 1)
+
+        def step_v(_, xv):
+            xsub, vsub = xv
+            out, aux = fn(p, xsub, k, cap, shard, valid=vsub)
+            return None, (out, aux)
+
+        _, (outs, auxs) = jax.lax.scan(step_v, None, (xs, vs))
+        return outs.swapaxes(0, 1).reshape(B, S, d), auxs.mean()
 
     def step(_, xsub):
         out, aux = fn(p, xsub, k, cap, shard)
@@ -163,7 +193,7 @@ def moe_ffn(p, x, *, k: int,
     return outs.swapaxes(0, 1).reshape(B, S, d), auxs.mean()
 
 
-def _moe_ep(p, x, k: int, shard):
+def _moe_ep(p, x, k: int, shard, valid=None):
     """shard_map expert parallelism.
 
     Tokens stay sharded over the batch axes and replicated over 'model'; each
@@ -195,11 +225,13 @@ def _moe_ep(p, x, k: int, shard):
     t_loc = (B // dp) * S
     cap = capacity(t_loc, k, e)
 
-    def local_fn(xl, router_w, wg, wu, wo):
+    def local_fn(xl, vl, router_w, wg, wu, wo):
         b_loc, s, _ = xl.shape
         xf = xl.reshape(b_loc * s, d)
         gate_k, idx_k, aux = _router({"router": router_w}, xf, k)
-        pos, keep = _positions(idx_k, e, cap)
+        pos, keep = _positions(idx_k, e, cap,
+                               valid=None if vl is None
+                               else vl.reshape(b_loc * s))
         m_idx = jax.lax.axis_index("model")
         is_local = (idx_k // e_loc) == m_idx
         keep_loc = keep & is_local
@@ -223,13 +255,20 @@ def _moe_ep(p, x, k: int, shard):
         return y.reshape(b_loc, s, d), aux
 
     xspec = P(batch_axes if batch_axes else None, None, None)
-    out, aux = shard_map(
-        local_fn, mesh=mesh,
-        in_specs=(xspec, P(None, None), P("model", None, None),
-                  P("model", None, None), P("model", None, None)),
-        out_specs=(xspec, P()),
-        check_rep=False,
-    )(x, p["router"], p["wi_gate"], p["wi_up"], p["wo"])
+    wspecs = (P(None, None), P("model", None, None),
+              P("model", None, None), P("model", None, None))
+    if valid is None:
+        out, aux = shard_map(
+            lambda xl, rw, wg, wu, wo: local_fn(xl, None, rw, wg, wu, wo),
+            mesh=mesh, in_specs=(xspec,) + wspecs,
+            out_specs=(xspec, P()), check_rep=False,
+        )(x, p["router"], p["wi_gate"], p["wi_up"], p["wo"])
+    else:
+        vspec = P(batch_axes if batch_axes else None, None)
+        out, aux = shard_map(
+            local_fn, mesh=mesh, in_specs=(xspec, vspec) + wspecs,
+            out_specs=(xspec, P()), check_rep=False,
+        )(x, valid, p["router"], p["wi_gate"], p["wi_up"], p["wo"])
     return out, aux.mean()
 
 

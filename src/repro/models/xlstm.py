@@ -63,8 +63,13 @@ def mlstm_init_state(cfg, batch):
     }
 
 
-def mlstm_forward(p, x, cfg, shard, state=None):
-    """x: (B, S, d) -> (y, state'). Exact recurrence, scan over S."""
+def mlstm_forward(p, x, cfg, shard, state=None, seq_lens=None):
+    """x: (B, S, d) -> (y, state'). Exact recurrence, scan over S.
+
+    ``seq_lens`` (B,) makes the scan variable-length for right-padded rows:
+    a per-timestep validity mask carries every state leaf through pad
+    positions unchanged, so the returned state is exactly the state at each
+    row's true length (pad-position outputs are garbage and discarded)."""
     B, S, d = x.shape
     h = cfg.num_heads
     di = _di(cfg)
@@ -86,8 +91,11 @@ def mlstm_forward(p, x, cfg, shard, state=None):
     if state is None:
         state = mlstm_init_state(cfg, B)
 
+    ok = None if seq_lens is None else \
+        jnp.arange(S)[:, None] < seq_lens[None, :]         # (S, B)
+
     def step(st, t):
-        qt, kt, vt, il, fl = t                             # (B,H,hd) ×3, (B,H) ×2
+        qt, kt, vt, il, fl, okt = t                        # (B,H,hd) ×3, (B,H) ×2
         m_new = jnp.maximum(fl + st["m"], il)
         i_g = jnp.exp(il - m_new)[..., None]               # (B,H,1)
         f_g = jnp.exp(fl + st["m"] - m_new)[..., None]
@@ -95,12 +103,17 @@ def mlstm_forward(p, x, cfg, shard, state=None):
         n = f_g * st["n"] + i_g * kt
         num = jnp.einsum("bhvk,bhk->bhv", C, qt)
         den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), jnp.exp(-m_new))
-        return {"C": C, "n": n, "m": m_new}, num / den[..., None]
+        st2 = {"C": C, "n": n, "m": m_new}
+        if okt is not None:
+            sel = lambda a, b: jnp.where(
+                okt.reshape((B,) + (1,) * (a.ndim - 1)), a, b)
+            st2 = {k2: sel(st2[k2], st[k2]) for k2 in st2}
+        return st2, num / den[..., None]
 
     state, hs = _chunked_scan(step, state,
                               (q.swapaxes(0, 1), k.swapaxes(0, 1),
                                v.swapaxes(0, 1), i_log.swapaxes(0, 1),
-                               f_log.swapaxes(0, 1)), S)
+                               f_log.swapaxes(0, 1), ok), S)
     y = hs.swapaxes(0, 1).reshape(B, S, di).astype(dt)
     y = y * jax.nn.silu(z)
     return jnp.einsum("bsd,de->bse", y, p["down"].astype(dt)), state
@@ -126,8 +139,11 @@ def slstm_init_state(cfg, batch):
     return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, di), -1e30, jnp.float32)}
 
 
-def slstm_forward(p, x, cfg, shard, state=None):
-    """x: (B, S, d) -> (y, state'). Inherently sequential (recurrent h)."""
+def slstm_forward(p, x, cfg, shard, state=None, seq_lens=None):
+    """x: (B, S, d) -> (y, state'). Inherently sequential (recurrent h).
+    ``seq_lens`` (B,): variable-length scan for right-padded rows — state
+    leaves (including the recurrent ``h``) carry through pad positions
+    unchanged, see ``mlstm_forward``."""
     B, S, d = x.shape
     di = _di(cfg)
     dt = x.dtype
@@ -139,7 +155,11 @@ def slstm_forward(p, x, cfg, shard, state=None):
     if state is None:
         state = slstm_init_state(cfg, B)
 
-    def step(st, wxt):
+    ok = None if seq_lens is None else \
+        jnp.arange(S)[:, None] < seq_lens[None, :]         # (S, B)
+
+    def step(st, t):
+        wxt, okt = t
         gates = wxt + st["h"] @ r                          # (B, 4di)
         zi, ii, fi, oi = jnp.split(gates, 4, axis=-1)
         zt = jnp.tanh(zi)
@@ -151,8 +171,12 @@ def slstm_forward(p, x, cfg, shard, state=None):
         c = f_g * st["c"] + i_g * zt
         n = jnp.maximum(f_g * st["n"] + i_g, 1e-6)
         h = ot * c / n
-        return {"c": c, "n": n, "h": h, "m": m_new}, h
+        st2 = {"c": c, "n": n, "h": h, "m": m_new}
+        if okt is not None:
+            st2 = {k2: jnp.where(okt[:, None], st2[k2], st[k2])
+                   for k2 in st2}
+        return st2, h
 
-    state, hs = _chunked_scan(step, state, wx.swapaxes(0, 1), S)
+    state, hs = _chunked_scan(step, state, (wx.swapaxes(0, 1), ok), S)
     y = hs.swapaxes(0, 1).astype(dt)
     return jnp.einsum("bsd,de->bse", y, p["down"].astype(dt)), state

@@ -108,7 +108,7 @@ def page_gauges(engine) -> dict:
     counts, deferred/preempted admissions, current occupancy, and the
     prefix-sharing dedup state (physical pages mapped by several streams,
     pages saved right now, logical mappings, cumulative prefix hits)."""
-    return {
+    out = {
         "paged": bool(getattr(engine, "paged", False)),
         "free_pages": engine.free_page_count(),
         "used_pages": engine.used_page_count(),
@@ -132,6 +132,12 @@ def page_gauges(engine) -> dict:
             getattr(engine, "spill", None), "bytes_in_use", 0),
         "spill_entries": len(getattr(engine, "spill", None) or ()),
     }
+    sp = getattr(engine, "state_pool", None)
+    if sp is not None:
+        # hybrid / enc-dec stacks: fixed-size state-slot occupancy beside
+        # the page gauges (in use, peak, deferrals on slot pressure)
+        out.update(sp.gauges())
+    return out
 
 
 def failure_counters(requests=(), *, loop=None, engine=None,
@@ -200,6 +206,9 @@ def mixed_stats(requests, page_samples=None, shared_samples=None,
     gen = [r for r in requests if r.max_new_tokens > 0]
     out = {"pooled": latency_stats(pooled),
            "decode": decode_stats(gen, engine=engine)}
+    sp = getattr(engine, "state_pool", None) if engine is not None else None
+    if sp is not None:
+        out["state_slots"] = sp.gauges()
     if failures:
         out["failures"] = failures
     if ttft_split and (ttft_split.get("hit") or ttft_split.get("miss")):

@@ -1,0 +1,352 @@
+"""Serving beyond attention-only stacks through the unified cache-manager
+plane: per-sublayer cache plans (paged attention KV vs fixed-size pooled
+recurrent / cross-attention state), the state-slot lifecycle + admission
+gate, clean capability demotion (speculation, prefix sharing, spill) on
+hybrid / recurrent / enc-dec stacks, var-len bucketed prefill parity for
+hybrids, zero steady-state recompiles across hybrid churn, snapshot/restore
+of the dense-state side, ServeLoop end-to-end on a hybrid FM, and the
+whisper encoder-decoder decode path through the engine."""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ATTN, MAMBA, MLSTM, SLSTM, ModelConfig
+from repro.core.cache_manager import CachePlan
+from repro.core.decode_engine import DecodeEngine
+from repro.core.physical import PhysicalFM
+from repro.models import lm
+from repro.serving.metrics import mixed_stats, page_gauges
+
+# one sublayer of every cache kind: paged attention KV beside mamba
+# conv+ssm state and both xLSTM state flavors — the stack the refactor
+# exists for
+HYB = ModelConfig(name="hyb-serve", family="hybrid", num_layers=4,
+                  d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+                  d_ff=128, vocab_size=128,
+                  block_pattern=(MAMBA, ATTN, MLSTM, SLSTM))
+
+
+@pytest.fixture(scope="module")
+def hyb_fm():
+    fm = PhysicalFM(HYB, seed=0, input_len=16, lora_rank=4)
+    fm.adapters.new("lora0", seed=0)
+    return fm
+
+
+def _engine(fm, **kw):
+    """Engine constructor with capability-demotion warnings silenced —
+    the demotions themselves are asserted by the tests that target them."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        return DecodeEngine(fm, **kw)
+
+
+def _greedy_reference(fm, prompt, steps, s_max, enc_feats=None, enc_len=None):
+    """Teacher-forced oracle: exact-length (unpadded) prefill + greedy decode
+    on a dense int8 cache — what the bucketed paged engine must match
+    token-for-token on ANY stack."""
+    cfg = fm.cfg
+    ai = jnp.full((1,), fm.adapters.capacity(), jnp.int32)
+    cache = lm.init_cache(cfg, 1, s_max, kv_quant=True, enc_len=enc_len)
+    enc = jnp.asarray(np.asarray(enc_feats, np.float32)[None]) \
+        if enc_feats is not None else None
+    lg, cache = lm.prefill(fm.params, cfg, tokens=jnp.asarray(prompt[None]),
+                           cache=cache, lora=fm.adapters.stacked(),
+                           adapter_idx=ai, lora_impl="gather",
+                           enc_embeds=enc)
+    toks = [int(jnp.argmax(lg, -1)[0])]
+    for _ in range(steps - 1):
+        lg, cache = lm.decode_step(
+            fm.params, cfg, tokens=jnp.asarray([toks[-1]], jnp.int32),
+            cache=cache, lora=fm.adapters.stacked(), adapter_idx=ai,
+            lora_impl="gather")
+        toks.append(int(jnp.argmax(lg, -1)[0]))
+    return toks
+
+
+# ---------------- the cache plan ----------------
+
+def test_cache_plan_classifies_sublayers_and_capabilities():
+    plan = CachePlan.for_config(HYB, paged=True)
+    assert [s.kind for s in plan.sublayers] == [MAMBA, ATTN, MLSTM, SLSTM]
+    assert [s.paged for s in plan.sublayers] == [False, True, False, False]
+    assert [s.fixed_state for s in plan.sublayers] == [True, False, True, True]
+    assert plan.paged and plan.has_attention and plan.has_recurrent
+    assert plan.needs_state_slots
+    # every attention-only serving plane demotes on the hybrid
+    assert not plan.prefix_sharing_ok and not plan.chunked_prefill_ok
+    assert not plan.speculative_ok and not plan.spill_resume_ok
+
+    attn = CachePlan.for_config(reduced(get_config("stablelm-1.6b")), True)
+    assert attn.prefix_sharing_ok and attn.speculative_ok \
+        and attn.spill_resume_ok and not attn.needs_state_slots
+
+    # a pure recurrent stack has nothing to page: the arena demotes away
+    rec = CachePlan.for_config(reduced(get_config("xlstm-125m")), paged=True)
+    assert not rec.paged and not rec.has_attention and rec.needs_state_slots
+
+    enc = CachePlan.for_config(reduced(get_config("whisper-base")), True)
+    assert enc.has_encoder and enc.needs_state_slots \
+        and not enc.speculative_ok and not enc.prefix_sharing_ok
+
+
+# ---------------- hybrid var-len parity through the paged engine ----------------
+
+def test_hybrid_paged_varlen_admission_matches_reference(hyb_fm):
+    """A hybrid stack joins the same bucketed right-padded admission path as
+    attention-only stacks: pads are invisible to the attention KV, the
+    recurrent scans (length-aware dt/gate masking), and the rope positions —
+    greedy tokens match the exact-length dense reference bit-for-bit."""
+    eng = _engine(hyb_fm, num_slots=2, prompt_len=16, max_new=8, chunk=2,
+                  paged=True, page_size=8)
+    assert eng.plan.has_recurrent and eng.state_pool is not None
+    rng = np.random.RandomState(7)
+    for plen in (3, 9, 16):                      # buckets 4, 16, 16
+        p = rng.randint(0, HYB.vocab_size, plen).astype(np.int32)
+        eng.join("t", p, max_new_tokens=6, rid=0)
+        (d,) = eng.drain()
+        assert d.tokens == _greedy_reference(hyb_fm, p, 6, eng.s_max)
+    assert eng.state_pool.slots_in_use() == set()
+
+
+def test_hybrid_churn_zero_recompiles(hyb_fm):
+    """Join/leave churn over variable prompt lengths and budgets on the
+    hybrid paged engine adds ZERO executables once each bucket is warm —
+    the true length stays a traced operand for the recurrent scans too."""
+    eng = _engine(hyb_fm, num_slots=4, prompt_len=16, max_new=6, chunk=2,
+                  paged=True, page_size=8, prompt_buckets=(4, 16))
+    rng = np.random.RandomState(3)
+    for plen in (4, 16):                         # warm each bucket once
+        eng.join("w", rng.randint(0, HYB.vocab_size, plen),
+                 adapter_id="lora0", max_new_tokens=2, rid=-1)
+    eng.drain()
+    compiles = eng.compile_count()
+    done = []
+    for i, plen in enumerate((1, 3, 7, 9, 13, 16, 2, 11)):
+        eng.join(f"t{i}", rng.randint(0, HYB.vocab_size, plen),
+                 adapter_id="lora0" if i % 2 else None,
+                 max_new_tokens=2 + i % 3, rid=i)
+        if not eng.free_slots():
+            done += eng.step_chunk()
+    done += eng.drain()
+    assert len(done) == 8
+    assert eng.compile_count() == compiles
+    assert eng.state_pool.slots_in_use() == set()
+    assert eng.state_pool.peak_in_use >= 2
+
+
+def test_moe_routing_excludes_pad_tokens():
+    """Var-len MoE prefill: pad positions are excluded from expert routing —
+    they claim no capacity (a pad must never displace a real token from its
+    expert) and contribute zero output, so a real token's result is
+    bit-invariant to the pad CONTENT of its admission bucket. This is what
+    lets MoE hybrids (jamba) join the bucketed prefill path."""
+    import jax
+
+    from repro.models.common import init_params
+    from repro.models.moe import moe_ffn, moe_spec
+
+    cfg = reduced(get_config("jamba-v0.1-52b"))
+    p = init_params(jax.random.PRNGKey(0), moe_spec(cfg))
+    B, S, d = 2, 16, cfg.d_model
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d), jnp.float32)
+    valid = jnp.arange(S)[None] < jnp.asarray([11, 16])[:, None]
+    for disp in ("gshard", "scatter"):
+        o1, _ = moe_ffn(p, x, k=2, dispatch=disp, valid=valid)
+        xg = jnp.where(valid[..., None], x, 123.0)   # garbage pads
+        o2, _ = moe_ffn(p, xg, k=2, dispatch=disp, valid=valid)
+        assert np.array_equal(np.asarray(o1)[0, :11], np.asarray(o2)[0, :11])
+        assert np.array_equal(np.asarray(o1)[1], np.asarray(o2)[1])
+        assert np.array_equal(np.asarray(o1)[0, 11:],
+                              np.zeros((S - 11, d), np.float32))
+        o3, _ = moe_ffn(p, x, k=2, dispatch=disp)    # valid=None unchanged
+        o4, _ = moe_ffn(p, x, k=2, dispatch=disp,
+                        valid=jnp.ones((B, S), bool))
+        np.testing.assert_allclose(np.asarray(o3), np.asarray(o4), atol=1e-6)
+
+
+# ---------------- capability demotion ----------------
+
+def test_hybrid_demotes_speculation_and_prefix_sharing(hyb_fm):
+    """spec_k > 0 on a hybrid warns and demotes to plain decode (recurrent
+    state cannot rewind past rejected drafts); prefix sharing demotes
+    silently (shared pages capture attention KV only). The engine still
+    serves — demotion, not a crash."""
+    with pytest.warns(RuntimeWarning, match="demoted to plain decode"):
+        eng = DecodeEngine(hyb_fm, num_slots=2, prompt_len=16, max_new=4,
+                           chunk=2, paged=True, page_size=8, spec_k=2)
+    assert eng.spec_k == 0
+    assert eng.prefix_sharing is False and eng.chunked_prefill is False
+    p = np.arange(8, dtype=np.int32) % HYB.vocab_size
+    eng.join("t", p, max_new_tokens=4, rid=0)
+    (d,) = eng.drain()
+    assert d.tokens == _greedy_reference(hyb_fm, p, 4, eng.s_max)
+    # unpaged + spec_k on a hybrid: the demotion fires BEFORE the
+    # paged-required check, so construction succeeds instead of raising
+    with pytest.warns(RuntimeWarning, match="demoted to plain decode"):
+        eng2 = DecodeEngine(hyb_fm, num_slots=2, prompt_len=16, max_new=4,
+                            chunk=2, paged=False, spec_k=2)
+    assert eng2.spec_k == 0 and not eng2.paged
+
+
+def test_hybrid_demotes_spill_tier(hyb_fm):
+    """A spill arena on a stack with per-slot dense state warns and demotes
+    to None: the stream spill captures pages + trackers only, so preemption
+    must take the lossless fold-and-re-prefill path."""
+    with pytest.warns(RuntimeWarning, match="spill tier demoted"):
+        eng = DecodeEngine(hyb_fm, num_slots=2, prompt_len=16, max_new=4,
+                           chunk=2, paged=True, page_size=8,
+                           spill_bytes=32 << 20)
+    assert eng.spill is None
+
+
+def test_pure_recurrent_paged_demotes_to_dense_pool():
+    """paged=True on a stack with no attention sublayers (xLSTM) warns and
+    runs the dense slot pool — the whole serving state is fixed-size state
+    slots, there is nothing to page — and still decodes with exact parity."""
+    cfg = reduced(get_config("xlstm-125m"))
+    fm = PhysicalFM(cfg, seed=0, input_len=8, lora_rank=4)
+    with pytest.warns(RuntimeWarning, match="no attention sublayers"):
+        eng = DecodeEngine(fm, num_slots=2, prompt_len=8, max_new=4, chunk=2,
+                           paged=True, page_size=8)
+    assert not eng.paged and not eng.plan.paged
+    assert eng.state_pool is not None
+    rng = np.random.RandomState(5)
+    p = rng.randint(0, cfg.vocab_size, 6).astype(np.int32)
+    eng.join("t", p, max_new_tokens=4, rid=0)
+    (d,) = eng.drain()
+    assert d.tokens == _greedy_reference(fm, p, 4, eng.s_max)
+    assert eng.state_pool.slots_in_use() == set()
+
+
+# ---------------- state-slot lifecycle, admission gate, gauges ----------------
+
+def test_state_slot_admission_gate_and_gauges(hyb_fm):
+    """Hybrid admission counts fixed state slots alongside pages: with the
+    state pool exhausted ``can_admit`` defers (and the deferral gauge
+    ticks) even while decode slots are free; page_gauges / mixed_stats
+    surface the state-slot occupancy."""
+    eng = _engine(hyb_fm, num_slots=2, prompt_len=16, max_new=4, chunk=2,
+                  paged=True, page_size=8)
+    sp = eng.state_pool
+    p = np.arange(8, dtype=np.int32) % HYB.vocab_size
+    eng.join("a", p, max_new_tokens=4, rid=0)
+    assert sp.slots_in_use() == {0} and sp.in_use_count() == 1
+    assert eng.can_admit(prompt_tokens=8)
+    # exhaust the state pool out-of-band: decode slot 1 stays free, so the
+    # deferral is attributable to state-slot pressure alone
+    sp.alloc(1)
+    assert eng.free_slots()
+    before = sp.slot_deferrals
+    assert not eng.can_admit(prompt_tokens=8)
+    assert sp.slot_deferrals == before + 1
+    sp.free(1)
+    assert eng.can_admit(prompt_tokens=8)
+    g = page_gauges(eng)
+    assert g["state_slots_total"] == eng.num_slots
+    assert g["state_slots_in_use"] == 1 and g["state_slots_peak"] >= 1
+    assert g["state_slot_deferrals"] == before + 1
+    eng.drain()
+    assert sp.slots_in_use() == set()
+    stats = mixed_stats([], engine=eng)
+    assert stats["state_slots"]["state_slots_in_use"] == 0
+    assert stats["state_slots"]["state_slot_deferrals"] == before + 1
+
+
+def test_hybrid_snapshot_restore_resumes_dense_state(hyb_fm):
+    """Snapshot mid-flight captures the fixed-size per-slot state beside the
+    used pages; a restore into a fresh arena (the old one scrambled — a
+    simulated device reset) resumes every stream with EXACT token parity,
+    and the restored state pool re-marks live slots."""
+    eng = _engine(hyb_fm, num_slots=2, prompt_len=16, max_new=8, chunk=2,
+                  paged=True, page_size=8)
+    rng = np.random.RandomState(11)
+    ps = [rng.randint(0, HYB.vocab_size, n).astype(np.int32) for n in (7, 12)]
+    want = [_greedy_reference(hyb_fm, p, 8, eng.s_max) for p in ps]
+    for i, p in enumerate(ps):
+        eng.join(f"t{i}", p, max_new_tokens=8, rid=i)
+    eng.step_chunk()                             # mid-flight: 2 tokens in
+    snap = eng.snapshot()
+    payload = snap.to_host_payload()             # dense state serializes too
+    snap2 = type(snap).from_host_payload(*payload)
+    old = eng
+    for sub in old.pool:                         # scramble the dead arena
+        if isinstance(sub, dict) and "page_table" in sub:
+            sub["k"] = jnp.full_like(sub["k"], 77)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        eng = DecodeEngine.restore(hyb_fm, snap2, reuse_jits_from=old)
+    assert eng.state_pool.slots_in_use() == {0, 1}
+    done = sorted(eng.drain(), key=lambda s: s.rid)
+    assert [d.tokens for d in done] == want
+
+
+# ---------------- ServeLoop end-to-end on a hybrid FM ----------------
+
+def test_serve_loop_hybrid_end_to_end(hyb_fm):
+    """A hybrid FM serves through the full event loop — warmup, mixed-length
+    generative churn, zero steady-state recompiles — with the state pool
+    drained at the end. The enc-dec / hybrid gates are gone: the loop admits
+    through the same engine path as attention-only stacks."""
+    from repro.core.request import Request
+    from repro.core.server import FMplexServer
+    from repro.core.vfm import TaskExtensions
+
+    hyb_fm.calibrate(sizes=(1, 2, 4))
+    srv = FMplexServer("s-hyb")
+    srv.deploy_fm("fm0", hyb_fm, scheduler="bfq")
+    srv.bind_task("gen", "fm0", weight=1.0,
+                  extensions=TaskExtensions(adapter_id="lora0"))
+    loop = srv.serve_loop("fm0", engine_kwargs=dict(
+        num_slots=2, prompt_len=16, max_new=8, chunk=2,
+        paged=True, page_size=8))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        loop.warmup(gen_task="gen")
+    eng = srv.engines["fm0"]
+    assert eng.state_pool is not None
+    compiles = eng.compile_count()
+    rng = np.random.RandomState(2)
+    trace = [Request("gen", 0.0,
+                     payload=rng.randint(0, HYB.vocab_size,
+                                         3 + 3 * i).astype("int32"),
+                     tokens=float(16 + 4), max_new_tokens=3 + i)
+             for i in range(4)]
+    loop.run(list(trace), max_wall=120)
+    assert all(len(r.result) == r.max_new_tokens for r in trace)
+    assert eng.compile_count() == compiles       # zero steady-state recompiles
+    assert eng.state_pool.slots_in_use() == set()
+
+
+# ---------------- whisper encoder-decoder through the engine ----------------
+
+def test_whisper_enc_dec_decodes_through_engine():
+    """The enc-dec assert is gone: whisper joins carry per-stream encoder
+    frames, the engine writes them into the per-slot cross K/V state at
+    admission, and greedy decode matches the dense reference with explicit
+    ``enc_embeds`` exactly. A join with the wrong frame count is rejected
+    (the encoder is bidirectional — frame count is shape-strict), and a
+    frameless join falls back to zero frames (the warmup path)."""
+    cfg = reduced(get_config("whisper-base"))
+    fm = PhysicalFM(cfg, seed=0, input_len=8, lora_rank=4)
+    eng = _engine(fm, num_slots=2, prompt_len=8, max_new=6, chunk=2,
+                  paged=True, page_size=8)
+    assert eng.enc_len == 8 and eng.state_pool is not None
+    assert not eng.prefix_sharing and eng.spec_k == 0
+    rng = np.random.RandomState(1)
+    feats = rng.randn(eng.enc_len, cfg.d_model).astype(np.float32) * 0.1
+    p = rng.randint(0, cfg.vocab_size, 5).astype(np.int32)
+    eng.join("t", p, max_new_tokens=5, rid=0, enc_feats=feats)
+    (d,) = eng.drain()
+    assert d.tokens == _greedy_reference(fm, p, 5, eng.s_max,
+                                         enc_feats=feats,
+                                         enc_len=eng.enc_len)
+    with pytest.raises(AssertionError):          # wrong frame count: strict
+        eng.join("t", p, max_new_tokens=2, rid=1, enc_feats=feats[:-1])
+    eng.join("t", p, max_new_tokens=3, rid=2)    # frameless: zero-frame default
+    (d2,) = eng.drain()
+    assert len(d2.tokens) == 3
+    assert eng.state_pool.slots_in_use() == set()

@@ -304,3 +304,119 @@ def test_paged_refcounts_never_leak_or_double_free(ops, spec):
     assert not eng._prefix_registry and not eng._page_key
     rejected += eng.take_rejected()
     assert all(p.status != "ok" for p in rejected)
+
+
+# ---------------- hybrid state-slot pool (cache-manager plane) ----------------
+
+_HYB_FM = []            # built once, lazily (a PhysicalFM is expensive)
+
+
+def _hybrid_fm():
+    if not _HYB_FM:
+        from repro.configs.base import ATTN, MAMBA, MLSTM, SLSTM, ModelConfig
+        from repro.core.physical import PhysicalFM
+        cfg = ModelConfig(name="hyb-prop", family="hybrid", num_layers=4,
+                          d_model=64, num_heads=4, num_kv_heads=4,
+                          head_dim=16, d_ff=128, vocab_size=128,
+                          block_pattern=(MAMBA, ATTN, MLSTM, SLSTM))
+        fm = PhysicalFM(cfg, seed=0, input_len=16, lora_rank=4,
+                        lora_impl="segmented", seg_block_t=8)
+        fm.adapters.new("lora0", seed=0)
+        _HYB_FM.append(fm)
+    return _HYB_FM[0]
+
+
+def _check_state_slot_invariants(eng):
+    """The fixed-size state-slot contract on a hybrid pool: a state slot is
+    allocated exactly when its decode slot holds a live stream (done-but-
+    unretired included — the dense state is freed at retirement, with the
+    pages), alloc/free counters balance against occupancy, and occupancy
+    never exceeds the pool."""
+    sp = eng.state_pool
+    assert sp is not None
+    live = {i for i, s in enumerate(eng.slots) if s is not None}
+    assert sp.slots_in_use() == live, \
+        f"state slots {sp.slots_in_use()} != live decode slots {live}"
+    assert sp.allocs - sp.frees == sp.in_use_count()
+    assert sp.in_use_count() <= sp.num_slots
+    assert sp.peak_in_use <= sp.num_slots
+
+
+@settings(max_examples=6, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(0, 7), st.integers(0, 7)),
+                    min_size=4, max_size=16))
+def test_hybrid_state_slots_never_leak_or_double_alloc(ops):
+    """The paged-churn property on a HYBRID stack (mamba + attention +
+    xLSTM): randomized join/decode/preempt/retire/cancel/deadline/restore
+    sequences keep the state-slot pool 1:1 with live streams on every exit
+    path, the page invariants hold for the attention sublayer's arena, and
+    a final drain leaves both pools fully free. The spill-corruption op is
+    absent by construction — the spill tier demotes on hybrid stacks (its
+    capture has no dense-state side), which the engine enforces."""
+    import time
+
+    import jax.numpy as jnp
+
+    from repro.core.decode_engine import DecodeEngine
+    fm = _hybrid_fm()
+    cfg = fm.cfg
+    eng = DecodeEngine(fm, num_slots=4, prompt_len=16, max_new=6, chunk=2,
+                       paged=True, page_size=4, total_pages=25,
+                       prompt_buckets=(4, 16))
+    assert eng.spill is None and not eng.prefix_sharing     # demoted planes
+    rng = np.random.RandomState(0)
+    rid = 0
+    rejected = []
+    for op, a in ops:
+        live = [i for i, s in enumerate(eng.slots) if s is not None]
+        if op == 0:                                  # join, variable length
+            p = np.random.RandomState(a).randint(
+                0, cfg.vocab_size, 1 + a * 2).astype(np.int32)
+            eng.join(f"t{rid}", p, adapter_id="lora0" if a % 2 else None,
+                     max_new_tokens=1 + a % 6, rid=rid)
+            rid += 1
+        elif op == 1:
+            eng.step_chunk()
+        elif op == 2 and live:                       # preempt: fold +
+            eng._preempt(live[a % len(live)])        # re-prefill recomputes
+        elif op == 3 and live:                       # retire a stream
+            eng.leave(live[a % len(live)])
+        elif op == 4:                                # client cancel by rid
+            rids = [s.rid for s in eng.slots if s is not None] \
+                + eng.pending_rids()
+            if rids:
+                assert eng.cancel(rids[a % len(rids)]) is not None
+        elif op == 5 and live:                       # deadline expiry
+            eng.slots[live[a % len(live)]].deadline = 0.0
+            eng._expire_deadlines(time.perf_counter())
+        elif op == 6:                                # device reset mid-churn
+            snap = eng.snapshot()
+            old, eng = eng, None
+            for sub in old.pool:                     # scramble dead arena
+                if isinstance(sub, dict) and "page_table" in sub:
+                    sub["k"] = jnp.full_like(sub["k"], 77)
+                    sub["k_scale"] = jnp.zeros_like(sub["k_scale"])
+            eng = DecodeEngine.restore(fm, snap, reuse_jits_from=old)
+        elif op == 7:                                # mass retire, late join
+            for s in live:
+                eng.leave(s)
+            p = np.random.RandomState(99 + a).randint(
+                0, cfg.vocab_size, 1 + a % 9).astype(np.int32)
+            eng.join(f"late{rid}", p, adapter_id="lora0",
+                     max_new_tokens=1 + a % 4, rid=rid)
+            rid += 1
+        rejected += eng.take_rejected()
+        _check_page_invariants(eng)
+        _check_state_slot_invariants(eng)
+    for _ in range(200):
+        if not (eng.active_count() or eng.pending_count()):
+            break
+        eng.step_chunk()
+        _check_page_invariants(eng)
+        _check_state_slot_invariants(eng)
+    assert not (eng.active_count() or eng.pending_count())
+    assert eng.free_page_count() == eng.total_pages - 1
+    assert eng.state_pool.in_use_count() == 0
+    assert eng.state_pool.allocs == eng.state_pool.frees
+    rejected += eng.take_rejected()
+    assert all(p.status != "ok" for p in rejected)
